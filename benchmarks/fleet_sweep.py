@@ -1,0 +1,88 @@
+"""Reproduce the §Perf fleet-optimisation sweep (EXPERIMENTS.md).
+
+Runs the winning lever for every misfit combo of the baseline dry-run and
+appends records to results/fleet.jsonl.  Each entry is one
+``repro.launch.perf`` invocation (subprocess: the dry-run needs its own
+XLA_FLAGS before jax init).
+
+Usage: PYTHONPATH=src python benchmarks/fleet_sweep.py [--only ARCH]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# (arch, shape, extra perf args, label) — levers per EXPERIMENTS §Perf.
+SWEEP = [
+    # decode → cache-in-carry (default) + tp_cacheseq when KV under-fills TP
+    ("gemma-7b", "decode_32k", [], "carrycache"),
+    ("gemma2-2b", "decode_32k", ["--rules", "tp_cacheseq"], "cacheseq"),
+    ("gemma3-12b", "decode_32k", ["--rules", "tp_cacheseq"], "cacheseq"),
+    ("qwen3-1.7b", "decode_32k", ["--rules", "tp_cacheseq"], "cacheseq"),
+    ("phi3.5-moe-42b-a6.6b", "decode_32k", ["--rules", "tp_cacheseq"],
+     "cacheseq"),
+    ("llava-next-34b", "decode_32k",
+     ["--pad-heads", "64", "--rules", "tp_cacheseq"], "pad64+cacheseq"),
+    ("grok-1-314b", "decode_32k", ["--rules", "tp_cacheseq"], "cacheseq"),
+    # prefill → flash attention (+ per-arch extras)
+    ("gemma-7b", "prefill_32k", ["--flash", "8192"], "flash"),
+    ("gemma2-2b", "prefill_32k", ["--flash", "8192"], "flash"),
+    ("gemma3-12b", "prefill_32k", ["--flash", "8192"], "flash"),
+    ("qwen3-1.7b", "prefill_32k", ["--flash", "8192"], "flash"),
+    ("zamba2-2.7b", "prefill_32k", ["--flash", "8192"], "flash"),
+    ("phi3.5-moe-42b-a6.6b", "prefill_32k", ["--flash", "8192"], "flash"),
+    ("grok-1-314b", "prefill_32k", ["--flash", "8192"], "flash"),
+    ("seamless-m4t-medium", "prefill_32k",
+     ["--flash", "8192", "--pad-vocab", "256256"], "flash+padvocab"),
+    ("llava-next-34b", "prefill_32k",
+     ["--flash", "8192", "--pad-heads", "64", "--batch", "8"],
+     "flash+pad64+wave8"),
+    # train → microbatch depth; FSDP only when args (params+opt) dominate
+    ("gemma-7b", "train_4k", ["--microbatch", "8"], "mb8"),
+    ("gemma2-2b", "train_4k", ["--microbatch", "16"], "mb16"),
+    ("gemma3-12b", "train_4k", ["--rules", "tp_fsdp", "--microbatch", "8"],
+     "fsdp+mb8"),
+    ("phi3.5-moe-42b-a6.6b", "train_4k",
+     ["--rules", "tp_fsdp", "--microbatch", "8"], "fsdp+mb8"),
+    ("llava-next-34b", "train_4k",
+     ["--rules", "tp_fsdp", "--microbatch", "8", "--pad-heads", "64"],
+     "fsdp+mb8+pad64"),
+    ("grok-1-314b", "train_4k", ["--rules", "tp_fsdp", "--microbatch", "8"],
+     "fsdp+mb8"),
+    ("qwen3-1.7b", "train_4k", ["--flash", "4096"], "flash"),
+    ("seamless-m4t-medium", "train_4k",
+     ["--pad-vocab", "256256", "--flash", "4096"], "flash+padvocab"),
+    # long_500k residuals
+    ("llava-next-34b", "long_500k",
+     ["--pad-heads", "64", "--rules", "tp_cacheseq"], "pad64+cacheseq"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default="results/fleet.jsonl")
+    args = ap.parse_args()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    failures = []
+    for arch, shape, extra, label in SWEEP:
+        if args.only and args.only != arch:
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.perf", "--arch", arch,
+               "--shape", shape, "--label", f"fleet:{label}",
+               "--json", args.json, *extra]
+        print(">>", " ".join(cmd), flush=True)
+        p = subprocess.run(cmd, env=env, cwd=REPO)
+        if p.returncode != 0:
+            failures.append((arch, shape, label))
+    print(f"done; {len(failures)} failures: {failures}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Fallback parser: rebuild dry-run JSONL records from a sweep log.
+
+The dry-run prints every record; this recovers them if the process dies
+before its final JSON flush (the launcher now appends incrementally, but
+logs from older runs remain parseable).
+"""
+from __future__ import annotations
+
+import ast
+import json
+import re
+import sys
+
+HDR = re.compile(r"^== (\S+) × (\S+) × (\S+) \(rules=(\w+)\) ==")
+MEM = re.compile(r"temp_size_in_bytes=(\d+)")
+ARG = re.compile(r"argument_size_in_bytes=(\d+)")
+COST = re.compile(r"flops=([\d.e+-]+) bytes=([\d.e+-]+)")
+COLL = re.compile(r"^collective_bytes: (\{.*\})")
+
+
+def parse(path: str) -> list[dict]:
+    records, cur = [], None
+    for line in open(path):
+        m = HDR.match(line)
+        if m:
+            if cur and "flops" in cur:
+                records.append(cur)
+            cur = {"arch": m.group(1), "shape": m.group(2),
+                   "mesh": m.group(3), "rules": m.group(4)}
+            continue
+        if cur is None:
+            continue
+        if line.startswith("memory_analysis:"):
+            t, a = MEM.search(line), ARG.search(line)
+            cur["memory"] = {"temp_size_in_bytes": int(t.group(1)) if t else 0,
+                             "argument_size_in_bytes":
+                                 int(a.group(1)) if a else 0}
+        elif line.startswith("cost_analysis"):
+            m = COST.search(line)
+            cur["flops"] = float(m.group(1))
+            cur["hlo_bytes"] = float(m.group(2))
+        else:
+            m = COLL.match(line)
+            if m:
+                d = ast.literal_eval(m.group(1))
+                cur["collective_bytes"] = {k: float(v) for k, v in d.items()}
+    if cur and "flops" in cur:
+        records.append(cur)
+    return records
+
+
+if __name__ == "__main__":
+    recs = parse(sys.argv[1])
+    out = sys.argv[2] if len(sys.argv) > 2 else "/dev/stdout"
+    with open(out, "w") as f:
+        for r in recs:
+            f.write(json.dumps(r) + "\n")
+    print(f"parsed {len(recs)} records", file=sys.stderr)

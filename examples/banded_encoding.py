@@ -1,0 +1,63 @@
+"""Banded ridge encoding — feature-space selection (paper ref [13]).
+
+Brain-encoding studies often concatenate several stimulus feature spaces
+(multiple network layers, visual + audio embeddings, ...).  Banded ridge
+gives each space its own λ, letting cross-validation *select* the
+informative space instead of letting a shared λ over-shrink it.
+
+Here: band 1 = 'visual network features' (drives the simulated fMRI),
+band 2 = 'audio envelope features' (irrelevant).  Banded RidgeCV should
+shrink band 2 hard and beat shared-λ ridge on held-out correlation.
+
+Run:  PYTHONPATH=src python examples/banded_encoding.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import banded, ridge, scoring
+from repro.core.banded import BandedConfig
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    n, p_vis, p_aud, t = 800, 48, 48, 128
+
+    X_vis = jax.random.normal(k1, (n, p_vis), jnp.float32)
+    X_aud = jax.random.normal(k2, (n, p_aud), jnp.float32)
+    W = jax.random.normal(k3, (p_vis, t), jnp.float32) / np.sqrt(p_vis)
+    Y = X_vis @ W + 0.7 * jax.random.normal(k4, (n, t))
+    Y = (Y - Y.mean(0)) / (Y.std(0) + 1e-6)
+    X = jnp.concatenate([X_vis, X_aud], axis=1)
+
+    tr, te = scoring.train_test_split_indices(jax.random.PRNGKey(5), n)
+
+    # Shared-λ baseline (the paper's RidgeCV).
+    res_shared = ridge.ridge_cv(X[tr], Y[tr])
+    r_shared = scoring.pearson_r(Y[te], ridge.predict(X[te],
+                                                      res_shared.weights))
+
+    # Banded: one λ per feature space, random-search CV.
+    cfg = BandedConfig(bands=(p_vis, p_aud), n_candidates=32, n_folds=3)
+    res_banded = banded.banded_ridge_cv(jax.random.PRNGKey(6), X[tr], Y[tr],
+                                        cfg)
+    r_banded = scoring.pearson_r(Y[te], ridge.predict(X[te],
+                                                      res_banded.weights))
+
+    lam_vis, lam_aud = [float(v) for v in res_banded.band_lambdas]
+    print(f"shared-λ RidgeCV: λ = {float(res_shared.best_lambda):8.1f}   "
+          f"test r = {float(jnp.mean(r_shared)):.4f}")
+    print(f"banded RidgeCV:   λ_visual = {lam_vis:8.1f}  "
+          f"λ_audio = {lam_aud:8.1f}   test r = {float(jnp.mean(r_banded)):.4f}")
+    print(f"band norms: |W_visual| = "
+          f"{float(jnp.linalg.norm(res_banded.weights[:p_vis])):.2f}, "
+          f"|W_audio| = "
+          f"{float(jnp.linalg.norm(res_banded.weights[p_vis:])):.2f}")
+    assert lam_aud > lam_vis, "irrelevant band must be shrunk harder"
+    assert float(jnp.mean(r_banded)) >= float(jnp.mean(r_shared)) - 0.01
+    print("OK: banded ridge selected the informative feature space.")
+
+
+if __name__ == "__main__":
+    main()

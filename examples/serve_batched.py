@@ -1,0 +1,55 @@
+"""Batched serving example: prefill a batch of prompts, then greedy-decode
+continuations with the ring/full KV caches — the `serve_step` exercised by
+the decode_32k / long_500k dry-run shapes, at CPU scale.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py [--arch gemma2-2b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.data.synthetic import make_batch
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = configs.smoke(configs.get_config(args.arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"serving {cfg.name}: pattern={cfg.pattern}, window={cfg.window}")
+
+    batch = make_batch(jax.random.PRNGKey(1), cfg, args.batch,
+                       args.prompt_len, kind="prefill")
+    logits, cache = jax.jit(model.prefill)(params, batch)
+    print(f"prefill ok: logits {logits.shape}")
+
+    decode = jax.jit(model.decode_step)
+    tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    start = args.prompt_len if cfg.family != "audio" else 1
+    t0, n = time.time(), 0
+    seqs = [tok]
+    for i in range(args.gen - 1):
+        logits, cache = decode(params, cache, tok, jnp.int32(start + i))
+        tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        seqs.append(tok)
+        n += args.batch
+    dt = time.time() - t0
+    out = jnp.concatenate(seqs, axis=1)
+    print(f"decoded {out.shape[1]} tokens/req × {args.batch} reqs "
+          f"→ {n/max(dt,1e-9):.1f} tok/s on CPU")
+    for b in range(min(2, args.batch)):
+        print(f"  req{b}: {out[b, :10].tolist()} ...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Minimal, dependency-free pytree checkpointing.
+
+Layout: ``<dir>/step_<n>/`` with one ``.npy`` per leaf (named by the
+flattened key path, '/'-joined) plus ``manifest.json`` recording the tree
+structure and dtypes.  Atomic via write-to-tmp + rename.  bfloat16 leaves
+are stored as uint16 views with the true dtype in the manifest (npy has no
+native bf16).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, Any]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = leaf
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save(ckpt_dir: str, step: int, tree: Any) -> str:
+    flat = _flatten(tree)
+    treedef = jax.tree_util.tree_structure(tree)
+    target = os.path.join(ckpt_dir, f"step_{step}")
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    manifest = {"treedef": str(treedef), "leaves": {}}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        dtype_name = str(arr.dtype)
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+            dtype_name = "bfloat16"
+        fname = key.replace("/", "__") + ".npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"][key] = {"file": fname, "dtype": dtype_name}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(target):
+        shutil.rmtree(target)
+    os.rename(tmp, target)
+    return target
+
+
+def restore(ckpt_dir: str, step: int, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    src = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(src, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_like = _flatten(like)
+    restored = {}
+    for key, ref in flat_like.items():
+        meta = manifest["leaves"][key]
+        arr = np.load(os.path.join(src, meta["file"]))
+        if meta["dtype"] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        want_shape = tuple(ref.shape)
+        assert tuple(arr.shape) == want_shape, (key, arr.shape, want_shape)
+        restored[key] = jnp.asarray(arr)
+    # Rebuild in like's structure.
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = [restored["/".join(_path_str(p) for p in path)]
+              for path, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_", 1)[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_")]
+    return max(steps) if steps else None

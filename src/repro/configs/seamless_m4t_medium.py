@@ -1,0 +1,29 @@
+"""seamless-m4t-medium — encoder-decoder, multimodal [arXiv:2308.11596].
+
+Assigned: 12L d_model=1024 16H (GQA kv=16) d_ff=4096 vocab=256206.
+
+Per the carve-out the audio frontend (mel + conformer conv feature
+extractor) is a STUB: ``src_embeds`` arrive as precomputed frame embeddings
+(B, frames, d_model); this config is the text/unit transformer backbone
+(12L encoder + 12L decoder).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="audio",
+    n_layers=12,               # decoder depth
+    n_encoder_layers=12,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab=256_206,
+    pattern=("global_attn",),
+    mlp_act="gelu",
+    tie_embeddings=True,
+    frontend="audio_stub",
+    source="[arXiv:2308.11596] SeamlessM4T medium: 12L enc/dec, d=1024, "
+           "16H, ffn 4096, vocab 256206",
+)

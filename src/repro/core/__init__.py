@@ -1,0 +1,14 @@
+"""Core library: the paper's contribution — scalable multi-target ridge.
+
+Public API:
+  ridge.RidgeCVConfig / ridge.ridge_cv   — mutualised single-shard RidgeCV
+  mor.mor_fit / mor.mor_fit_distributed  — MultiOutput baseline (paper Fig. 8)
+  bmor.bmor_fit                          — Batch Multi-Output ridge (paper Alg. 1)
+  scoring.pearson_r                      — encoding performance metric
+  complexity                             — analytic cost model (paper §3)
+"""
+from repro.core import bmor, complexity, mor, ridge, scoring  # noqa: F401
+from repro.core.bmor import BMORResult, bmor_fit  # noqa: F401
+from repro.core.ridge import (  # noqa: F401
+    PAPER_LAMBDA_GRID, RidgeCVConfig, RidgeCVResult, ridge_cv,
+)

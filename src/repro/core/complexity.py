@@ -1,0 +1,81 @@
+"""Analytic time-complexity model of ridge variants (paper §3).
+
+Floating-point multiplication counts for the three implementations the paper
+compares.  The benchmark harness checks measured scaling against these
+predictions (Eq. 6 and Eq. 7 of the paper) and the roofline analysis uses the
+same terms to locate each configuration on the compute/memory/collective
+rooflines of the production TPU mesh.
+
+Notation (paper Table 3): n time samples, p features, t targets, r candidate
+λ values, c concurrent workers (mesh shards here).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class RidgeWorkload:
+    n: int          # time samples
+    p: int          # features
+    t: int          # brain targets
+    r: int = 11     # λ grid size (paper §2.2.4)
+    n_folds: int = 5
+
+
+def t_m_naive(w: RidgeWorkload) -> float:
+    """T_M without the SVD trick: invert (XᵀX+λI) per λ — O(p³r + p²nr)."""
+    return float(w.p) ** 3 * w.r + float(w.p) ** 2 * w.n * w.r
+
+
+def t_m(w: RidgeWorkload) -> float:
+    """T_M with the factorisation mutualised across λ: O(p²nr + pr).
+
+    (Paper §3.1.  The dominant O(p²n) SVD/eigh+rotation cost is paid once per
+    CV split; the per-λ part is diagonal.)
+    """
+    return float(w.p) ** 2 * w.n * w.r + float(w.p) * w.r
+
+
+def t_w(w: RidgeWorkload) -> float:
+    """T_W: applying M(λ) to the targets across the grid — O(pntr)."""
+    return float(w.p) * w.n * w.t * w.r
+
+
+def t_ridge_single(w: RidgeWorkload) -> float:
+    """Single-worker mutualised RidgeCV: T_M + T_W (paper §3.1)."""
+    return t_m(w) + t_w(w)
+
+
+def t_mor(w: RidgeWorkload, c: int) -> float:
+    """MOR: factorisation recomputed per *target* — Eq. 6: c⁻¹(T_W + t·T_M)."""
+    return (t_w(w) + w.t * t_m(w)) / c
+
+
+def t_bmor(w: RidgeWorkload, c: int) -> float:
+    """B-MOR: one factorisation per *batch* — Eq. 7: c⁻¹·T_W + T_M."""
+    return t_w(w) / c + t_m(w)
+
+
+def predicted_speedup_bmor(w: RidgeWorkload, c: int) -> float:
+    """DSU prediction: single-worker mutualised ridge over B-MOR on c workers."""
+    return t_ridge_single(w) / t_bmor(w, c)
+
+
+def mor_overhead_factor(w: RidgeWorkload, c: int) -> float:
+    """How much slower MOR is than B-MOR at equal parallelism (→ (t-c)/c·T_M)."""
+    return t_mor(w, c) / t_bmor(w, c)
+
+
+# ---------------------------------------------------------------------------
+# Paper workloads (Table 1), for benchmark parameterisation.
+# ---------------------------------------------------------------------------
+PAPER_P = 16384  # 4 TRs × 4096 VGG16 FC2 features (§2.2.2)
+
+PAPER_WORKLOADS = {
+    "parcels":          RidgeWorkload(n=69_202, p=PAPER_P, t=444),
+    "roi":              RidgeWorkload(n=69_202, p=PAPER_P, t=6_728),
+    "whole_brain":      RidgeWorkload(n=69_202, p=PAPER_P, t=264_805),
+    "whole_brain_mor":  RidgeWorkload(n=1_000,  p=PAPER_P, t=2_000),
+    "whole_brain_bmor": RidgeWorkload(n=10_000, p=PAPER_P, t=264_805),
+}

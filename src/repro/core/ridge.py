@@ -1,0 +1,232 @@
+"""SVD/eigh-mutualised multi-target RidgeCV (paper §2.3.1, §3).
+
+This module is the single-shard building block of the paper's pipeline: the
+scikit-learn-style ridge regression whose factorisation is computed *once*
+and reused across all targets and all candidate regularisation strengths.
+
+Two algebraically equivalent factorisation paths are provided:
+
+* ``eigh`` (primal, used when ``n >= p``): eigendecompose the Gram matrix
+  ``G = XᵀX = Q Λ Qᵀ``.  Then ``M(λ) Y = Q (Λ+λI)⁻¹ Qᵀ (XᵀY)``.  The
+  eigenvalues of ``G`` are the squared singular values of ``X``, so the λ
+  sweep is the same diagonal rescale as scikit-learn's SVD path (Eq. 5 of the
+  paper) — but ``G`` and ``XᵀY`` are *sums over rows* of ``X``/``Y``, which is
+  what makes the distributed (B-MOR) version a single ``psum`` (see
+  ``repro.core.bmor``).
+* ``dual`` (kernel, used when ``n < p``): eigendecompose ``K = XXᵀ = P Γ Pᵀ``;
+  dual coefficients ``α(λ) = P (Γ+λI)⁻¹ Pᵀ Y`` and ``W = Xᵀ α``.
+
+Both keep the per-λ work diagonal: ``O(p)`` (or ``O(n)``) scaling per λ, as
+in the paper's complexity analysis ``T_M = O(p² n r + p r)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal, Sequence
+
+import jax
+import jax.numpy as jnp
+
+# The paper's λ grid (§2.2.4).
+PAPER_LAMBDA_GRID: tuple[float, ...] = (
+    0.1, 1.0, 100.0, 200.0, 300.0, 400.0, 600.0, 800.0, 900.0, 1000.0, 1200.0
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class RidgeCVConfig:
+    """Configuration of the multi-target cross-validated ridge solve."""
+
+    lambdas: tuple[float, ...] = PAPER_LAMBDA_GRID
+    n_folds: int = 5
+    method: Literal["auto", "eigh", "dual"] = "auto"
+    # Small diagonal jitter added to the Gram matrix before eigh for numerical
+    # stability in float32 (the paper runs float64 CPU BLAS; see DESIGN §2).
+    jitter: float = 1e-6
+    # Score used to select λ across folds: Pearson correlation ("r") matches
+    # the paper's reported metric; "r2" is the classical ridge CV score.
+    scoring: Literal["r", "r2"] = "r2"
+    # Route the Gram accumulation and the multi-λ solve through the Pallas
+    # TPU kernels (repro.kernels).  Off by default: on CPU the kernels run
+    # in interpret mode (correct but slow); on TPU this is the "better BLAS"
+    # lever of paper §4.3.
+    use_pallas: bool = False
+
+    def resolve_method(self, n: int, p: int) -> str:
+        if self.method != "auto":
+            return self.method
+        return "eigh" if n >= p else "dual"
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RidgeFactors:
+    """Reusable factorisation of the feature matrix.
+
+    ``basis`` is ``Q`` (p×p, primal) or ``P`` (n×n, dual); ``evals`` are the
+    eigenvalues of the corresponding Gram/kernel matrix, i.e. the squared
+    singular values of ``X``.  ``M(λ)`` never needs to be materialised: the λ
+    sweep only rescales coordinates in the eigenbasis.
+    """
+
+    basis: jax.Array        # (p,p) primal | (n,n) dual
+    evals: jax.Array        # (p,) | (n,)
+    primal: bool
+
+    def tree_flatten(self):
+        return (self.basis, self.evals), self.primal
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        basis, evals = children
+        return cls(basis=basis, evals=evals, primal=aux)
+
+
+def gram(X: jax.Array) -> jax.Array:
+    """``XᵀX`` with f32 accumulation (MXU-friendly)."""
+    return jnp.matmul(X.T, X, preferred_element_type=jnp.float32)
+
+
+def factorize(X: jax.Array, cfg: RidgeCVConfig) -> RidgeFactors:
+    """Factorise ``X`` once; reused for every λ and every target (Eq. 4-5)."""
+    n, p = X.shape
+    method = cfg.resolve_method(n, p)
+    if method == "eigh":
+        if cfg.use_pallas:
+            from repro.kernels import ops
+            G = ops.gram(X) + cfg.jitter * jnp.eye(p, dtype=jnp.float32)
+            evals, Q = jnp.linalg.eigh(G)
+            return RidgeFactors(basis=Q, evals=evals, primal=True)
+        G = gram(X) + cfg.jitter * jnp.eye(p, dtype=X.dtype)
+        evals, Q = jnp.linalg.eigh(G)
+        return RidgeFactors(basis=Q, evals=evals, primal=True)
+    K = jnp.matmul(X, X.T, preferred_element_type=jnp.float32)
+    K = K + cfg.jitter * jnp.eye(n, dtype=X.dtype)
+    evals, P = jnp.linalg.eigh(K)
+    return RidgeFactors(basis=P, evals=evals, primal=False)
+
+
+def solve(factors: RidgeFactors, XtY_or_Y: jax.Array, lam: jax.Array,
+          X: jax.Array | None = None) -> jax.Array:
+    """Apply ``M(λ)`` to the targets through the shared factorisation.
+
+    Primal: pass ``XᵀY`` (p×t) → returns ``W = Q (Λ+λ)⁻¹ Qᵀ XᵀY`` (p×t).
+    Dual:   pass ``Y`` (n×t) and ``X`` → ``W = Xᵀ P (Γ+λ)⁻¹ Pᵀ Y``.
+    """
+    B = factors.basis
+    z = jnp.matmul(B.T, XtY_or_Y, preferred_element_type=jnp.float32)
+    z = z / (factors.evals + lam)[:, None]
+    out = jnp.matmul(B, z, preferred_element_type=jnp.float32)
+    if factors.primal:
+        return out
+    assert X is not None, "dual solve needs X to map dual coeffs to weights"
+    return jnp.matmul(X.T, out, preferred_element_type=jnp.float32)
+
+
+def solve_lambda_grid(factors: RidgeFactors, XtY_or_Y: jax.Array,
+                      lambdas: Sequence[float],
+                      X: jax.Array | None = None,
+                      use_pallas: bool = False) -> jax.Array:
+    """All-λ solve, stacked on a leading axis: (r, p, t).
+
+    The rotation into the eigenbasis (``Qᵀ XᵀY``) is shared across the grid —
+    this is exactly the mutualisation of paper Eq. 5, where only the diagonal
+    ``(S²+λI)⁻¹`` depends on λ.
+    """
+    if use_pallas and factors.primal:
+        from repro.kernels import ops
+        a = jnp.matmul(factors.basis.T, XtY_or_Y,
+                       preferred_element_type=jnp.float32)
+        return ops.solve_lambda_grid(factors.basis, factors.evals, a,
+                                     jnp.asarray(lambdas, jnp.float32))
+    B = factors.basis
+    z = jnp.matmul(B.T, XtY_or_Y, preferred_element_type=jnp.float32)
+    lams = jnp.asarray(lambdas, dtype=z.dtype)                    # (r,)
+    zs = z[None, :, :] / (factors.evals[None, :, None] + lams[:, None, None])
+    out = jnp.einsum("ij,rjt->rit", B, zs,
+                     preferred_element_type=jnp.float32)
+    if factors.primal:
+        return out
+    assert X is not None
+    return jnp.einsum("ni,rnt->rit", X, out,
+                      preferred_element_type=jnp.float32)
+
+
+def _fold_bounds(n: int, n_folds: int) -> list[tuple[int, int]]:
+    """Contiguous k-fold boundaries (static, trace-time)."""
+    sizes = [n // n_folds + (1 if i < n % n_folds else 0) for i in range(n_folds)]
+    bounds, start = [], 0
+    for s in sizes:
+        bounds.append((start, start + s))
+        start += s
+    return bounds
+
+
+def _score(Y_true: jax.Array, Y_pred: jax.Array, kind: str) -> jax.Array:
+    """Mean score across targets (higher is better)."""
+    if kind == "r2":
+        ss_res = jnp.sum((Y_true - Y_pred) ** 2, axis=0)
+        ss_tot = jnp.sum((Y_true - jnp.mean(Y_true, axis=0)) ** 2, axis=0) + 1e-12
+        return jnp.mean(1.0 - ss_res / ss_tot)
+    yt = Y_true - jnp.mean(Y_true, axis=0)
+    yp = Y_pred - jnp.mean(Y_pred, axis=0)
+    num = jnp.sum(yt * yp, axis=0)
+    den = jnp.sqrt(jnp.sum(yt ** 2, axis=0) * jnp.sum(yp ** 2, axis=0)) + 1e-12
+    return jnp.mean(num / den)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RidgeCVResult:
+    weights: jax.Array       # (p, t)
+    best_lambda: jax.Array   # scalar
+    best_index: jax.Array    # scalar int
+    cv_scores: jax.Array     # (r,) mean validation score per λ
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def ridge_cv(X: jax.Array, Y: jax.Array, cfg: RidgeCVConfig = RidgeCVConfig()
+             ) -> RidgeCVResult:
+    """Cross-validated multi-target ridge — scikit-learn ``RidgeCV`` analog.
+
+    Faithful to paper Algorithm 1 at batch granularity: for every CV split a
+    fresh factorisation of ``X_train`` is computed (the ``svd(X_train)`` line),
+    then the λ grid is swept diagonally, scores averaged over splits, a single
+    λ selected for *all* targets (§2.2.4: "a single λ is used for all
+    targets"), and the final weights refit on the full training set.
+    """
+    n, p = X.shape
+    bounds = _fold_bounds(n, cfg.n_folds)
+    per_lambda_scores = []
+    for (lo, hi) in bounds:
+        X_val, Y_val = X[lo:hi], Y[lo:hi]
+        X_tr = jnp.concatenate([X[:lo], X[hi:]], axis=0)
+        Y_tr = jnp.concatenate([Y[:lo], Y[hi:]], axis=0)
+        factors = factorize(X_tr, cfg)
+        rhs = gram_xty(X_tr, Y_tr) if factors.primal else Y_tr
+        Ws = solve_lambda_grid(factors, rhs, cfg.lambdas,
+                               X=None if factors.primal else X_tr,
+                               use_pallas=cfg.use_pallas)
+        preds = jnp.einsum("np,rpt->rnt", X_val, Ws,
+                           preferred_element_type=jnp.float32)
+        scores = jax.vmap(lambda Yp: _score(Y_val, Yp, cfg.scoring))(preds)
+        per_lambda_scores.append(scores)
+    cv_scores = jnp.mean(jnp.stack(per_lambda_scores), axis=0)    # (r,)
+    best = jnp.argmax(cv_scores)
+    lams = jnp.asarray(cfg.lambdas, dtype=X.dtype)
+    # Refit on the full data with the selected λ.
+    factors = factorize(X, cfg)
+    rhs = gram_xty(X, Y) if factors.primal else Y
+    W = solve(factors, rhs, lams[best], X=None if factors.primal else X)
+    return RidgeCVResult(weights=W, best_lambda=lams[best], best_index=best,
+                         cv_scores=cv_scores)
+
+
+def gram_xty(X: jax.Array, Y: jax.Array) -> jax.Array:
+    """``XᵀY`` with f32 accumulation."""
+    return jnp.matmul(X.T, Y, preferred_element_type=jnp.float32)
+
+
+def predict(X: jax.Array, W: jax.Array) -> jax.Array:
+    return jnp.matmul(X, W, preferred_element_type=jnp.float32)

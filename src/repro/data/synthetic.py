@@ -1,0 +1,86 @@
+"""Synthetic batch construction for every architecture family and shape.
+
+``batch_spec`` is the single source of truth for what a (family × shape)
+batch looks like; it returns ShapeDtypeStructs (dry-run) and
+``make_batch`` materialises the same spec with random data (smoke tests,
+examples).  Modality frontends are stubs per the assignment: VLM batches
+carry precomputed patch embeddings, audio batches carry precomputed frame
+embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import InputShape, ModelConfig
+
+
+def batch_spec(cfg: ModelConfig, batch: int, seq: int,
+               kind: str = "train") -> dict:
+    """ShapeDtypeStruct tree describing one input batch."""
+    if kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32)}
+    if cfg.family == "vlm":
+        half = seq // 2
+        return {
+            "prefix_embeds": jax.ShapeDtypeStruct((batch, half, cfg.d_model),
+                                                  jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((batch, seq - half), jnp.int32),
+        }
+    if cfg.family == "audio":
+        if kind == "prefill":
+            # Encoder-heavy prefill: the whole sequence is source frames.
+            return {
+                "src_embeds": jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                                   jnp.bfloat16),
+                "tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+            }
+        half = seq // 2
+        return {
+            "src_embeds": jax.ShapeDtypeStruct((batch, half, cfg.d_model),
+                                               jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((batch, seq - half), jnp.int32),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+
+
+def make_batch(key: jax.Array, cfg: ModelConfig, batch: int, seq: int,
+               kind: str = "train") -> dict:
+    """Materialise ``batch_spec`` with random contents."""
+    spec = batch_spec(cfg, batch, seq, kind)
+    out = {}
+    for name, s in spec.items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jax.random.randint(sub, s.shape, 0, cfg.vocab,
+                                           dtype=s.dtype)
+        else:
+            out[name] = jax.random.normal(sub, s.shape, jnp.float32) \
+                .astype(s.dtype)
+    return out
+
+
+class TokenStream:
+    """Deterministic shard-aware synthetic token stream (training driver).
+
+    Mimics a production data pipeline: infinite iterator of fixed-shape
+    batches, seeded per (epoch, step, shard) so every data-parallel shard
+    reads disjoint data and restarts are reproducible from the step index.
+    """
+
+    def __init__(self, cfg: ModelConfig, batch: int, seq: int,
+                 seed: int = 0, shard: int = 0, n_shards: int = 1):
+        self.cfg, self.batch, self.seq = cfg, batch, seq
+        self.seed, self.shard, self.n_shards = seed, shard, n_shards
+
+    def batch_at(self, step: int) -> dict:
+        key = jax.random.PRNGKey(self.seed)
+        key = jax.random.fold_in(key, step * self.n_shards + self.shard)
+        return make_batch(key, self.cfg, self.batch, self.seq, "train")
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

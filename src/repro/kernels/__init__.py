@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the ridge pipeline hot-spots.
+
+The paper's performance story is "pick a better BLAS" (MKL vs OpenBLAS,
+§4.3) plus batching; on TPU the analogous lever is explicit VMEM tiling of
+the three dominant primitives:
+
+  gram.py        — tall-skinny XᵀX / XᵀY with f32 accumulation
+  ridge_solve.py — fused multi-λ eigenbasis solve Q·diag(1/(Λ+λᵣ))·A
+  pearsonr.py    — single-pass streaming Pearson-r scoring
+
+``ops.py`` holds the jit'd public wrappers (auto interpret=True off-TPU);
+``ref.py`` the pure-jnp oracles every kernel is allclose-tested against.
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,165 @@
+"""Pallas TPU flash attention: tiled streaming softmax, never materialising
+the S×T score matrix in HBM.
+
+Motivation (EXPERIMENTS §Roofline): every assigned arch × shape is
+memory-term-dominated, and the dominant HBM traffic at long sequence is the
+attention score tensor.  The pure-jnp blockwise path
+(``models.layers._blockwise_attention``) fixes the *lowering*; this kernel is
+the TPU-native version for the MXU: one (batch·head, q-block) program
+instance streams KV tiles through VMEM with a running max/sum carry in
+scratch.
+
+Tiling (HBM→VMEM), defaults bq=bk=512, head_dim K≤256:
+  q tile 512×256×4B = 512 KiB; k/v tiles 512 KiB each; scores 512×512×4B =
+  1 MiB; acc 512×256×4B = 512 KiB → ~3 MiB working set, double-bufferable
+  in the 16 MiB VMEM of a v5e core.  MXU dims (512×256·256) are 128-aligned.
+
+Supports: causal masking, sliding-window (banded KV loop is expressed by
+masking — the grid still visits all tiles; the banded *skip* lives in the
+jnp path), logit softcap (gemma2/grok), GQA via caller-side KV expansion.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_K = 512
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal: bool, window: int | None, softcap: float | None,
+                  bq: int, bk: int, nk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    i = pl.program_id(1)
+    q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    dist = q_pos - k_pos
+
+    # Tiles entirely outside the causal/window band contribute nothing;
+    # cheap early-out keeps the grid dense but the MXU idle time bounded.
+    live = True
+    if causal:
+        live = jnp.logical_and(live, (i + 1) * bq - 1 >= j * bk)
+    if window is not None:
+        live = jnp.logical_and(live, i * bq < (j + 1) * bk + window)
+
+    @pl.when(live)
+    def _tile():
+        q = q_ref[0].astype(jnp.float32)               # (bq, K)
+        k = k_ref[0].astype(jnp.float32)               # (bk, K)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= dist >= 0
+        if window is not None:
+            mask &= dist < window
+        s = jnp.where(mask, s, NEG)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        v = v_ref[0].astype(jnp.float32)               # (bk, K)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalise():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "softcap",
+                                    "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    softcap: float | None = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False) -> jax.Array:
+    """q: (BH, S, K) pre-scaled; k/v: (BH, T, K) (GQA pre-expanded).
+
+    Returns (BH, S, K) in q's dtype.  S must divide block_q·nq etc. — the
+    wrapper pads.
+    """
+    bh, s, kd = q.shape
+    t = k.shape[1]
+    bq, bk = min(block_q, s), min(block_k, t)
+    s_pad, t_pad = _pad_to(s, bq), _pad_to(t, bk)
+    qp = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, t_pad - t), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, t_pad - t), (0, 0)))
+    # Padded key positions must never win the softmax: causal masking covers
+    # the q-pad; key-pad is masked via window/dist only when causal.  For
+    # non-causal, mask by clamping scores with an explicit validity column
+    # is unnecessary because padded keys are all-zero → score 0, which CAN
+    # perturb the softmax; so for non-causal inputs we require t % bk == 0.
+    if not causal:
+        assert t_pad == t, "non-causal flash requires t % block_k == 0"
+
+    nq, nk = s_pad // bq, t_pad // bk
+    kernel = functools.partial(_flash_kernel, causal=causal, window=window,
+                               softcap=softcap, bq=bq, bk=bk, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, kd), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, kd), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, bk, kd), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, kd), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s_pad, kd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # running max
+            pltpu.VMEM((bq,), jnp.float32),       # running sum
+            pltpu.VMEM((bq, kd), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :s, :]
+
+
+def mha_flash(q: jax.Array, k: jax.Array, v: jax.Array, n_kv: int, *,
+              causal: bool = True, window: int | None = None,
+              softcap: float | None = None, interpret: bool = False,
+              block_q: int = DEFAULT_BLOCK_Q,
+              block_k: int = DEFAULT_BLOCK_K) -> jax.Array:
+    """Model-layout wrapper: q (B,S,H,K), k/v (B,T,N,K) GQA → (B,S,H,K)."""
+    b, s, h, kd = q.shape
+    t = k.shape[1]
+    g = h // n_kv
+    k = jnp.repeat(k, g, axis=2)
+    v = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, kd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, t, kd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, t, kd)
+    out = flash_attention(qf, kf, vf, causal=causal, window=window,
+                          softcap=softcap, interpret=interpret,
+                          block_q=block_q, block_k=block_k)
+    return out.reshape(b, h, s, kd).transpose(0, 2, 1, 3)
+
+
+def _pad_to(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m

@@ -1,0 +1,68 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+On CPU (this container, and any unit-test environment) the kernels run in
+``interpret=True`` mode automatically; on TPU they compile to Mosaic.  Set
+``REPRO_PALLAS_FORCE_INTERPRET=1`` to force interpretation everywhere, or
+``=0`` to force compilation.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import gram as _gram
+from repro.kernels import pearsonr as _pearsonr
+from repro.kernels import ridge_solve as _ridge_solve
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_FORCE_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def gram(x, **kw):
+    """XᵀX, f32 accumulation.  (n, p) → (p, p)."""
+    kw.setdefault("interpret", _interpret())
+    return _gram.gram(x, **kw)
+
+
+def xty(x, y, **kw):
+    """XᵀY, f32 accumulation.  (n, p), (n, q) → (p, q)."""
+    kw.setdefault("interpret", _interpret())
+    return _gram.xty(x, y, **kw)
+
+
+def solve_lambda_grid(q, evals, a, lambdas, **kw):
+    """Fused multi-λ eigenbasis solve.  → (r, p, t)."""
+    kw.setdefault("interpret", _interpret())
+    return _ridge_solve.solve_lambda_grid(q, evals, a, lambdas, **kw)
+
+
+def pearson_r(y_true, y_pred, **kw):
+    """Per-target Pearson correlation.  (n, t) × (n, t) → (t,)."""
+    kw.setdefault("interpret", _interpret())
+    return _pearsonr.pearson_r(y_true, y_pred, **kw)
+
+
+def flash_attention(q, k, v, **kw):
+    """Streaming attention, (BH, S, K) layout.  See kernels.flash_attention."""
+    from repro.kernels import flash_attention as _fa
+    kw.setdefault("interpret", _interpret())
+    return _fa.flash_attention(q, k, v, **kw)
+
+
+def mha_flash(q, k, v, n_kv, **kw):
+    """Model-layout flash attention: q (B,S,H,K), GQA k/v (B,T,N,K)."""
+    from repro.kernels import flash_attention as _fa
+    kw.setdefault("interpret", _interpret())
+    return _fa.mha_flash(q, k, v, n_kv, **kw)
+
+
+def ssd_intra(cb, la, x, **kw):
+    """Fused Mamba2 SSD within-chunk contraction.  See kernels.ssd."""
+    from repro.kernels import ssd as _ssd
+    kw.setdefault("interpret", _interpret())
+    return _ssd.ssd_intra(cb, la, x, **kw)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def xty(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Oracle for kernels.gram.xty."""
+    return jnp.matmul(x.T.astype(jnp.float32), y.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+
+
+def gram(x: jax.Array) -> jax.Array:
+    return xty(x, x)
+
+
+def solve_lambda_grid(q: jax.Array, evals: jax.Array, a: jax.Array,
+                      lambdas: jax.Array) -> jax.Array:
+    """Oracle for kernels.ridge_solve.solve_lambda_grid: (r, p, t)."""
+    q = q.astype(jnp.float32)
+    a = a.astype(jnp.float32)
+    scale = 1.0 / (evals[None, :] + lambdas[:, None])          # (r, p)
+    scaled = a[None, :, :] * scale[:, :, None]                 # (r, p, t)
+    return jnp.einsum("ik,rkt->rit", q, scaled,
+                      preferred_element_type=jnp.float32)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    softcap: float | None = None) -> jax.Array:
+    """Oracle for kernels.flash_attention: dense-materialised attention.
+    q (BH,S,K) pre-scaled; k/v (BH,T,K)."""
+    s = jnp.einsum("hsk,htk->hst", q.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    S, T = q.shape[1], k.shape[1]
+    dist = jnp.arange(S)[:, None] - jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= dist >= 0
+    if window is not None:
+        mask &= dist < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hst,htk->hsk", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def pearson_r(y_true: jax.Array, y_pred: jax.Array) -> jax.Array:
+    """Oracle for kernels.pearsonr.pearson_r: (t,)."""
+    yt = y_true.astype(jnp.float32)
+    yp = y_pred.astype(jnp.float32)
+    yt = yt - jnp.mean(yt, axis=0, keepdims=True)
+    yp = yp - jnp.mean(yp, axis=0, keepdims=True)
+    num = jnp.sum(yt * yp, axis=0)
+    den = jnp.sqrt(jnp.sum(yt ** 2, axis=0) * jnp.sum(yp ** 2, axis=0))
+    return num / jnp.maximum(den, 1e-12)
+
+
+def ssd_intra(cb: jax.Array, la: jax.Array, x: jax.Array) -> jax.Array:
+    """Oracle for kernels.ssd.ssd_intra (dense-materialised)."""
+    cb = cb.astype(jnp.float32)
+    la = la.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    q = cb.shape[1]
+    diff = la[:, :, None, :] - la[:, None, :, :]        # (N,Q,Q,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))[None, :, :, None]
+    decay = jnp.exp(jnp.where(mask, diff, -jnp.inf))
+    prod = decay * cb[:, :, :, None]
+    return jnp.einsum("nqkh,nkhp->nqhp", prod, x,
+                      preferred_element_type=jnp.float32)

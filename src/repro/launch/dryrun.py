@@ -1,0 +1,165 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture × input shape × mesh)
+combination lowers and compiles on the production mesh, with no allocation.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+      --shape train_4k [--multi-pod] [--rules tp] [--json out.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Outputs per combination: compiled memory analysis (bytes/device),
+cost analysis (FLOPs, bytes), and collective-bytes parsed from the HLO —
+the §Roofline inputs.
+"""
+import argparse
+import json
+import sys
+import time
+
+
+def _shrink_depth(cfg, k: int):
+    """Config with k pattern repeats (for the unrolled cost probes)."""
+    import dataclasses
+    kw = {"n_layers": k * len(cfg.pattern)}
+    if cfg.n_encoder_layers:
+        kw["n_encoder_layers"] = k
+    return dataclasses.replace(cfg, **kw)
+
+
+def _compile(bundle, mesh):
+    import jax
+    with mesh:
+        jitted = jax.jit(bundle.fn,
+                         in_shardings=bundle.in_shardings,
+                         out_shardings=bundle.out_shardings,
+                         donate_argnums=bundle.donate_argnums)
+        lowered = jitted.lower(*bundle.abstract_inputs)
+        return lowered.compile()
+
+
+def _costs(compiled) -> dict:
+    from repro.launch import hlo_analysis
+    cost = compiled.cost_analysis()
+    return {
+        "flops": cost.get("flops", 0.0),
+        "hlo_bytes": cost.get("bytes accessed", 0.0),
+        "collective_bytes": hlo_analysis.collective_bytes(compiled.as_text()),
+    }
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            rules: str = "tp", verbose: bool = True,
+            probes: bool = True) -> dict:
+    from repro import configs
+    from repro.launch import hlo_analysis, mesh as mesh_lib
+    from repro.launch.steps import build_step
+    from repro.models.config import INPUT_SHAPES
+
+    cfg = configs.get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+
+    # Main lower+compile: production settings (scan over layers, grad-accum
+    # microbatching).  Proves the combination lowers and fits.
+    t0 = time.time()
+    bundle = build_step(cfg, mesh, shape, rules=rules)
+    compiled = _compile(bundle, mesh)
+    t_main = time.time() - t0
+    mem = compiled.memory_analysis()
+    scan_cost = _costs(compiled)
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "rules": rules,
+        "n_devices": int(mesh.devices.size),
+        "compile_s": round(t_main, 1),
+        "memory": hlo_analysis.memory_dict(mem),
+        # Raw scanned-program counters (scan bodies counted ONCE by XLA —
+        # see models/scanning.py; use the probe-extrapolated numbers below
+        # for the roofline).
+        "scan_counted": scan_cost,
+    }
+
+    if probes:
+        # Two tiny unrolled variants (1 and 2 pattern repeats, microbatch=1)
+        # → per-repeat slope → true totals: f(R) = f1 + (R-1)·(f2-f1).
+        t0 = time.time()
+        probe = {}
+        for k in (1, 2):
+            cfg_k = _shrink_depth(cfg, k)
+            kw = {"microbatch": 1} if shape.kind == "train" else {}
+            b_k = build_step(cfg_k, mesh, shape, rules=rules, unroll=True,
+                             **kw)
+            probe[k] = _costs(_compile(b_k, mesh))
+        R = cfg.n_layers // len(cfg.pattern)
+        rec["probe_s"] = round(time.time() - t0, 1)
+        rec["flops"] = probe[1]["flops"] + (R - 1) * (
+            probe[2]["flops"] - probe[1]["flops"])
+        rec["hlo_bytes"] = probe[1]["hlo_bytes"] + (R - 1) * (
+            probe[2]["hlo_bytes"] - probe[1]["hlo_bytes"])
+        rec["collective_bytes"] = {
+            op: probe[1]["collective_bytes"][op] + (R - 1) * (
+                probe[2]["collective_bytes"][op] -
+                probe[1]["collective_bytes"][op])
+            for op in probe[1]["collective_bytes"]}
+    else:
+        rec["flops"] = scan_cost["flops"]
+        rec["hlo_bytes"] = scan_cost["hlo_bytes"]
+        rec["collective_bytes"] = scan_cost["collective_bytes"]
+
+    if verbose:
+        print(f"== {arch} × {shape_name} × {rec['mesh']} (rules={rules}) ==")
+        print("memory_analysis:", mem)
+        print("cost_analysis (probe-extrapolated): "
+              f"flops={rec['flops']:.3e} bytes={rec['hlo_bytes']:.3e}")
+        print("collective_bytes:",
+              {k: f"{v:.3e}" for k, v in rec["collective_bytes"].items()})
+        sys.stdout.flush()
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--rules", default="tp")
+    ap.add_argument("--no-probes", action="store_true",
+                    help="skip the unrolled cost probes (memory-only run)")
+    ap.add_argument("--json", default=None, help="append JSONL records here")
+    args = ap.parse_args()
+
+    from repro import configs
+    from repro.models.config import INPUT_SHAPES
+
+    if args.all:
+        combos = [(a, s) for a in configs.ARCH_IDS for s in INPUT_SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    records, failures = [], []
+    for arch, shape in combos:
+        try:
+            rec = run_one(arch, shape, multi_pod=args.multi_pod,
+                          rules=args.rules, probes=not args.no_probes)
+            records.append(rec)
+            if args.json:  # append incrementally — crash-safe
+                with open(args.json, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+        except Exception as e:  # noqa: BLE001 — report every combo
+            failures.append((arch, shape, repr(e)))
+            print(f"FAILED {arch} × {shape}: {e!r}", file=sys.stderr)
+    print(f"\n{len(records)} passed, {len(failures)} failed")
+    for a, s, e in failures:
+        print(f"  FAIL {a} × {s}: {e}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

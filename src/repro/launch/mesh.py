@@ -1,0 +1,45 @@
+"""Production mesh construction (TPU v5e pods).
+
+Single pod: 16×16 = 256 chips, axes (data, model).
+Multi-pod:  2×16×16 = 512 chips, axes (pod, data, model) — the "pod" axis is
+the slow inter-pod (DCN-ish) dimension; only data-parallel collectives cross
+it.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run launcher must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 2, data: int | None = None, pod: int = 1):
+    """Small mesh over whatever local devices exist (tests/examples)."""
+    n = jax.device_count()
+    if data is None:
+        data = n // (model * pod)
+    assert pod * data * model == n, (pod, data, model, n)
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                             axis_types=(AxisType.Auto,) * 3)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+# TPU v5e hardware constants for the roofline analysis (per chip).
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW_PER_LINK = 50e9          # bytes/s per link
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes that shard the batch/time dimension."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

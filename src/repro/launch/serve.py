@@ -1,0 +1,56 @@
+"""Serving driver: batched prefill + greedy decode loop.
+
+``python -m repro.launch.serve --arch <id> --smoke --batch 2 --prompt-len 16
+--gen 16``
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from repro import configs
+    from repro.data.synthetic import make_batch
+    from repro.models import build_model
+
+    cfg = configs.get_config(args.arch)
+    if args.smoke:
+        cfg = configs.smoke(cfg)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    batch = make_batch(jax.random.PRNGKey(1), cfg, args.batch,
+                       args.prompt_len, kind="prefill")
+    t0 = time.time()
+    logits, cache = jax.jit(model.prefill)(params, batch)
+    print(f"prefill: {time.time()-t0:.2f}s  logits {logits.shape}")
+
+    decode = jax.jit(model.decode_step)
+    tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    start_pos = args.prompt_len if cfg.family != "audio" else 1
+    out_tokens = [tok]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        logits, cache = decode(params, cache, tok, jnp.int32(start_pos + i))
+        tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        out_tokens.append(tok)
+    dt = time.time() - t0
+    toks = jnp.concatenate(out_tokens, axis=1)
+    print(f"decoded {args.gen} tokens × batch {args.batch} in {dt:.2f}s "
+          f"({args.gen*args.batch/max(dt,1e-9):.1f} tok/s)")
+    print("sample tokens:", toks[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

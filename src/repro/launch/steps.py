@@ -1,0 +1,279 @@
+"""Step functions + shardings for every (architecture × input shape).
+
+``build_step`` returns the jit-able step function, abstract example inputs
+(ShapeDtypeStructs), and the matching in/out shardings for a given mesh —
+consumed identically by the dry-run launcher (``.lower().compile()``) and
+the real training/serving drivers.
+
+Sharding policy (DESIGN §5):
+* train/prefill: batch over ("pod","data"); params per the logical-axis rule
+  table (default "tp": heads/mlp/vocab/experts over "model").
+* decode: batch over data axes when divisible; otherwise (long_500k, B=1)
+  the KV-cache *sequence* dimension is sharded over the data axes instead
+  (distributed flash-decode: XLA inserts the softmax-stat combine).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.data.synthetic import batch_spec
+from repro.models import build_model
+from repro.models.config import InputShape, ModelConfig
+from repro.models.params import RULES, ParamDef, abstract, is_def, specs
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def _mesh_data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _data_size(mesh: Mesh) -> int:
+    return math.prod(mesh.shape[a] for a in _mesh_data_axes(mesh))
+
+
+def rule_table(mesh: Mesh, batch: int, rules: str = "tp") -> dict:
+    """Resolve the logical-axis table for this mesh + batch size."""
+    t = dict(RULES[rules])
+    daxes = _mesh_data_axes(mesh)
+    shardable = batch % _data_size(mesh) == 0
+    t["batch"] = daxes if shardable else None
+    if t.get("cache_seq") is None:          # rule tables may pin it (§Perf)
+        t["cache_seq"] = None if shardable else daxes
+    # FSDP rules reference a bare "data" axis; with a pod axis the weight
+    # shards span both.
+    if t.get("embed") == "data":
+        t["embed"] = daxes
+    return t
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_shardings(mesh: Mesh, spec: dict, batch: int) -> dict:
+    daxes = _mesh_data_axes(mesh)
+    shardable = batch % _data_size(mesh) == 0
+    bspec = daxes if shardable else None
+
+    def one(s: jax.ShapeDtypeStruct):
+        return NamedSharding(mesh, P(bspec, *([None] * (len(s.shape) - 1))))
+
+    return jax.tree_util.tree_map(one, spec)
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything needed to lower/compile/run one step."""
+    fn: Callable                    # jit-able python callable
+    abstract_inputs: tuple          # ShapeDtypeStructs, positional
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
+                     rules: str = "tp",
+                     opt: AdamWConfig = AdamWConfig(),
+                     remat: bool = True,
+                     microbatch: int = 1,
+                     microbatch_unroll: bool = False,
+                     unroll: bool = False) -> StepBundle:
+    model = build_model(cfg)
+    model.unroll = unroll
+    defs = model.param_defs()
+    table = rule_table(mesh, shape.global_batch, rules)
+    pspecs = specs(defs, table, dict(mesh.shape))
+    psh = named(mesh, pspecs)
+    abs_params = abstract(defs)
+
+    opt_sh = {"mu": psh, "nu": psh, "step": NamedSharding(mesh, P())}
+    abs_opt = {
+        "mu": jax.tree_util.tree_map(
+            lambda d: jax.ShapeDtypeStruct(d.shape, jnp.float32), defs,
+            is_leaf=is_def),
+        "nu": jax.tree_util.tree_map(
+            lambda d: jax.ShapeDtypeStruct(d.shape, jnp.float32), defs,
+            is_leaf=is_def),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+    bspec = batch_spec(cfg, shape.global_batch, shape.seq_len, "train")
+    bsh = batch_shardings(mesh, bspec, shape.global_batch)
+
+    # Remat lives inside the models (per scanned layer group): wrapping the
+    # whole loss in jax.checkpoint does nothing for scan-saved residuals.
+    model.remat = remat
+    loss_fn = model.loss
+    daxes = _mesh_data_axes(mesh)
+    shardable = shape.global_batch % (_data_size(mesh) * microbatch) == 0
+    M = microbatch if (microbatch > 1 and shardable) else 1
+
+    def train_step(params, opt_state, batch):
+        if M == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            # Gradient accumulation over M microbatches: activation temp
+            # memory scales 1/M while arithmetic is unchanged (§Perf iter 2).
+            def split(x):
+                mb = x.reshape(M, x.shape[0] // M, *x.shape[1:])
+                return jax.lax.with_sharding_constraint(
+                    mb, NamedSharding(mesh,
+                                      P(None, daxes,
+                                        *([None] * (x.ndim - 1)))))
+            mbatch = jax.tree_util.tree_map(split, batch)
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(acc, mb):
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, x: a + x.astype(jnp.float32), acc, g)
+                return acc, loss
+
+            if microbatch_unroll:
+                # Unrolled accumulation exposes the M per-µbatch gradient
+                # all-reduces to XLA's reassociation pass, which merges them
+                # into ONE all-reduce of the local sums (§Perf hillclimb:
+                # collective term ÷ M).  Scan hides this behind the loop.
+                grads, losses = zero, []
+                for i in range(M):
+                    mb = jax.tree_util.tree_map(lambda x: x[i], mbatch)
+                    grads, loss_i = body(grads, mb)
+                    losses.append(loss_i)
+                losses = jnp.stack(losses)
+            else:
+                grads, losses = jax.lax.scan(body, zero, mbatch)
+            grads = jax.tree_util.tree_map(lambda g: g / M, grads)
+            loss = jnp.mean(losses)
+        params, opt_state, metrics = adamw_update(opt, params, grads,
+                                                  opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    metrics_sh = {k: NamedSharding(mesh, P())
+                  for k in ("grad_norm", "lr", "loss")}
+    return StepBundle(
+        fn=train_step,
+        abstract_inputs=(abs_params, abs_opt, bspec),
+        in_shardings=(psh, opt_sh, bsh),
+        out_shardings=(psh, opt_sh, metrics_sh),
+        donate_argnums=(0, 1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Prefill step
+# ---------------------------------------------------------------------------
+
+def build_prefill_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
+                       rules: str = "tp", unroll: bool = False) -> StepBundle:
+    model = build_model(cfg)
+    model.unroll = unroll
+    defs = model.param_defs()
+    table = rule_table(mesh, shape.global_batch, rules)
+    psh = named(mesh, specs(defs, table, dict(mesh.shape)))
+    abs_params = abstract(defs)
+
+    bspec = batch_spec(cfg, shape.global_batch, shape.seq_len, "prefill")
+    bsh = batch_shardings(mesh, bspec, shape.global_batch)
+
+    cache_defs = _cache_defs(cfg, model, shape)
+    cache_sh = named(mesh, specs(cache_defs, table, dict(mesh.shape)))
+
+    def prefill_step(params, batch):
+        if cfg.family == "audio":
+            batch = dict(batch)
+            batch["decode_len"] = shape.seq_len
+        return model.prefill(params, batch)
+
+    logits_sh = _logits_sharding(cfg, mesh, shape)
+    return StepBundle(
+        fn=prefill_step,
+        abstract_inputs=(abs_params, bspec),
+        in_shardings=(psh, bsh),
+        out_shardings=(logits_sh, cache_sh),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+def _logits_sharding(cfg: ModelConfig, mesh: Mesh,
+                     shape: InputShape) -> NamedSharding:
+    daxes = _mesh_data_axes(mesh)
+    shardable = shape.global_batch % _data_size(mesh) == 0
+    vocab_ok = cfg.vocab % mesh.shape["model"] == 0
+    return NamedSharding(mesh, P(daxes if shardable else None, None,
+                                 "model" if vocab_ok else None))
+
+
+def _cache_defs(cfg: ModelConfig, model, shape: InputShape):
+    if cfg.family == "audio":
+        return model.cache_defs(shape.global_batch, shape.seq_len)
+    return model.cache_defs(shape.global_batch, shape.seq_len)
+
+
+def build_decode_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
+                      rules: str = "tp", unroll: bool = False) -> StepBundle:
+    model = build_model(cfg)
+    model.unroll = unroll
+    defs = model.param_defs()
+    table = rule_table(mesh, shape.global_batch, rules)
+    psh = named(mesh, specs(defs, table, dict(mesh.shape)))
+    abs_params = abstract(defs)
+
+    cache_defs = _cache_defs(cfg, model, shape)
+    cache_sh = named(mesh, specs(cache_defs, table, dict(mesh.shape)))
+    abs_cache = abstract(cache_defs)
+
+    daxes = _mesh_data_axes(mesh)
+    shardable = shape.global_batch % _data_size(mesh) == 0
+    tok_sh = NamedSharding(mesh, P(daxes if shardable else None, None))
+    abs_tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    abs_pos = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_sh = NamedSharding(mesh, P())
+
+    def decode_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    logits_sh = _logits_sharding(cfg, mesh, shape)
+    return StepBundle(
+        fn=decode_step,
+        abstract_inputs=(abs_params, abs_cache, abs_tok, abs_pos),
+        in_shardings=(psh, cache_sh, tok_sh, pos_sh),
+        out_shardings=(logits_sh, cache_sh),
+        donate_argnums=(1,),
+    )
+
+
+def build_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
+               rules: str = "tp", **kw) -> StepBundle:
+    """Dispatch on the input-shape kind; applies the long_500k window
+    override (DESIGN §4) automatically."""
+    if shape.name == "long_500k":
+        cfg = cfg.with_sliding_windows()
+    if shape.kind == "train":
+        # Production default: 4 microbatches (grad accumulation) keeps the
+        # per-device activation footprint inside v5e HBM (EXPERIMENTS §Perf).
+        if mesh.devices.size >= 64:
+            kw.setdefault("microbatch", 4)
+        return build_train_step(cfg, mesh, shape, rules, **kw)
+    kw.pop("microbatch", None)
+    kw.pop("microbatch_unroll", None)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, mesh, shape, rules, **kw)
+    return build_decode_step(cfg, mesh, shape, rules, **kw)

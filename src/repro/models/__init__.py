@@ -1,0 +1,22 @@
+"""Model zoo: family dispatch for the assigned architecture pool."""
+from __future__ import annotations
+
+from repro.models.config import (  # noqa: F401
+    INPUT_SHAPES, InputShape, ModelConfig, MoEConfig, SSMConfig,
+)
+
+
+def build_model(cfg: ModelConfig):
+    """Return the family-appropriate model object (uniform interface:
+    param_defs/init/hidden_states/forward/loss/prefill/decode_step)."""
+    from repro.models.encdec import EncDecLM
+    from repro.models.hybrid import HybridLM
+    from repro.models.transformer import DecoderLM
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg)
+    if cfg.family in ("ssm", "hybrid"):
+        return HybridLM(cfg)
+    if cfg.family == "audio":
+        return EncDecLM(cfg)
+    raise ValueError(f"unknown family: {cfg.family}")

@@ -1,0 +1,69 @@
+"""Memory-efficient next-token cross-entropy.
+
+The naive CE (``log_softmax`` on float32 logits + gather) materialises a
+(B, S, V) float32 tensor and a cross-vocab-shard gather — at train_4k scale
+on a 256-chip pod that is tens of GB per device.  Here the label logit is
+computed *directly from the hidden states* (one (B,S,d)·(B,S,d) contraction
+against the gathered label embeddings), so only the bf16 logits for the
+logsumexp reduction ever exist, sharded over the vocab axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+
+def _chunked_lse(embed_params, cfg: ModelConfig, h_pred: jax.Array
+                 ) -> jax.Array:
+    """logsumexp over the vocab in ``ce_vocab_chunks`` checkpointed passes:
+    only one chunk's f32 logits are ever live (§Perf pair C follow-up)."""
+    E = embed_params["tok"] if cfg.tie_embeddings else embed_params["out"].T
+    C = cfg.ce_vocab_chunks
+    V = E.shape[0]
+    assert V % C == 0, (V, C)
+    Ec = E.reshape(C, V // C, E.shape[1])
+
+    def body(carry, E_chunk):
+        m, s = carry
+        logits = jnp.einsum("bsd,vd->bsv", h_pred, E_chunk,
+                            preferred_element_type=jnp.float32)
+        if cfg.final_logit_softcap is not None:
+            logits = jnp.tanh(logits / cfg.final_logit_softcap) * \
+                cfg.final_logit_softcap
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        s = s * jnp.exp(m - m_new) + \
+            jnp.sum(jnp.exp(logits - m_new[..., None]), axis=-1)
+        return (m_new, s), None
+
+    b, t, _ = h_pred.shape
+    init = (jnp.full((b, t), -jnp.inf, jnp.float32),
+            jnp.zeros((b, t), jnp.float32))
+    (m, s), _ = jax.lax.scan(jax.checkpoint(body), init, Ec)
+    return m + jnp.log(s)
+
+
+def next_token_nll(embed_params, cfg: ModelConfig, h: jax.Array,
+                   tokens: jax.Array) -> jax.Array:
+    """h: (B, S, d) final hidden states aligned with ``tokens`` (B, S)."""
+    h_pred = h[:, :-1, :]
+    tgt = tokens[:, 1:]
+    if cfg.ce_vocab_chunks > 1:
+        lse = _chunked_lse(embed_params, cfg, h_pred)
+    else:
+        # Full (sharded, bf16) logits feed only the logsumexp reduction.
+        logits = layers.unembed(embed_params, cfg, h_pred)   # (B,S-1,V)
+        lse = jax.scipy.special.logsumexp(logits.astype(jnp.float32),
+                                          axis=-1)
+    # Label logit from the embedding rows — no (B,S,V) gather.
+    if cfg.tie_embeddings:
+        e = jnp.take(embed_params["tok"], tgt, axis=0)       # (B,S-1,d)
+    else:
+        e = jnp.take(embed_params["out"].T, tgt, axis=0)
+    lbl = jnp.einsum("bsd,bsd->bs", h_pred.astype(jnp.float32),
+                     e.astype(jnp.float32))
+    if cfg.final_logit_softcap is not None:
+        lbl = jnp.tanh(lbl / cfg.final_logit_softcap) * cfg.final_logit_softcap
+    return jnp.mean(lse - lbl)

@@ -1,0 +1,80 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-bounded one-hot dispatch.
+
+TPU-idiomatic (GShard/Switch-style) dispatch: tokens are processed in groups
+of ``group_size`` so the (tokens × experts × capacity) one-hot dispatch
+einsums stay a small fraction of the expert FLOPs; experts are sharded over
+the ``model``/``expert`` mesh axis (expert parallelism), so dispatch/combine
+lower to all-to-all-like collectives on the production mesh.
+
+Used by phi3.5-moe (16e top-2) and grok-1 (8e top-2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.params import ParamDef
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    assert cfg.moe is not None
+    d, dff, e, dt = cfg.d_model, cfg.d_ff, cfg.moe.n_experts, cfg.param_dtype
+    return {
+        "router": ParamDef((d, e), ("embed", None), dtype=jnp.float32),
+        "wi": ParamDef((e, d, 2, dff), ("expert", "embed", None, "mlp"),
+                       dtype=dt, fan_in=d),
+        "wo": ParamDef((e, dff, d), ("expert", "mlp", "embed"), dtype=dt,
+                       fan_in=dff),
+    }
+
+
+def _dispatch_one_group(p, cfg: ModelConfig, x: jax.Array
+                        ) -> tuple[jax.Array, jax.Array]:
+    """x: (G, d) → (out (G, d), aux loss scalar)."""
+    m = cfg.moe
+    G, d = x.shape
+    E, K = m.n_experts, m.top_k
+    C = max(1, int(G * K * m.capacity_factor / E))
+
+    logits = jnp.einsum("gd,de->ge", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                      # (G, E)
+    gate_vals, idx = jax.lax.top_k(probs, K)                     # (G, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # One-hot expert selection per (token, k) slot, flattened in priority
+    # order: slot 0 of every token outranks slot 1 (standard top-k priority).
+    sel = jax.nn.one_hot(idx, E, dtype=jnp.float32)              # (G, K, E)
+    sel_flat = sel.transpose(1, 0, 2).reshape(K * G, E)          # (K·G, E)
+    pos = jnp.cumsum(sel_flat, axis=0) - 1.0                     # position in expert
+    keep = (pos < C).astype(jnp.float32) * sel_flat
+    disp_flat = keep[..., None] * jax.nn.one_hot(pos, C, dtype=jnp.float32)
+    dispatch = disp_flat.reshape(K, G, E, C).transpose(1, 0, 2, 3)  # (G,K,E,C)
+
+    combine = jnp.einsum("gk,gkec->gec", gate_vals, dispatch)    # (G, E, C)
+    disp = jnp.sum(dispatch, axis=1)                             # (G, E, C)
+
+    xin = jnp.einsum("gec,gd->ecd", disp, x.astype(jnp.float32)
+                     ).astype(x.dtype)                           # (E, C, d)
+    h = jnp.einsum("ecd,edgf->ecgf", xin, p["wi"])               # (E,C,2,f)
+    h = jax.nn.silu(h[..., 0, :]) * h[..., 1, :]
+    eout = jnp.einsum("ecf,efd->ecd", h, p["wo"])                # (E, C, d)
+    out = jnp.einsum("gec,ecd->gd", combine, eout.astype(jnp.float32))
+
+    # Switch-style load-balance auxiliary loss.
+    frac_tokens = jnp.mean(jnp.sum(sel, axis=1), axis=0)         # (E,)
+    frac_probs = jnp.mean(probs, axis=0)                         # (E,)
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return out.astype(x.dtype), aux
+
+
+def moe_apply(p, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) → (out, aux_loss).  Tokens regrouped to ``group_size``."""
+    m = cfg.moe
+    b, s, d = x.shape
+    tokens = b * s
+    g = min(m.group_size, tokens)
+    assert tokens % g == 0, (tokens, g)
+    xg = x.reshape(tokens // g, g, d)
+    out, aux = jax.vmap(lambda xx: _dispatch_one_group(p, cfg, xx))(xg)
+    return out.reshape(b, s, d), jnp.mean(aux)

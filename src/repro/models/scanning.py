@@ -1,0 +1,30 @@
+"""Scan-or-unroll helper.
+
+Production models ``lax.scan`` over layer repeats (compile time and HLO size
+O(1) in depth).  XLA's ``cost_analysis`` counts a while-loop body ONCE
+regardless of trip count (verified empirically), so the dry-run's roofline
+probes lower tiny *unrolled* variants (1 and 2 repeats) and reconstruct
+``total = outside + R·(f₂ − f₁)``.  ``unroll=True`` switches every layer
+scan to a Python loop for those probes.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def scan_blocks(body, init, xs, unroll: bool = False):
+    """Drop-in for ``jax.lax.scan(body, init, xs)`` with an unrolled mode."""
+    if not unroll:
+        return jax.lax.scan(body, init, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    carry, ys = init, []
+    for i in range(n):
+        x_i = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree_util.tree_map(
+            lambda *leaves: jax.numpy.stack(leaves, axis=0), *ys)
+    else:
+        stacked = None
+    return carry, stacked

@@ -1,0 +1,213 @@
+"""Mamba2 — state-space duality (SSD) blocks [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: within-chunk terms are
+attention-like masked matmuls (MXU-friendly), across-chunk state is a short
+``lax.scan`` over ``T/chunk`` steps carrying the (H, N, P) state — this is
+the TPU adaptation of the paper's hardware mapping (the CUDA kernel's
+block-parallel structure becomes chunk matmuls + a tiny sequential scan).
+
+Decode is the classical single-step recurrence on the carried state:
+``h ← exp(ΔA)·h + (ΔB)⊗x``, ``y = C·h + D·x`` — constant memory, which is
+why SSM/hybrid archs run ``long_500k`` natively (DESIGN §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, SSMConfig
+from repro.models.params import ParamDef
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int, int, int, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    heads = d_inner // s.head_dim
+    return d_inner, heads, s.head_dim, s.n_groups, s.d_state
+
+
+def mamba_defs(cfg: ModelConfig) -> dict:
+    s: SSMConfig = cfg.ssm
+    d, dt = cfg.d_model, cfg.param_dtype
+    d_inner, H, Pd, G, N = _dims(cfg)
+    conv_ch = d_inner + 2 * G * N          # conv over [x, B, C] channels
+    return {
+        "wz": ParamDef((d, H, Pd), ("embed", "heads", None), dtype=dt,
+                       fan_in=d),
+        "wx": ParamDef((d, H, Pd), ("embed", "heads", None), dtype=dt,
+                       fan_in=d),
+        "wB": ParamDef((d, G, N), ("embed", None, "state"), dtype=dt,
+                       fan_in=d),
+        "wC": ParamDef((d, G, N), ("embed", None, "state"), dtype=dt,
+                       fan_in=d),
+        "wdt": ParamDef((d, H), ("embed", "heads"), dtype=dt),
+        "dt_bias": ParamDef((H,), ("heads",), dtype=jnp.float32, init="zeros"),
+        "A_log": ParamDef((H,), ("heads",), dtype=jnp.float32, init="zeros"),
+        "D": ParamDef((H,), ("heads",), dtype=jnp.float32, init="ones"),
+        "conv_w": ParamDef((s.conv_kernel, conv_ch), (None, None), dtype=dt,
+                           scale=0.5),
+        "conv_b": ParamDef((conv_ch,), (None,), dtype=dt, init="zeros"),
+        "norm": ParamDef((H, Pd), ("heads", None), dtype=jnp.float32,
+                         init="ones"),
+        "wo": ParamDef((H, Pd, d), ("heads", None, "embed"), dtype=dt),
+    }
+
+
+def ssm_cache_defs(cfg: ModelConfig, batch: int) -> dict:
+    s = cfg.ssm
+    d_inner, H, Pd, G, N = _dims(cfg)
+    conv_ch = d_inner + 2 * G * N
+    return {
+        "state": ParamDef((batch, H, N, Pd), ("batch", "heads", None, None),
+                          dtype=jnp.float32, init="zeros"),
+        "conv": ParamDef((batch, s.conv_kernel - 1, conv_ch),
+                         ("batch", None, None), dtype=cfg.param_dtype,
+                         init="zeros"),
+    }
+
+
+def _proj_xbc(p, cfg: ModelConfig, u: jax.Array):
+    """Project input to x/B/C channels (pre-conv) and z/dt."""
+    d_inner, H, Pd, G, N = _dims(cfg)
+    x = jnp.einsum("bsd,dhp->bshp", u, p["wx"]).reshape(*u.shape[:2], H * Pd)
+    Bm = jnp.einsum("bsd,dgn->bsgn", u, p["wB"]).reshape(*u.shape[:2], G * N)
+    Cm = jnp.einsum("bsd,dgn->bsgn", u, p["wC"]).reshape(*u.shape[:2], G * N)
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)      # (B, S, conv_ch)
+    z = jnp.einsum("bsd,dhp->bshp", u, p["wz"])      # (B, S, H, P)
+    dt = jnp.einsum("bsd,dh->bsh", u, p["wdt"])      # (B, S, H)
+    return xbc, z, dt
+
+
+def _split_xbc(cfg: ModelConfig, xbc: jax.Array):
+    d_inner, H, Pd, G, N = _dims(cfg)
+    b, s, _ = xbc.shape
+    x = xbc[..., :d_inner].reshape(b, s, H, Pd)
+    Bm = xbc[..., d_inner:d_inner + G * N].reshape(b, s, G, N)
+    Cm = xbc[..., d_inner + G * N:].reshape(b, s, G, N)
+    return x, Bm, Cm
+
+
+def _causal_conv(p, xbc: jax.Array, kernel: int) -> jax.Array:
+    """Depthwise causal conv over time.  xbc: (B, S, C)."""
+    pad = jnp.pad(xbc, ((0, 0), (kernel - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * p["conv_w"][i][None, None, :]
+              for i in range(kernel))
+    return jax.nn.silu(out + p["conv_b"][None, None, :])
+
+
+def _gated_norm(p, y: jax.Array, z: jax.Array, eps: float) -> jax.Array:
+    """Mamba2 gated RMSNorm: norm(y · silu(z)) with per-(head, dim) scale."""
+    g = (y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32)))
+    var = jnp.mean(g * g, axis=-1, keepdims=True)
+    return (g * jax.lax.rsqrt(var + eps) * p["norm"]).astype(y.dtype)
+
+
+def mamba_apply(p, cfg: ModelConfig, u: jax.Array,
+                return_cache: bool = False):
+    """Full-sequence SSD (training / prefill).  u: (B, S, d) → (B, S, d).
+
+    With ``return_cache`` also returns the decode cache {state, conv}: the
+    final SSD state is the last carry of the inter-chunk scan (no sequential
+    token replay needed — this is the parallel prefill path)."""
+    s_cfg = cfg.ssm
+    d_inner, H, Pd, G, N = _dims(cfg)
+    B_, S, _ = u.shape
+    Q = min(s_cfg.chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    xbc, z, dt = _proj_xbc(p, cfg, u)
+    xbc_raw = xbc
+    xbc = _causal_conv(p, xbc, s_cfg.conv_kernel)
+    x, Bm, Cm = _split_xbc(cfg, xbc)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                      # (H,) < 0
+
+    hpg = H // G
+    # Chunked views.
+    xc = (x.astype(jnp.float32) * dt[..., None]).reshape(B_, nc, Q, H, Pd)
+    Bc = Bm.astype(jnp.float32).reshape(B_, nc, Q, G, N)
+    Cc = Cm.astype(jnp.float32).reshape(B_, nc, Q, G, N)
+    la = (dt * A[None, None, :]).reshape(B_, nc, Q, H)            # log decay
+    La = jnp.cumsum(la, axis=2)                                   # within-chunk
+
+    # Within-chunk (attention-like) term with decay mask
+    #   L[i,j] = exp(La_i − La_j) · 1[j ≤ i].
+    if s_cfg.use_kernel and G == 1:
+        # Fused Pallas path: decay·scores·x stays in VMEM (kernels/ssd.py).
+        from repro.kernels import ops as kernel_ops
+        cb = jnp.einsum("bcqgn,bckgn->bcqk", Cc, Bc)
+        y_intra = kernel_ops.ssd_intra(
+            cb.reshape(B_ * nc, Q, Q), La.reshape(B_ * nc, Q, H),
+            xc.reshape(B_ * nc, Q, H, Pd)).reshape(B_, nc, Q, H, Pd)
+    else:
+        diff = La[:, :, :, None, :] - La[:, :, None, :, :]        # (B,nc,Q,Q,H)
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        # Mask in log space before exp: diff > 0 above the diagonal would
+        # overflow.
+        decay = jnp.exp(jnp.where(mask[None, None, :, :, None], diff,
+                                  -jnp.inf))
+        scores = jnp.einsum("bcqgn,bckgn->bcqkg", Cc, Bc)         # (B,nc,Q,Q,G)
+        scores = jnp.repeat(scores, hpg, axis=-1) * decay         # → heads
+        y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", scores, xc)
+
+    # Chunk-boundary states and the sequential inter-chunk scan.
+    seg = jnp.exp(La[:, :, -1:, :] - La)                          # decay to end
+    Bh = jnp.repeat(Bc, hpg, axis=-2)                             # (B,nc,Q,H,N)
+    S_local = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp", seg, Bh, xc)
+    chunk_decay = jnp.exp(La[:, :, -1, :])                        # (B,nc,H)
+
+    def scan_body(carry, inp):
+        s_loc, dec = inp                    # (B,H,N,P), (B,H)
+        new = carry * dec[..., None, None] + s_loc
+        return new, carry                   # emit state *before* this chunk
+
+    init = jnp.zeros((B_, H, N, Pd), jnp.float32)
+    S_final, S_prev = jax.lax.scan(scan_body,
+                                   init,
+                                   (S_local.swapaxes(0, 1),
+                                    chunk_decay.swapaxes(0, 1)))
+    S_prev = S_prev.swapaxes(0, 1)                                # (B,nc,H,N,P)
+
+    Ch = jnp.repeat(Cc, hpg, axis=-2)                             # (B,nc,Q,H,N)
+    y_inter = jnp.einsum("bcqh,bcqhn,bchnp->bcqhp", jnp.exp(La), Ch, S_prev)
+
+    y = (y_intra + y_inter).reshape(B_, S, H, Pd)
+    y = y + p["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = _gated_norm(p, y, z, cfg.norm_eps)
+    out = jnp.einsum("bshp,hpd->bsd", y.astype(u.dtype), p["wo"])
+    if not return_cache:
+        return out
+    k = s_cfg.conv_kernel
+    cache = {"state": S_final,
+             "conv": xbc_raw[:, S - (k - 1):, :].astype(cfg.param_dtype)}
+    return out, cache
+
+
+def mamba_decode(p, cfg: ModelConfig, u: jax.Array, cache: dict
+                 ) -> tuple[jax.Array, dict]:
+    """Single-token recurrent step.  u: (B, 1, d)."""
+    s_cfg = cfg.ssm
+    d_inner, H, Pd, G, N = _dims(cfg)
+    xbc, z, dt = _proj_xbc(p, cfg, u)                 # (B,1,·)
+    hist = jnp.concatenate([cache["conv"], xbc.astype(cache["conv"].dtype)],
+                           axis=1)                    # (B, K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = hist[:, 1:, :]
+
+    x, Bm, Cm = _split_xbc(cfg, conv_out)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]   # (B,H)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A[None, :])                                        # (B,H)
+    hpg = H // G
+    Bh = jnp.repeat(Bm[:, 0], hpg, axis=-2)           # (B,H,N)
+    Ch = jnp.repeat(Cm[:, 0], hpg, axis=-2)
+    xd = x[:, 0].astype(jnp.float32) * dt[..., None]  # (B,H,P)
+    state = cache["state"] * a[..., None, None] + \
+        jnp.einsum("bhn,bhp->bhnp", Bh.astype(jnp.float32), xd)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), state)
+    y = y + p["D"][None, :, None] * x[:, 0].astype(jnp.float32)
+    y = _gated_norm(p, y[:, None], z, cfg.norm_eps)
+    out = jnp.einsum("bshp,hpd->bsd", y.astype(u.dtype), p["wo"])
+    return out, {"state": state, "conv": new_conv}

@@ -1,0 +1,261 @@
+"""Decoder-only LM assembly (dense / MoE / VLM families).
+
+Layers are grouped by the config's repeating ``pattern`` and executed with
+``lax.scan`` over pattern *repeats* — the traced program contains one copy of
+each pattern position regardless of depth (compile-time O(1) in layers; see
+DESIGN §6).  KV caches are stacked the same way: one (repeats, ...) array per
+pattern position.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, moe as moe_lib
+from repro.models.scanning import scan_blocks
+from repro.models.config import ModelConfig
+from repro.models.params import ParamDef, abstract, init as init_params
+
+Params = Any
+
+
+def _attn_variant(cfg: ModelConfig, kind: str) -> layers.AttnVariant:
+    return layers.AttnVariant(
+        window=cfg.window if kind == "local_attn" else None,
+        softcap=cfg.attn_logit_softcap, causal=True)
+
+
+def _block_defs(cfg: ModelConfig, kind: str) -> dict:
+    defs = {
+        "norm1": layers.rmsnorm_defs(cfg.d_model),
+        "attn": layers.attention_defs(cfg),
+        "norm2": layers.rmsnorm_defs(cfg.d_model),
+    }
+    if cfg.use_post_norm:
+        defs["post_norm1"] = layers.rmsnorm_defs(cfg.d_model)
+        defs["post_norm2"] = layers.rmsnorm_defs(cfg.d_model)
+    if cfg.moe is not None:
+        defs["ffn"] = moe_lib.moe_defs(cfg)
+    else:
+        defs["ffn"] = layers.mlp_defs(cfg)
+    return defs
+
+
+def _block_train(p: Params, cfg: ModelConfig, kind: str, h: jax.Array,
+                 positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    a = layers.attention(p["attn"], cfg, _attn_variant(cfg, kind),
+                         layers.rmsnorm(p["norm1"], h, cfg.norm_eps),
+                         positions)
+    if cfg.use_post_norm:
+        a = layers.rmsnorm(p["post_norm1"], a, cfg.norm_eps)
+    h = h + a
+    f_in = layers.rmsnorm(p["norm2"], h, cfg.norm_eps)
+    if cfg.moe is not None:
+        f, aux = moe_lib.moe_apply(p["ffn"], cfg, f_in)
+    else:
+        f, aux = layers.mlp(p["ffn"], cfg, f_in), jnp.float32(0.0)
+    if cfg.use_post_norm:
+        f = layers.rmsnorm(p["post_norm2"], f, cfg.norm_eps)
+    return h + f, aux
+
+
+def _block_decode(p: Params, cfg: ModelConfig, kind: str, h: jax.Array,
+                  pos: jax.Array, cache: dict) -> tuple[jax.Array, dict]:
+    a, new_cache = layers.attention_decode(
+        p["attn"], cfg, _attn_variant(cfg, kind),
+        layers.rmsnorm(p["norm1"], h, cfg.norm_eps), pos, cache)
+    if cfg.use_post_norm:
+        a = layers.rmsnorm(p["post_norm1"], a, cfg.norm_eps)
+    h = h + a
+    f_in = layers.rmsnorm(p["norm2"], h, cfg.norm_eps)
+    if cfg.moe is not None:
+        f, _ = moe_lib.moe_apply(p["ffn"], cfg, f_in)
+    else:
+        f = layers.mlp(p["ffn"], cfg, f_in)
+    if cfg.use_post_norm:
+        f = layers.rmsnorm(p["post_norm2"], f, cfg.norm_eps)
+    return h + f, new_cache
+
+
+def _cache_len(cfg: ModelConfig, kind: str, seq_len: int) -> int:
+    if kind == "local_attn":
+        return min(cfg.window, seq_len)
+    return seq_len
+
+
+@dataclasses.dataclass
+class DecoderLM:
+    """Uniform model interface (see launch/steps.py for the step functions)."""
+
+    cfg: ModelConfig
+    # Rematerialise each scanned layer group in the backward pass: without
+    # this, scan saves every block's attention intermediates for the whole
+    # depth (O(190 GB/device) at train_4k pod scale — measured in the first
+    # dry-run iteration; see EXPERIMENTS §Perf).
+    remat: bool = True
+    # Unrolled layer loop — only for the dry-run cost probes (scanning.py).
+    unroll: bool = False
+
+    # -- parameter / cache definition trees --------------------------------
+    def param_defs(self) -> dict:
+        cfg = self.cfg
+        blocks = {}
+        for i, kind in enumerate(cfg.pattern):
+            blk = _block_defs(cfg, kind)
+            blocks[f"b{i}"] = jax.tree_util.tree_map(
+                lambda d: ParamDef((cfg.n_repeats, *d.shape),
+                                   ("layer", *d.axes), dtype=d.dtype,
+                                   init=d.init, scale=d.scale),
+                blk, is_leaf=lambda x: isinstance(x, ParamDef))
+        defs = {
+            "embed": layers.embed_defs(cfg),
+            "blocks": blocks,
+            "final_norm": layers.rmsnorm_defs(cfg.d_model),
+        }
+        if cfg.frontend == "vision_stub":
+            # Projector from the (stub) vision tower to the LM width.
+            defs["projector"] = {
+                "w": ParamDef((cfg.d_model, cfg.d_model), ("embed", None),
+                              dtype=cfg.param_dtype)}
+        return defs
+
+    def cache_defs(self, batch: int, seq_len: int) -> dict:
+        cfg = self.cfg
+        out = {}
+        for i, kind in enumerate(cfg.pattern):
+            c = layers.attn_cache_defs(cfg, batch, _cache_len(cfg, kind,
+                                                              seq_len))
+            out[f"b{i}"] = jax.tree_util.tree_map(
+                lambda d: ParamDef((cfg.n_repeats, *d.shape),
+                                   ("layer", *d.axes), dtype=d.dtype,
+                                   init=d.init),
+                c, is_leaf=lambda x: isinstance(x, ParamDef))
+        return out
+
+    def init(self, key: jax.Array):
+        return init_params(key, self.param_defs())
+
+    def init_cache(self, batch: int, seq_len: int):
+        return init_params(jax.random.PRNGKey(0),
+                           self.cache_defs(batch, seq_len))
+
+    # -- forward ------------------------------------------------------------
+    def _inputs_to_h(self, params: Params, batch: dict) -> jax.Array:
+        cfg = self.cfg
+        h = layers.embed(params["embed"], cfg, batch["tokens"])
+        if cfg.frontend == "vision_stub" and "prefix_embeds" in batch:
+            pe = jnp.einsum("bsd,de->bse",
+                            batch["prefix_embeds"].astype(h.dtype),
+                            params["projector"]["w"])
+            h = jnp.concatenate([pe, h], axis=1)
+        return h
+
+    def hidden_states(self, params: Params, batch: dict) -> jax.Array:
+        """Full-sequence forward → final hidden states (B, S, d).
+
+        This is the brain-encoding feature hook (DESIGN §4): features X for
+        the ridge head are these states, as VGG16 FC2 activations are in the
+        paper.
+        """
+        cfg = self.cfg
+        h = self._inputs_to_h(params, batch)
+        b, s, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+        def body(carry, layer_params):
+            hh, aux = carry
+            for i, kind in enumerate(cfg.pattern):
+                hh, a = _block_train(layer_params[f"b{i}"], cfg, kind, hh,
+                                     positions)
+                aux = aux + a
+            return (hh, aux), None
+
+        if self.remat:
+            body = jax.checkpoint(body)
+        (h, aux), _ = scan_blocks(body, (h, jnp.float32(0.0)),
+                                  params["blocks"], self.unroll)
+        self._last_aux = aux / cfg.n_layers
+        return layers.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+
+    def forward(self, params: Params, batch: dict
+                ) -> tuple[jax.Array, jax.Array]:
+        """→ (logits (B, S, V), moe aux loss)."""
+        h = self.hidden_states(params, batch)
+        logits = layers.unembed(params["embed"], self.cfg, h)
+        return logits, self._last_aux
+
+    def loss(self, params: Params, batch: dict) -> jax.Array:
+        """Next-token cross-entropy over the token (non-prefix) region."""
+        from repro.models import losses
+        h = self.hidden_states(params, batch)
+        tokens = batch["tokens"]
+        n_prefix = h.shape[1] - tokens.shape[1]
+        ce = losses.next_token_nll(params["embed"], self.cfg,
+                                   h[:, n_prefix:, :], tokens)
+        w = self.cfg.moe.router_aux_weight if self.cfg.moe else 0.0
+        return ce + w * self._last_aux
+
+    # -- decode ---------------------------------------------------------------
+    def prefill(self, params: Params, batch: dict
+                ) -> tuple[jax.Array, dict]:
+        """Full-sequence forward returning last-position logits + KV cache."""
+        cfg = self.cfg
+        h = self._inputs_to_h(params, batch)
+        b, s, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+        def body(hh, layer_params):
+            caches = {}
+            for i, kind in enumerate(cfg.pattern):
+                blk = layer_params[f"b{i}"]
+                x_in = layers.rmsnorm(blk["norm1"], hh, cfg.norm_eps)
+                q, k, v = layers._qkv(blk["attn"], cfg, x_in, positions)
+                C = _cache_len(cfg, kind, s)
+                k_c = jnp.roll(k[:, -C:], s % C, axis=1)
+                v_c = jnp.roll(v[:, -C:], s % C, axis=1)
+                caches[f"b{i}"] = {"k": k_c.astype(cfg.param_dtype),
+                                   "v": v_c.astype(cfg.param_dtype)}
+                hh, _ = _block_train(blk, cfg, kind, hh, positions)
+            return hh, caches
+
+        h, cache = scan_blocks(body, h, params["blocks"], self.unroll)
+        h = layers.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        logits = layers.unembed(params["embed"], cfg, h[:, -1:, :])
+        return logits, cache
+
+    def decode_step(self, params: Params, cache: dict, tokens: jax.Array,
+                    pos: jax.Array) -> tuple[jax.Array, dict]:
+        """tokens: (B, 1) current token; pos: scalar absolute position.
+
+        The stacked KV cache travels in the scan CARRY and is updated with
+        dynamic_update_slice per repeat — passing it as scan xs/ys instead
+        double-buffers the whole cache (input + output stacks both live),
+        which measured ~2× decode temp at pod scale (EXPERIMENTS §Perf).
+        """
+        cfg = self.cfg
+        h = layers.embed(params["embed"], cfg, tokens)
+
+        def body(carry, xs):
+            hh, full_cache = carry
+            layer_params, idx = xs
+            for i, kind in enumerate(cfg.pattern):
+                c_i = jax.tree_util.tree_map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, idx, 0, False),
+                    full_cache[f"b{i}"])
+                hh, nc = _block_decode(layer_params[f"b{i}"], cfg, kind, hh,
+                                       pos, c_i)
+                full_cache[f"b{i}"] = jax.tree_util.tree_map(
+                    lambda a, x: jax.lax.dynamic_update_slice_in_dim(
+                        a, x[None].astype(a.dtype), idx, 0),
+                    full_cache[f"b{i}"], nc)
+            return (hh, full_cache), None
+
+        idxs = jnp.arange(cfg.n_repeats, dtype=jnp.int32)
+        (h, new_cache), _ = scan_blocks(body, (h, dict(cache)),
+                                        (params["blocks"], idxs), self.unroll)
+        h = layers.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        logits = layers.unembed(params["embed"], cfg, h)
+        return logits, new_cache

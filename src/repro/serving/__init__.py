@@ -1,0 +1,2 @@
+from repro.serving.engine import ServeEngine, ServeRequest  # noqa: F401
+from repro.serving.sampler import SamplerConfig, sample  # noqa: F401

@@ -1,0 +1,90 @@
+"""Wave-batched serving engine.
+
+Requests are queued and served in fixed-shape *waves* (the production
+decode shapes are fixed-batch: decode_32k = 128 concurrent slots).  Each
+wave: pad/stack prompts → one prefill → greedy/sampled decode loop on the
+shared KV cache.  Fixed shapes mean two compilations total (prefill +
+decode), reused across waves — the deployment pattern the decode_32k /
+long_500k dry-runs prove out at pod scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.serving.sampler import SamplerConfig, sample
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    prompt: list[int]
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+
+
+@dataclasses.dataclass
+class ServeResult:
+    tokens: list[int]
+
+
+class ServeEngine:
+    def __init__(self, model, params, cfg: ModelConfig, *, wave_size: int = 4,
+                 prompt_len: int = 16,
+                 sampler: SamplerConfig = SamplerConfig(), seed: int = 0):
+        self.model, self.params, self.cfg = model, params, cfg
+        self.wave_size, self.prompt_len = wave_size, prompt_len
+        self.sampler = sampler
+        self._key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+
+    # -- queue -----------------------------------------------------------
+    def serve(self, requests: Sequence[ServeRequest]) -> list[ServeResult]:
+        out: list[ServeResult] = []
+        for start in range(0, len(requests), self.wave_size):
+            wave = list(requests[start:start + self.wave_size])
+            n_real = len(wave)
+            while len(wave) < self.wave_size:       # pad the last wave
+                wave.append(ServeRequest(prompt=[0], max_new_tokens=1))
+            out.extend(self._serve_wave(wave)[:n_real])
+        return out
+
+    def _pad_prompt(self, p: list[int]) -> list[int]:
+        p = p[-self.prompt_len:]
+        return [0] * (self.prompt_len - len(p)) + p
+
+    def _serve_wave(self, wave: list[ServeRequest]) -> list[ServeResult]:
+        tokens = jnp.asarray([self._pad_prompt(r.prompt) for r in wave],
+                             jnp.int32)
+        batch = {"tokens": tokens}
+        if self.cfg.family == "audio":
+            batch["src_embeds"] = jnp.zeros(
+                (len(wave), self.prompt_len, self.cfg.d_model), jnp.bfloat16)
+        logits, cache = self._prefill(self.params, batch)
+
+        max_new = max(r.max_new_tokens for r in wave)
+        start_pos = self.prompt_len if self.cfg.family != "audio" else 1
+        results = [[] for _ in wave]
+        done = np.zeros(len(wave), bool)
+        tok = None
+        for i in range(max_new):
+            self._key, sub = jax.random.split(self._key)
+            tok = sample(sub, logits[:, -1, :], self.sampler)[:, None]
+            step_tokens = np.asarray(tok[:, 0])
+            for b, r in enumerate(wave):
+                if done[b] or i >= r.max_new_tokens:
+                    continue
+                t = int(step_tokens[b])
+                results[b].append(t)
+                if r.eos_id is not None and t == r.eos_id:
+                    done[b] = True
+            if done.all() or i == max_new - 1:
+                break
+            logits, cache = self._decode(self.params, cache, tok,
+                                         jnp.int32(start_pos + i))
+        return [ServeResult(tokens=r) for r in results]

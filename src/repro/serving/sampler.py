@@ -1,0 +1,35 @@
+"""Token samplers for the serving engine."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0      # 0 → greedy
+    top_k: int | None = None      # restrict to k highest logits
+    top_p: float | None = None    # nucleus sampling
+
+
+def sample(key: jax.Array, logits: jax.Array, cfg: SamplerConfig
+           ) -> jax.Array:
+    """logits: (B, V) → token ids (B,) int32."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / cfg.temperature
+    if cfg.top_k is not None:
+        kth = jnp.sort(logits, axis=-1)[:, -cfg.top_k][:, None]
+        logits = jnp.where(logits >= kth, logits, -jnp.inf)
+    if cfg.top_p is not None:
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # Smallest prefix with mass ≥ top_p; threshold logit of that prefix.
+        cutoff_idx = jnp.sum(cum < cfg.top_p, axis=-1)
+        thresh = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None],
+                                     axis=-1)
+        logits = jnp.where(logits >= thresh, logits, -jnp.inf)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

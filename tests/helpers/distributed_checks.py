@@ -1,0 +1,129 @@
+"""Distributed correctness checks for B-MOR / MOR, run in a subprocess with
+virtual host devices (so the main pytest process keeps 1 CPU device).
+
+Usage: XLA_FLAGS=--xla_force_host_platform_device_count=8 python distributed_checks.py
+Prints "ALL_OK" on success.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import bmor, mor, ridge
+from repro.core.ridge import RidgeCVConfig
+
+
+def make_problem(key, n, p, t, noise=0.01):
+    k1, k2, k3 = jax.random.split(key, 3)
+    X = jax.random.normal(k1, (n, p), jnp.float32)
+    W = jax.random.normal(k2, (p, t), jnp.float32) / np.sqrt(p)
+    Y = X @ W + noise * jax.random.normal(k3, (n, t), jnp.float32)
+    return X, Y, W
+
+
+def check_bmor_matches_single_device():
+    assert jax.device_count() == 8, jax.device_count()
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    n, p, t = 64, 16, 32
+    X, Y, _ = make_problem(jax.random.PRNGKey(0), n, p, t)
+    cfg = RidgeCVConfig(n_folds=4)
+
+    Xs = jax.device_put(X, NamedSharding(mesh, P("data", None)))
+    Ys = jax.device_put(Y, NamedSharding(mesh, P("data", "model")))
+    res = bmor.bmor_fit(Xs, Ys, mesh, cfg=cfg)
+
+    ref = ridge.ridge_cv(X, Y, cfg)
+    # Low-noise problem → every shard picks the same (smallest) λ as the
+    # single-device reference, so weights must agree to float tolerance.
+    np.testing.assert_allclose(np.asarray(res.best_lambda),
+                               float(ref.best_lambda) * np.ones(4), rtol=0)
+    np.testing.assert_allclose(np.asarray(res.weights),
+                               np.asarray(ref.weights), rtol=2e-3, atol=2e-3)
+    print("bmor_matches_single_device OK")
+
+
+def check_bmor_multipod_axes():
+    """B-MOR with the row shards split over two mesh axes (pod, data)."""
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    n, p, t = 48, 8, 16
+    X, Y, _ = make_problem(jax.random.PRNGKey(1), n, p, t)
+    cfg = RidgeCVConfig(n_folds=3)
+    Xs = jax.device_put(X, NamedSharding(mesh, P(("pod", "data"), None)))
+    Ys = jax.device_put(Y, NamedSharding(mesh, P(("pod", "data"), "model")))
+    res = bmor.bmor_fit(Xs, Ys, mesh, data_axis=("pod", "data"), cfg=cfg)
+    ref = ridge.ridge_cv(X, Y, cfg)
+    np.testing.assert_allclose(np.asarray(res.weights),
+                               np.asarray(ref.weights), rtol=2e-3, atol=2e-3)
+    print("bmor_multipod_axes OK")
+
+
+def check_mor_distributed_matches_mor():
+    mesh = jax.make_mesh((1, 8), ("data", "model"))
+    n, p, t = 40, 8, 16
+    X, Y, _ = make_problem(jax.random.PRNGKey(2), n, p, t)
+    cfg = RidgeCVConfig(n_folds=4, lambdas=(0.1, 1.0, 100.0))
+    W_dist = mor.mor_fit_distributed(X, Y, mesh, cfg=cfg)
+    W_ref = mor.mor_fit(X, Y, cfg)
+    np.testing.assert_allclose(np.asarray(W_dist), np.asarray(W_ref),
+                               rtol=1e-4, atol=1e-4)
+    print("mor_distributed OK")
+
+
+def check_bmor_perbatch_lambda():
+    """Targets with very different SNR in different batches → per-batch λ can
+    differ (Algorithm 1 line 13 semantics)."""
+    mesh = jax.make_mesh((1, 2), ("data", "model"))
+    n, p = 60, 12
+    key = jax.random.PRNGKey(3)
+    k1, k2, k3 = jax.random.split(key, 3)
+    X = jax.random.normal(k1, (n, p), jnp.float32)
+    W = jax.random.normal(k2, (p, 16), jnp.float32)
+    Y_clean = X @ W[:, :8] + 0.001 * jax.random.normal(k3, (n, 8))
+    Y_noisy = 5.0 * jax.random.normal(k3, (n, 8))  # pure noise targets
+    Y = jnp.concatenate([Y_clean, Y_noisy], axis=1)
+    Xs = jax.device_put(X, NamedSharding(mesh, P("data", None)))
+    Ys = jax.device_put(Y, NamedSharding(mesh, P("data", "model")))
+    res = bmor.bmor_fit(Xs, Ys, mesh, cfg=RidgeCVConfig(n_folds=3))
+    lams = np.asarray(res.best_lambda)
+    assert lams[0] <= 1.0, lams          # clean batch: tiny λ
+    assert lams[1] >= 100.0, lams        # noise batch: heavy shrinkage
+    print("bmor_perbatch_lambda OK")
+
+
+def check_bmor_dual_matches_single_device():
+    """Dual-form B-MOR (n < p) vs the single-device dual RidgeCV."""
+    mesh = jax.make_mesh((1, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    n, p, t = 40, 96, 16                       # n < p → dual regime
+    X, Y, _ = make_problem(jax.random.PRNGKey(9), n, p, t, noise=0.01)
+    cfg = RidgeCVConfig(n_folds=4, method="dual")
+    Ys = jax.device_put(Y, jax.sharding.NamedSharding(
+        mesh, P(None, "model")))
+    res = bmor.bmor_fit_dual(X, Ys, mesh, cfg=cfg)
+    # Per-batch λ may differ between shards (Alg. 1 semantics); validate each
+    # shard's weights against the single-device dual solve AT ITS OWN λ.
+    lams = np.asarray(res.best_lambda)
+    t_shard = Y.shape[1] // lams.shape[0]
+    f = ridge.factorize(X, cfg)
+    for s_i, lam in enumerate(lams):
+        cols = slice(s_i * t_shard, (s_i + 1) * t_shard)
+        W_ref = ridge.solve(f, Y[:, cols], jnp.float32(lam), X=X)
+        np.testing.assert_allclose(
+            np.asarray(res.weights)[:, cols], np.asarray(W_ref),
+            rtol=3e-3, atol=3e-3)
+    assert all(any(np.isclose(l, g, rtol=1e-5) for g in cfg.lambdas)
+               for l in lams.tolist())
+    print("bmor_dual OK")
+
+
+if __name__ == "__main__":
+    check_bmor_matches_single_device()
+    check_bmor_multipod_axes()
+    check_mor_distributed_matches_mor()
+    check_bmor_perbatch_lambda()
+    check_bmor_dual_matches_single_device()
+    print("ALL_OK")

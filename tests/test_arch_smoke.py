@@ -1,0 +1,98 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED variant
+of each family runs one forward/train step on CPU with correct output shapes
+and no NaNs; decode families also run prefill + a decode step."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs import smoke
+from repro.data import synthetic
+from repro.models import build_model
+
+BATCH, SEQ = 2, 16
+
+
+def _setup(arch):
+    cfg = smoke(configs.get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = synthetic.make_batch(jax.random.PRNGKey(1), cfg, BATCH, SEQ)
+    return cfg, model, params, batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg, model, params, batch = _setup(arch)
+    logits, aux = model.forward(params, batch)
+    assert logits.shape[0] == BATCH and logits.shape[-1] == cfg.vocab
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_train_step_reduces_loss(arch):
+    """One SGD step on a fixed batch must reduce its loss (end-to-end grad
+    flow through every block type, incl. MoE router and SSD scan)."""
+    cfg, model, params, batch = _setup(arch)
+    loss_fn = lambda p: model.loss(p, batch)  # noqa: E731
+    l0, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(l0)), l0
+    lr = 0.1
+    params2 = jax.tree_util.tree_map(
+        lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+    l1 = loss_fn(params2)
+    assert bool(jnp.isfinite(l1))
+    assert float(l1) < float(l0), (arch, float(l0), float(l1))
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_hidden_state_features(arch):
+    """The brain-encoding feature hook yields (B, S*, d_model) states."""
+    cfg, model, params, batch = _setup(arch)
+    h = model.hidden_states(params, batch)
+    assert h.shape[0] == BATCH and h.shape[-1] == cfg.d_model
+    assert bool(jnp.all(jnp.isfinite(h.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_prefill_and_decode_step(arch):
+    cfg, model, params, _ = _setup(arch)
+    batch = synthetic.make_batch(jax.random.PRNGKey(2), cfg, BATCH, SEQ,
+                                 kind="prefill")
+    logits, cache = model.prefill(params, batch)
+    assert logits.shape == (BATCH, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    pos = jnp.int32(SEQ if cfg.family != "audio" else 1)
+    logits2, cache2 = model.decode_step(params, cache, tok, pos)
+    assert logits2.shape == (BATCH, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits2.astype(jnp.float32))))
+    # cache must be structurally stable across steps (scan/jit friendly)
+    jax.tree_util.tree_map(lambda a, b: None, cache, cache2)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "gemma2-2b", "mamba2-130m",
+                                  "zamba2-2.7b"])
+def test_decode_matches_teacher_forcing(arch):
+    """Greedy decode logits must match full-sequence forward logits at the
+    same positions (cache correctness, incl. ring/window caches and SSM
+    state recurrence vs chunked SSD)."""
+    cfg = smoke(configs.get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (1, SEQ), 0, cfg.vocab,
+                                dtype=jnp.int32)
+    full_logits, _ = model.forward(params, {"tokens": tokens})
+
+    # Drive the cache token by token and compare logits at each position.
+    cache = model.init_cache(1, SEQ)
+    errs = []
+    for i in range(SEQ - 1):
+        step_logits, cache = model.decode_step(
+            params, cache, tokens[:, i][:, None], jnp.int32(i))
+        errs.append(np.max(np.abs(
+            np.asarray(step_logits[:, 0], np.float32) -
+            np.asarray(full_logits[:, i], np.float32))))
+    assert max(errs) < 0.15, (arch, errs)  # bf16 params → loose but real

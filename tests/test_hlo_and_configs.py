@@ -1,0 +1,141 @@
+"""HLO collective parser unit tests + assigned-config validation."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch import hlo_analysis
+from repro.models import build_model, params as P
+
+
+# ---------------------------------------------------------------------------
+# hlo_analysis parser
+# ---------------------------------------------------------------------------
+
+def test_collective_bytes_on_synthetic_hlo():
+    hlo = """
+HloModule m
+ENTRY e {
+  %p = f32[128,64]{1,0} parameter(0)
+  %ar = f32[128,64]{1,0} all-reduce(%p), replica_groups={}
+  %ag = bf16[256,64]{1,0} all-gather(%p), dimensions={0}
+  %aa = f32[32,8]{1,0} all-to-all(%p), dimensions={0}
+  %rs.1 = f32[16,64]{1,0} reduce-scatter(%p), dimensions={0}
+  %cp = u8[1024]{0} collective-permute(%p)
+  ROOT %r = f32[128,64]{1,0} add(%p, %ar)
+}
+"""
+    got = hlo_analysis.collective_bytes(hlo)
+    assert got["all-reduce"] == 128 * 64 * 4
+    assert got["all-gather"] == 256 * 64 * 2
+    assert got["all-to-all"] == 32 * 8 * 4
+    assert got["reduce-scatter"] == 16 * 64 * 4
+    assert got["collective-permute"] == 1024
+
+
+def test_collective_bytes_counts_start_not_done():
+    hlo = """
+  %s = f32[64]{0} all-reduce-start(%p)
+  %d = f32[64]{0} all-reduce-done(%s)
+"""
+    got = hlo_analysis.collective_bytes(hlo)
+    assert got["all-reduce"] == 64 * 4
+
+
+def test_collective_bytes_real_psum():
+    mesh = jax.make_mesh((1,), ("x",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    def f(a):
+        return jax.lax.psum(a, "x")
+
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as Pspec
+    g = shard_map(f, mesh=mesh, in_specs=Pspec(), out_specs=Pspec())
+    hlo = jax.jit(g).lower(jnp.zeros((32, 32), jnp.float32)).compile().as_text()
+    got = hlo_analysis.collective_bytes(hlo)
+    assert got["all-reduce"] >= 32 * 32 * 4
+
+
+def test_roofline_terms_bottleneck_logic():
+    t = hlo_analysis.roofline_terms(197e12, 0.0, 0.0)
+    assert t["bottleneck"] == "compute" and abs(t["t_compute_s"] - 1) < 1e-9
+    t = hlo_analysis.roofline_terms(0.0, 819e9, 0.0)
+    assert t["bottleneck"] == "memory"
+    t = hlo_analysis.roofline_terms(0.0, 0.0, 200e9)
+    assert t["bottleneck"] == "collective" and abs(t["t_collective_s"] - 1) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Assigned configs: exact numbers from the assignment table
+# ---------------------------------------------------------------------------
+
+ASSIGNED = {
+    # arch: (layers*, d_model, heads, kv, d_ff, vocab)
+    "mamba2-130m": (24, 768, None, None, 0, 50_280),
+    "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151_936),
+    "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32_064),
+    "llava-next-34b": (60, 7168, 56, 8, 20_480, 64_000),
+    "gemma-7b": (28, 3072, 16, 16, 24_576, 256_000),
+    "grok-1-314b": (64, 6144, 48, 8, 32_768, 131_072),
+    "gemma3-12b": (48, 3840, 16, 8, 15_360, 262_144),
+    "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256_206),
+    "gemma2-2b": (26, 2304, 8, 4, 9216, 256_000),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_config_matches_assignment(arch):
+    c = configs.get_config(arch)
+    nl, d, h, kv, dff, v = ASSIGNED[arch]
+    assert c.n_layers == nl and c.d_model == d
+    if h is not None:
+        assert c.n_heads == h and c.n_kv_heads == kv
+    assert c.d_ff == dff and c.vocab == v
+    assert c.source, "every config must cite its source"
+
+
+def test_zamba2_layer_accounting():
+    """54 mamba blocks + 9 shared-attn applications = 63 pattern slots."""
+    c = configs.get_config("zamba2-2.7b")
+    n_mamba = c.n_repeats * sum(1 for k in c.pattern if k == "mamba")
+    n_shared = c.n_repeats * sum(1 for k in c.pattern if k == "shared_attn")
+    assert n_mamba == 54 and n_shared == 9
+    assert c.ssm.d_state == 64 and c.d_model == 2560
+
+
+def test_moe_configs():
+    phi = configs.get_config("phi3.5-moe-42b-a6.6b")
+    grok = configs.get_config("grok-1-314b")
+    assert phi.moe.n_experts == 16 and phi.moe.top_k == 2
+    assert grok.moe.n_experts == 8 and grok.moe.top_k == 2
+
+
+def test_pattern_ratios():
+    g3 = configs.get_config("gemma3-12b")
+    assert g3.pattern.count("local_attn") == 5 * g3.pattern.count("global_attn")
+    g2 = configs.get_config("gemma2-2b")
+    assert g2.pattern == ("local_attn", "global_attn")
+
+
+@pytest.mark.parametrize("arch,lo,hi", [
+    ("mamba2-130m", 0.12e9, 0.15e9),
+    ("qwen3-1.7b", 1.5e9, 2.0e9),
+    ("phi3.5-moe-42b-a6.6b", 40e9, 44e9),
+    ("grok-1-314b", 300e9, 330e9),
+    ("gemma2-2b", 2.3e9, 2.8e9),
+])
+def test_param_counts_match_model_names(arch, lo, hi):
+    cfg = configs.get_config(arch)
+    n = P.count_params(build_model(cfg).param_defs())
+    assert lo <= n <= hi, (arch, n)
+
+
+def test_long500k_override_bounds_all_windows():
+    for arch in configs.ARCH_IDS:
+        c = configs.get_config(arch).with_sliding_windows()
+        assert "global_attn" not in c.pattern
+        assert c.window <= 4096
+        if "shared_attn" in c.pattern:
+            assert c.shared_attn_window <= 4096

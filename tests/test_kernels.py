@@ -1,0 +1,134 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode).
+
+Sweeps shapes (aligned and ragged) and dtypes per the kernel test policy.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import gram as gram_k
+from repro.kernels import pearsonr as pearson_k
+from repro.kernels import ref
+from repro.kernels import ridge_solve as solve_k
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    # f32: blocked reduction order differs from the one-shot oracle matmul.
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=2e-4)
+
+
+SHAPES_XTY = [
+    (64, 32, 48),      # ragged, smaller than one tile
+    (300, 129, 70),    # non-multiples of every block dim
+    (1024, 256, 256),  # exact tile multiples
+]
+
+
+@pytest.mark.parametrize("n,p,q", SHAPES_XTY)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_xty_matches_oracle(n, p, q, dtype):
+    kx, ky = jax.random.split(jax.random.PRNGKey(n + p + q))
+    x = _rand(kx, (n, p), dtype)
+    y = _rand(ky, (n, q), dtype)
+    got = gram_k.xty(x, y, block_n=128, block_p=128, interpret=True)
+    want = ref.xty(x, y)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+
+
+@pytest.mark.parametrize("n,p", [(200, 64), (64, 200), (257, 128)])
+def test_gram_symmetric_and_correct(n, p):
+    x = _rand(jax.random.PRNGKey(0), (n, p), jnp.float32)
+    got = np.asarray(gram_k.gram(x, block_n=128, block_p=128, interpret=True))
+    np.testing.assert_allclose(got, np.asarray(ref.gram(x)), rtol=2e-5,
+                               atol=2e-5)
+    np.testing.assert_allclose(got, got.T, rtol=1e-5, atol=1e-5)
+
+
+def test_gram_f32_accumulation_beats_naive_bf16():
+    """The kernel's f32 accumulator must track the float64 answer much more
+    closely than a pure-bf16 matmul does (DESIGN §2 f64→f32 adaptation)."""
+    x64 = np.random.default_rng(0).normal(size=(2048, 64)) * 10.0
+    x = jnp.asarray(x64, jnp.bfloat16)
+    exact = x64.T.astype(np.float64) @ x64.astype(np.float64)
+    kernel = np.asarray(gram_k.gram(x, interpret=True), np.float64)
+    kern_err = np.abs(kernel - exact).mean()
+    # bf16 inputs: error dominated by input rounding, but accumulation must
+    # not blow up with n.
+    assert kern_err / np.abs(exact).mean() < 2e-2
+
+
+SHAPES_SOLVE = [
+    (32, 24, 3),       # tiny ragged
+    (130, 70, 11),     # paper's grid size, ragged dims
+    (256, 128, 4),     # aligned
+]
+
+
+@pytest.mark.parametrize("p,t,r", SHAPES_SOLVE)
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_solve_lambda_grid_matches_oracle(p, t, r, dtype):
+    key = jax.random.PRNGKey(p * t + r)
+    k1, k2, k3 = jax.random.split(key, 3)
+    # Realistic inputs: orthonormal Q and positive eigenvalues.
+    m = jax.random.normal(k1, (p, p), jnp.float32)
+    q, _ = jnp.linalg.qr(m)
+    evals = jnp.abs(jax.random.normal(k2, (p,))) * 10 + 0.1
+    a = _rand(k3, (p, t), dtype)
+    lams = jnp.asarray(np.logspace(-1, 3, r), jnp.float32)
+    got = solve_k.solve_lambda_grid(q.astype(dtype), evals, a, lams,
+                                    block_i=128, block_j=128, block_k=128,
+                                    interpret=True)
+    want = ref.solve_lambda_grid(q, evals, a, lams)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+
+
+def test_solve_lambda_grid_equals_core_ridge_path():
+    """Kernel output must equal the core library's solve_lambda_grid."""
+    from repro.core import ridge
+    key = jax.random.PRNGKey(7)
+    X = jax.random.normal(key, (100, 32), jnp.float32)
+    Y = jax.random.normal(jax.random.PRNGKey(8), (100, 16), jnp.float32)
+    cfg = ridge.RidgeCVConfig(method="eigh", jitter=0.0,
+                              lambdas=(0.1, 1.0, 100.0))
+    f = ridge.factorize(X, cfg)
+    rhs = ridge.gram_xty(X, Y)
+    core = ridge.solve_lambda_grid(f, rhs, cfg.lambdas)
+    a = jnp.matmul(f.basis.T, rhs)
+    kern = solve_k.solve_lambda_grid(f.basis, f.evals, a,
+                                     jnp.asarray(cfg.lambdas), interpret=True)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(core),
+                               rtol=3e-4, atol=3e-4)
+
+
+SHAPES_PEARSON = [(50, 17), (1000, 128), (333, 257)]
+
+
+@pytest.mark.parametrize("n,t", SHAPES_PEARSON)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pearson_matches_oracle(n, t, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(n * t))
+    yt = _rand(k1, (n, t), dtype)
+    yp = 0.5 * yt + 0.5 * _rand(k2, (n, t), dtype)
+    got = pearson_k.pearson_r(yt, yp, block_n=128, block_t=128,
+                              interpret=True)
+    want = ref.pearson_r(yt, yp)
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol)
+    assert bool(jnp.all(jnp.abs(got) <= 1.0 + 1e-4))
+
+
+def test_pearson_perfect_correlation():
+    y = _rand(jax.random.PRNGKey(0), (200, 64), jnp.float32)
+    r = pearson_k.pearson_r(y, 2.0 * y + 1.0, interpret=True)
+    np.testing.assert_allclose(np.asarray(r), 1.0, atol=1e-4)
+    r_neg = pearson_k.pearson_r(y, -y, interpret=True)
+    np.testing.assert_allclose(np.asarray(r_neg), -1.0, atol=1e-4)

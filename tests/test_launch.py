@@ -1,0 +1,22 @@
+"""Launch layer: sharded train/decode steps + microbatch equivalence,
+run in a subprocess with virtual devices (1-device policy here)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.timeout(900)
+def test_launch_distributed_checks():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable,
+         os.path.join(REPO, "tests", "helpers", "launch_checks.py")],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert proc.returncode == 0, proc.stdout[-3000:] + "\n" + proc.stderr[-3000:]
+    assert "ALL_OK" in proc.stdout

@@ -1,0 +1,169 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import complexity, ridge, scoring
+from repro.core.complexity import RidgeWorkload
+from repro.models import layers
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Ridge algebra
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), n=st.integers(20, 60),
+       p=st.integers(4, 24), lam_pair=st.tuples(st.floats(0.01, 10.0),
+                                                st.floats(10.1, 1e4)))
+def test_ridge_shrinkage_monotone(seed, n, p, lam_pair):
+    """Larger λ ⇒ smaller coefficient norm (shrinkage)."""
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+    Y = jnp.asarray(rng.normal(size=(n, 3)), jnp.float32)
+    cfg = ridge.RidgeCVConfig(method="eigh", jitter=0.0)
+    f = ridge.factorize(X, cfg)
+    rhs = ridge.gram_xty(X, Y)
+    lam1, lam2 = lam_pair
+    w1 = ridge.solve(f, rhs, jnp.float32(lam1))
+    w2 = ridge.solve(f, rhs, jnp.float32(lam2))
+    assert float(jnp.linalg.norm(w2)) <= float(jnp.linalg.norm(w1)) + 1e-5
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), n=st.integers(16, 48),
+       p=st.integers(4, 16))
+def test_ridge_interpolates_ols_at_zero(seed, n, p):
+    """λ→0 recovers least squares (well-conditioned X)."""
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(n, p)) + np.eye(n, p) * 3, jnp.float32)
+    Y = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
+    cfg = ridge.RidgeCVConfig(method="eigh", jitter=0.0)
+    f = ridge.factorize(X, cfg)
+    W = ridge.solve(f, ridge.gram_xty(X, Y), jnp.float32(1e-6))
+    W_ols, *_ = np.linalg.lstsq(np.asarray(X, np.float64),
+                                np.asarray(Y, np.float64), rcond=None)
+    np.testing.assert_allclose(np.asarray(W), W_ols, rtol=2e-2, atol=2e-2)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16))
+def test_ridge_target_permutation_equivariance(seed):
+    """Permuting target columns permutes the weight columns (multi-target
+    mutualisation never mixes targets)."""
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(40, 8)), jnp.float32)
+    Y = jnp.asarray(rng.normal(size=(40, 6)), jnp.float32)
+    perm = rng.permutation(6)
+    cfg = ridge.RidgeCVConfig(method="eigh", jitter=0.0)
+    f = ridge.factorize(X, cfg)
+    W = ridge.solve(f, ridge.gram_xty(X, Y), jnp.float32(3.0))
+    Wp = ridge.solve(f, ridge.gram_xty(X, Y[:, perm]), jnp.float32(3.0))
+    np.testing.assert_allclose(np.asarray(Wp), np.asarray(W)[:, perm],
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Scoring
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), a=st.floats(0.1, 10.0),
+       b=st.floats(-5.0, 5.0))
+def test_pearson_affine_invariance(seed, a, b):
+    rng = np.random.default_rng(seed)
+    yt = jnp.asarray(rng.normal(size=(50, 4)), jnp.float32)
+    yp = jnp.asarray(rng.normal(size=(50, 4)), jnp.float32)
+    r0 = scoring.pearson_r(yt, yp)
+    r1 = scoring.pearson_r(yt, a * yp + b)
+    np.testing.assert_allclose(np.asarray(r0), np.asarray(r1), atol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16))
+def test_pearson_bounded(seed):
+    rng = np.random.default_rng(seed)
+    yt = jnp.asarray(rng.normal(size=(30, 5)), jnp.float32)
+    yp = jnp.asarray(rng.normal(size=(30, 5)), jnp.float32)
+    r = np.asarray(scoring.pearson_r(yt, yp))
+    assert np.all(np.abs(r) <= 1.0 + 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Complexity model (paper §3) — order relations hold for ALL valid workloads
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(n=st.integers(64, 10_000), p=st.integers(8, 512),
+       t=st.integers(16, 100_000), c=st.integers(2, 64))
+def test_complexity_order_relations(n, p, t, c):
+    w = RidgeWorkload(n=n, p=p, t=t)
+    if c <= t:
+        assert complexity.t_bmor(w, c) <= complexity.t_mor(w, c) + 1e-6
+    assert complexity.t_bmor(w, c) < complexity.t_ridge_single(w) + \
+        complexity.t_m(w)  # B-MOR never worse than single + one refactor
+    # Eq. check: T_MOR − T_B-MOR == (t/c − 1)·T_M
+    gap = complexity.t_mor(w, c) - complexity.t_bmor(w, c)
+    np.testing.assert_allclose(gap, (t / c - 1) * complexity.t_m(w),
+                               rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Model layers
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), pos=st.integers(0, 10_000))
+def test_rope_preserves_norm(seed, pos):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(1, 3, 2, 16)), jnp.float32)
+    positions = jnp.full((1, 3), pos, jnp.int32)
+    y = layers.rope(x, positions, 10_000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y)),
+                               np.linalg.norm(np.asarray(x)), rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), cap=st.floats(1.0, 100.0))
+def test_softcap_bounded_and_monotone(seed, cap):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(np.sort(rng.normal(size=(64,)) * 100), jnp.float32)
+    y = np.asarray(layers._softcap(x, cap))
+    assert np.all(np.abs(y) <= cap + 1e-4)
+    assert np.all(np.diff(y) >= -1e-5)
+
+
+def test_attention_causality():
+    """Future-token perturbations must not change past outputs."""
+    from repro import configs
+    from repro.models import build_model
+    cfg = configs.smoke(configs.get_config("qwen3-1.7b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0, cfg.vocab,
+                             dtype=jnp.int32)
+    logits0, _ = model.forward(params, {"tokens": tok})
+    tok2 = tok.at[:, 8:].set((tok[:, 8:] + 7) % cfg.vocab)
+    logits1, _ = model.forward(params, {"tokens": tok2})
+    np.testing.assert_allclose(np.asarray(logits0[:, :8], np.float32),
+                               np.asarray(logits1[:, :8], np.float32),
+                               atol=1e-3)
+
+
+def test_ssm_causality():
+    from repro import configs
+    from repro.models import build_model
+    cfg = configs.smoke(configs.get_config("mamba2-130m"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0, cfg.vocab,
+                             dtype=jnp.int32)
+    logits0, _ = model.forward(params, {"tokens": tok})
+    tok2 = tok.at[:, 10:].set((tok[:, 10:] + 3) % cfg.vocab)
+    logits1, _ = model.forward(params, {"tokens": tok2})
+    np.testing.assert_allclose(np.asarray(logits0[:, :10], np.float32),
+                               np.asarray(logits1[:, :10], np.float32),
+                               atol=1e-3)

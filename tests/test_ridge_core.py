@@ -1,0 +1,79 @@
+"""Unit tests for the mutualised RidgeCV core (paper §2.3.1, §3)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import ridge
+from repro.core.ridge import RidgeCVConfig
+
+
+def _make_problem(key, n=120, p=24, t=16, noise=0.05, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    X = jax.random.normal(k1, (n, p), dtype)
+    W = jax.random.normal(k2, (p, t), dtype) / np.sqrt(p)
+    Y = X @ W + noise * jax.random.normal(k3, (n, t), dtype)
+    return X, Y, W
+
+
+def _ridge_closed_form(X, Y, lam):
+    """float64 numpy oracle: W = (XᵀX+λI)⁻¹XᵀY."""
+    X = np.asarray(X, np.float64)
+    Y = np.asarray(Y, np.float64)
+    p = X.shape[1]
+    return np.linalg.solve(X.T @ X + lam * np.eye(p), X.T @ Y)
+
+
+@pytest.mark.parametrize("method,n,p", [("eigh", 120, 24), ("dual", 24, 64)])
+def test_solve_matches_closed_form(method, n, p):
+    X, Y, _ = _make_problem(jax.random.PRNGKey(0), n=n, p=p, t=8)
+    cfg = RidgeCVConfig(method=method, jitter=0.0)
+    lam = 10.0
+    factors = ridge.factorize(X, cfg)
+    rhs = ridge.gram_xty(X, Y) if factors.primal else Y
+    W = ridge.solve(factors, rhs, jnp.float32(lam),
+                    X=None if factors.primal else X)
+    W_ref = _ridge_closed_form(X, Y, lam)
+    np.testing.assert_allclose(np.asarray(W), W_ref, rtol=2e-3, atol=2e-3)
+
+
+def test_primal_and_dual_agree():
+    X, Y, _ = _make_problem(jax.random.PRNGKey(1), n=60, p=40, t=4)
+    lam = jnp.float32(50.0)
+    fp = ridge.factorize(X, RidgeCVConfig(method="eigh", jitter=0.0))
+    fd = ridge.factorize(X, RidgeCVConfig(method="dual", jitter=0.0))
+    Wp = ridge.solve(fp, ridge.gram_xty(X, Y), lam)
+    Wd = ridge.solve(fd, Y, lam, X=X)
+    np.testing.assert_allclose(np.asarray(Wp), np.asarray(Wd),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_lambda_grid_matches_individual_solves():
+    X, Y, _ = _make_problem(jax.random.PRNGKey(2), n=100, p=16, t=8)
+    cfg = RidgeCVConfig(method="eigh", jitter=0.0)
+    factors = ridge.factorize(X, cfg)
+    rhs = ridge.gram_xty(X, Y)
+    grid = (0.1, 1.0, 100.0)
+    Ws = ridge.solve_lambda_grid(factors, rhs, grid)
+    for i, lam in enumerate(grid):
+        Wi = ridge.solve(factors, rhs, jnp.float32(lam))
+        np.testing.assert_allclose(np.asarray(Ws[i]), np.asarray(Wi),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_ridge_cv_selects_reasonable_lambda_and_recovers_weights():
+    X, Y, W_true = _make_problem(jax.random.PRNGKey(3), n=300, p=24, t=12,
+                                 noise=0.01)
+    res = ridge.ridge_cv(X, Y, RidgeCVConfig(n_folds=4))
+    # Low-noise, well-conditioned → small λ must win and weights ≈ truth.
+    assert float(res.best_lambda) <= 1.0
+    np.testing.assert_allclose(np.asarray(res.weights), np.asarray(W_true),
+                               rtol=0.1, atol=0.05)
+    assert res.cv_scores.shape == (len(ridge.PAPER_LAMBDA_GRID),)
+    assert bool(jnp.all(jnp.isfinite(res.cv_scores)))
+
+
+def test_high_noise_prefers_larger_lambda():
+    X, Y, _ = _make_problem(jax.random.PRNGKey(4), n=40, p=32, t=8, noise=3.0)
+    res = ridge.ridge_cv(X, Y, RidgeCVConfig(n_folds=4))
+    assert float(res.best_lambda) >= 100.0

@@ -1,0 +1,86 @@
+"""Tests for scoring metrics and the paper's §3 complexity model."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import complexity, ridge, scoring
+from repro.core.complexity import RidgeWorkload
+
+
+def test_pearson_r_matches_numpy():
+    rng = np.random.default_rng(0)
+    Yt = rng.normal(size=(50, 7)).astype(np.float32)
+    Yp = rng.normal(size=(50, 7)).astype(np.float32)
+    r = np.asarray(scoring.pearson_r(jnp.asarray(Yt), jnp.asarray(Yp)))
+    ref = np.array([np.corrcoef(Yt[:, i], Yp[:, i])[0, 1] for i in range(7)])
+    np.testing.assert_allclose(r, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_perfect_prediction_scores_one():
+    Y = jnp.asarray(np.random.default_rng(1).normal(size=(30, 3)),
+                    dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(scoring.pearson_r(Y, Y)), 1.0,
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(scoring.r2_score(Y, Y)), 1.0,
+                               atol=1e-5)
+
+
+def test_null_permutation_collapses_scores():
+    """Paper §4.2: shuffled features → encoding accuracy collapses."""
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    n, p, t = 400, 16, 8
+    X = jax.random.normal(k1, (n, p), jnp.float32)
+    W = jax.random.normal(k2, (p, t), jnp.float32)
+    Y = X @ W + 0.1 * jax.random.normal(k3, (n, t))
+    res = ridge.ridge_cv(X, Y)
+    aligned = scoring.pearson_r(Y, ridge.predict(X, res.weights))
+    null = scoring.null_permutation_scores(k3, X, Y, res.weights, n_perms=5)
+    assert float(jnp.mean(aligned)) > 0.9
+    assert float(jnp.max(jnp.abs(null))) < 0.3
+    assert float(jnp.mean(jnp.abs(null))) < 0.1
+
+
+def test_split_indices_partition():
+    tr, te = scoring.train_test_split_indices(jax.random.PRNGKey(0), 100, 0.1)
+    assert te.shape[0] == 10 and tr.shape[0] == 90
+    assert len(set(np.asarray(tr)) | set(np.asarray(te))) == 100
+
+
+# ---------------------------------------------------------------------------
+# Paper §3 complexity model
+# ---------------------------------------------------------------------------
+
+def test_bmor_beats_mor_by_tm_overhead():
+    """T_MOR − T_B-MOR = (t/c − 1)·T_M (paper §3.3)."""
+    w = RidgeWorkload(n=1000, p=64, t=512, r=11)
+    for c in (2, 8, 32):
+        gap = complexity.t_mor(w, c) - complexity.t_bmor(w, c)
+        expected = (w.t / c - 1.0) * complexity.t_m(w)
+        np.testing.assert_allclose(gap, expected, rtol=1e-12)
+
+
+def test_bmor_faster_than_single_thread_when_c_gt_1():
+    w = complexity.PAPER_WORKLOADS["whole_brain_bmor"]
+    assert complexity.t_bmor(w, 8) < complexity.t_ridge_single(w)
+    assert complexity.t_bmor(w, 1) >= complexity.t_ridge_single(w) * 0.99
+
+
+def test_mor_impractical_at_paper_scale():
+    """Fig. 8: MOR on 8 nodes ≫ single-node mutualised ridge (~1000s vs ~1s)."""
+    w = complexity.PAPER_WORKLOADS["whole_brain_mor"]
+    assert complexity.t_mor(w, 8) > 10 * complexity.t_ridge_single(w)
+
+
+def test_svd_mutualisation_wins():
+    w = RidgeWorkload(n=69_202, p=16_384, t=444, r=11)
+    assert complexity.t_m(w) < complexity.t_m_naive(w)
+
+
+def test_speedup_saturates_with_c():
+    """DSU plateaus (paper Fig. 10): going 64→512 workers gains < 2x."""
+    w = complexity.PAPER_WORKLOADS["whole_brain_bmor"]
+    s64 = complexity.predicted_speedup_bmor(w, 64)
+    s512 = complexity.predicted_speedup_bmor(w, 512)
+    assert s512 / s64 < 2.0
+    assert s512 > s64  # but still monotone
