@@ -1,5 +1,11 @@
 """Distributed benchmark rows (fig8/9/10) — run by benchmarks.run in a
-subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8."""
+subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8.
+
+Mesh construction and data placement go through ``encoding.ShardingPlan``;
+the B-MOR scaling rows (fig9/10) time the full ``BrainEncoder`` fit path —
+what a user actually calls — while fig8's MOR row keeps the taskwise
+per-target dispatch that reproduces the paper's Dask cost semantics.
+"""
 import os
 
 os.environ.setdefault("XLA_FLAGS",
@@ -10,9 +16,9 @@ import time
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
 
 from repro.core import bmor, complexity, mor, ridge
+from repro.encoding import BrainEncoder, ShardingPlan
 
 
 def timed(fn, reps=3):
@@ -21,11 +27,6 @@ def timed(fn, reps=3):
     for _ in range(reps):
         jax.block_until_ready(fn())
     return (time.time() - t0) / reps * 1e6  # µs
-
-
-def mesh_with(model: int, data: int = 1):
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
 
 
 def main():
@@ -52,16 +53,16 @@ def main():
     # and gets hoisted, which silently removes the redundancy the paper
     # measures (recorded finding — EXPERIMENTS §Paper-validation).
     c = 8
-    m8 = mesh_with(c)
     t_small = 64
     Ys = Y[:, :t_small]
     jax.block_until_ready(mor.mor_fit_taskwise(X, Ys[:, :1], cfg))  # compile
     t0 = time.time()
     jax.block_until_ready(mor.mor_fit_taskwise(X, Ys, cfg))
     us_mor = (time.time() - t0) * 1e6
-    Xs8 = jax.device_put(X, NamedSharding(m8, P("data", None)))
-    Ys8 = jax.device_put(Ys, NamedSharding(m8, P("data", "model")))
-    us_bmor_small = timed(lambda: bmor.bmor_fit(Xs8, Ys8, m8, cfg=cfg),
+    plan8 = ShardingPlan(data_shards=1, target_shards=c)
+    mesh8 = plan8.build_mesh()
+    Xs8, Ys8 = plan8.place(mesh8, X, Ys)
+    us_bmor_small = timed(lambda: bmor.bmor_fit(Xs8, Ys8, mesh8, cfg=cfg),
                           reps=2)
     w_small = complexity.RidgeWorkload(n=n, p=p, t=t_small,
                                        r=len(cfg.lambdas),
@@ -75,13 +76,13 @@ def main():
           f"model_work_ratio={model_work_ratio:.1f};t={t_small};c={c};"
           f"mor=taskwise")
 
-    # fig9/10: B-MOR scaling across target shards (ideal wall = work/c).
+    # fig9/10: B-MOR scaling across target shards (ideal wall = work/c) —
+    # timed through the estimator facade (fit = place + bmor_fit + unpad).
     base_wall = None
     for c in (1, 2, 4, 8):
-        mesh = mesh_with(c)
-        Xs = jax.device_put(X, NamedSharding(mesh, P("data", None)))
-        Ysh = jax.device_put(Y, NamedSharding(mesh, P("data", "model")))
-        us = timed(lambda: bmor.bmor_fit(Xs, Ysh, mesh, cfg=cfg), reps=2)
+        enc = BrainEncoder(solver="bmor", data_shards=1, target_shards=c,
+                           n_folds=cfg.n_folds)
+        us = timed(lambda: enc.fit(X, Y).weights_, reps=2)
         wall = us / c
         base_wall = base_wall or wall
         model_scaling = complexity.t_bmor(w, 1) / complexity.t_bmor(w, c)
@@ -91,6 +92,16 @@ def main():
               f"scaling_measured={base_wall/wall:.2f};"
               f"scaling_model={model_scaling:.2f};"
               f"DSU_model_vs_single={complexity.predicted_speedup_bmor(w, c):.2f}")
+
+    # dispatch sanity row: what solver="auto" would run at this shape, and
+    # the dispatch overhead (resolution only — no fit).
+    from repro.encoding import EncoderConfig, resolve
+    t0 = time.time()
+    decision = resolve(EncoderConfig(), n, p, t, jax.device_count())
+    us_dispatch = (time.time() - t0) * 1e6
+    print(f"dispatch_auto,{us_dispatch:.1f},"
+          f"solver={decision.solver};layout={decision.data_shards}x"
+          f"{decision.target_shards};single_ridge_us={us_single:.1f}")
 
 
 if __name__ == "__main__":

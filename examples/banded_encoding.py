@@ -6,8 +6,9 @@ gives each space its own λ, letting cross-validation *select* the
 informative space instead of letting a shared λ over-shrink it.
 
 Here: band 1 = 'visual network features' (drives the simulated fMRI),
-band 2 = 'audio envelope features' (irrelevant).  Banded RidgeCV should
-shrink band 2 hard and beat shared-λ ridge on held-out correlation.
+band 2 = 'audio envelope features' (irrelevant).  Both fits go through
+``BrainEncoder`` — setting ``bands=`` is all it takes to switch the
+dispatcher onto the banded solver.
 
 Run:  PYTHONPATH=src python examples/banded_encoding.py
 """
@@ -15,8 +16,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import banded, ridge, scoring
-from repro.core.banded import BandedConfig
+from repro.encoding import BrainEncoder
+from repro.core import scoring
 
 
 def main():
@@ -33,29 +34,27 @@ def main():
 
     tr, te = scoring.train_test_split_indices(jax.random.PRNGKey(5), n)
 
-    # Shared-λ baseline (the paper's RidgeCV).
-    res_shared = ridge.ridge_cv(X[tr], Y[tr])
-    r_shared = scoring.pearson_r(Y[te], ridge.predict(X[te],
-                                                      res_shared.weights))
+    # Shared-λ baseline (the paper's RidgeCV) through the same estimator.
+    shared = BrainEncoder(solver="ridge").fit(X[tr], Y[tr])
+    r_shared = shared.score(X[te], Y[te])
 
-    # Banded: one λ per feature space, random-search CV.
-    cfg = BandedConfig(bands=(p_vis, p_aud), n_candidates=32, n_folds=3)
-    res_banded = banded.banded_ridge_cv(jax.random.PRNGKey(6), X[tr], Y[tr],
-                                        cfg)
-    r_banded = scoring.pearson_r(Y[te], ridge.predict(X[te],
-                                                      res_banded.weights))
+    # Banded: one λ per feature space, random-search CV — just set bands=.
+    banded = BrainEncoder(bands=(p_vis, p_aud), n_band_candidates=32,
+                          n_folds=3, seed=6).fit(X[tr], Y[tr])
+    assert banded.report_.decision.solver == "banded"
+    r_banded = banded.score(X[te], Y[te])
 
-    lam_vis, lam_aud = [float(v) for v in res_banded.band_lambdas]
-    print(f"shared-λ RidgeCV: λ = {float(res_shared.best_lambda):8.1f}   "
-          f"test r = {float(jnp.mean(r_shared)):.4f}")
+    lam_vis, lam_aud = [float(v) for v in banded.report_.band_lambdas]
+    print(f"shared-λ RidgeCV: λ = {float(shared.report_.best_lambda[0]):8.1f}"
+          f"   test r = {r_shared.mean():.4f}")
     print(f"banded RidgeCV:   λ_visual = {lam_vis:8.1f}  "
-          f"λ_audio = {lam_aud:8.1f}   test r = {float(jnp.mean(r_banded)):.4f}")
+          f"λ_audio = {lam_aud:8.1f}   test r = {r_banded.mean():.4f}")
     print(f"band norms: |W_visual| = "
-          f"{float(jnp.linalg.norm(res_banded.weights[:p_vis])):.2f}, "
+          f"{float(jnp.linalg.norm(banded.weights_[:p_vis])):.2f}, "
           f"|W_audio| = "
-          f"{float(jnp.linalg.norm(res_banded.weights[p_vis:])):.2f}")
+          f"{float(jnp.linalg.norm(banded.weights_[p_vis:])):.2f}")
     assert lam_aud > lam_vis, "irrelevant band must be shrunk harder"
-    assert float(jnp.mean(r_banded)) >= float(jnp.mean(r_shared)) - 0.01
+    assert float(r_banded.mean()) >= float(r_shared.mean()) - 0.01
     print("OK: banded ridge selected the informative feature space.")
 
 

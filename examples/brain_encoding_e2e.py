@@ -36,10 +36,10 @@ def main():
     import jax
     import jax.numpy as jnp
     import numpy as np
-    from jax.sharding import NamedSharding, PartitionSpec as P
     from repro import configs
-    from repro.core import bmor, ridge, scoring
+    from repro.core import scoring
     from repro.data import synthetic
+    from repro.encoding import BrainEncoder
     from repro.launch import mesh as mesh_lib
     from repro.launch.steps import build_train_step
     from repro.models import build_model
@@ -99,16 +99,15 @@ def main():
 
     tr, te = scoring.train_test_split_indices(jax.random.PRNGKey(9),
                                               X.shape[0])
-    n_data = mesh.shape["data"]
-    keep = (tr.shape[0] // n_data) * n_data
-    Xs = jax.device_put(X[tr][:keep], NamedSharding(mesh, P("data", None)))
-    Ys = jax.device_put(Y[tr][:keep],
-                        NamedSharding(mesh, P("data", "model")))
-    res = bmor.bmor_fit(Xs, Ys, mesh)
-    r = np.asarray(scoring.pearson_r(Y[te], ridge.predict(X[te],
-                                                          res.weights)))
+    # The estimator owns row rounding, mesh construction, and device_put —
+    # solver + layout resolved by dispatch (B-MOR on the 8 virtual devices).
+    enc = BrainEncoder().fit(X[tr], Y[tr])
+    r = enc.score(X[te], Y[te])
     m = np.asarray(responsive)
-    print(f"[encode] per-batch λ = {np.asarray(res.best_lambda)}")
+    d = enc.report_.decision
+    print(f"[encode] dispatch: {d.solver} mesh={d.data_shards}x"
+          f"{d.target_shards}")
+    print(f"[encode] per-batch λ = {enc.report_.best_lambda}")
     print(f"[encode] test r — responsive {r[m].mean():.3f}, "
           f"non-responsive {r[~m].mean():.3f}")
     assert r[m].mean() > 0.3, "encoding failed to capture planted structure"

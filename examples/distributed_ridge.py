@@ -3,6 +3,10 @@ MOR vs B-MOR on virtual devices — the paper's three implementations side by
 side (Figures 8-10 in miniature), with wall-clock timings and the §3
 complexity-model predictions.
 
+All three run through the same ``BrainEncoder`` estimator; only the
+``solver=`` override differs — the mesh construction and data placement that
+used to be copied into this file now live in ``encoding.sharding``.
+
 Run:  PYTHONPATH=src python examples/distributed_ridge.py
 """
 import os
@@ -25,8 +29,8 @@ def main():
     import jax
     import jax.numpy as jnp
     import numpy as np
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    from repro.core import bmor, complexity, mor, ridge
+    from repro.core import complexity, ridge
+    from repro.encoding import BrainEncoder
 
     n, p, t = 512, 64, 512
     key = jax.random.PRNGKey(0)
@@ -51,21 +55,20 @@ def main():
           "work / 8.\n")
 
     # 1. Mutualised single-shard RidgeCV (scikit-learn analog).
-    t_single = timed(lambda: ridge.ridge_cv(X, Y, cfg))
+    single = BrainEncoder(solver="ridge", n_folds=3)
+    t_single = timed(lambda: single.fit(X, Y).weights_)
     print(f"RidgeCV (1 shard, mutualised):    work {t_single*1e3:8.1f} ms")
 
     # 2. MOR across 8 shards (per-target recompute — paper Fig. 8).
-    mesh = jax.make_mesh((1, c), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    t_mor = timed(lambda: mor.mor_fit_distributed(X, Y, mesh, cfg=cfg),
-                  reps=1)
+    mor_enc = BrainEncoder(solver="mor", target_shards=c, n_folds=3)
+    t_mor = timed(lambda: mor_enc.fit(X, Y).weights_, reps=1)
     print(f"MOR ({c} shards, t·T_M overhead):   work {t_mor*1e3:8.1f} ms   "
           f"wall≈{t_mor/c*1e3:7.1f} ms")
 
     # 3. B-MOR across 8 target shards (paper Alg. 1) — same t, same c.
-    Xs = jax.device_put(X, NamedSharding(mesh, P("data", None)))
-    Ys = jax.device_put(Y, NamedSharding(mesh, P("data", "model")))
-    t_bmor = timed(lambda: bmor.bmor_fit(Xs, Ys, mesh, cfg=cfg))
+    bmor_enc = BrainEncoder(solver="bmor", data_shards=1, target_shards=c,
+                            n_folds=3)
+    t_bmor = timed(lambda: bmor_enc.fit(X, Y).weights_)
     print(f"B-MOR ({c} target shards):          work {t_bmor*1e3:8.1f} ms   "
           f"wall≈{t_bmor/c*1e3:7.1f} ms")
 

@@ -1,6 +1,7 @@
 """Multi-subject brain encoding — the paper's N=6 CNeuroMod design (Fig. 4).
 
-One B-MOR encoding model per subject on subject-specific synthetic data;
+One ``BrainEncoder`` per subject on subject-specific synthetic data (solver
+and mesh layout resolved by dispatch — B-MOR on the 8 virtual devices);
 reports the per-subject encoding maps (responsive vs non-responsive r) and
 the cross-subject consistency the paper highlights in §4.1 ("brain encoding
 maps were highly consistent across subjects").
@@ -26,43 +27,35 @@ def _reexec_with_devices(n: int = 8):
 def main():
     _reexec_with_devices(8)
     import jax
-    import jax.numpy as jnp
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    from repro.core import bmor, ridge, scoring
     from repro.data import fmri
-    from repro.launch import mesh as mesh_lib
+    from repro.encoding import pipeline
 
-    mesh = mesh_lib.make_host_mesh(model=2)
-    n_data = mesh.shape["data"]
     rows = []
+    decision = None
     for i, subject in enumerate([f"sub-0{k}" for k in range(1, 7)]):
         spec = fmri.SubjectSpec(subject=subject, n=600, p=96, t=256,
                                 frac_responsive=0.25,
                                 snr_responsive=1.5 + 0.2 * i)  # subj. variety
         X, Y, mask = fmri.generate(jax.random.fold_in(jax.random.PRNGKey(0),
                                                       i), spec)
-        Y = fmri.detrend(Y)
-        tr, te = scoring.train_test_split_indices(
-            jax.random.fold_in(jax.random.PRNGKey(1), i), spec.n)
-        keep = (tr.shape[0] // n_data) * n_data
-        Xs = jax.device_put(X[tr][:keep],
-                            NamedSharding(mesh, P("data", None)))
-        Ys = jax.device_put(Y[tr][:keep],
-                            NamedSharding(mesh, P("data", "model")))
-        res = bmor.bmor_fit(Xs, Ys, mesh)
-        r = np.asarray(scoring.pearson_r(Y[te],
-                                         ridge.predict(X[te], res.weights)))
+        # detrend → standardize → split → fit → evaluate, per subject.
+        state = pipeline.run(X, Y, seed=i, n_perms=3)
+        decision = state.report.decision
+        r = state.evaluation.pearson_r
         m = np.asarray(mask)
         rows.append((subject, r[m].mean(), r[~m].mean(), m))
         print(f"{subject}: r_responsive={r[m].mean():.3f}  "
               f"r_other={r[~m].mean():+.3f}  "
-              f"λ per batch={np.asarray(res.best_lambda)}")
+              f"λ per batch={state.report.best_lambda}")
+
+    print(f"\ndispatch (all subjects): {decision.solver} "
+          f"mesh={decision.data_shards}x{decision.target_shards}")
 
     # Cross-subject consistency (§4.1): the responsive 'region' is the same
     # target set for every subject — maps must agree.
     resp = np.array([a for _, a, _, _ in rows])
     other = np.array([b for _, _, b, _ in rows])
-    print(f"\nacross subjects: responsive r = {resp.mean():.3f} ± "
+    print(f"across subjects: responsive r = {resp.mean():.3f} ± "
           f"{resp.std():.3f};  non-responsive = {other.mean():+.3f}")
     assert resp.min() > 0.3 and abs(other).max() < 0.1
     print("OK: encoding maps are consistent across all 6 subjects "

@@ -1,42 +1,39 @@
-"""Quickstart: the paper's pipeline in 60 lines.
+"""Quickstart: the paper's pipeline through the unified estimator API.
 
 1. Make CNeuroMod-shaped synthetic data (stimulus features X, fMRI Y).
-2. Fit the SVD/eigh-mutualised multi-target RidgeCV (paper §2.3.1).
-3. Evaluate with Pearson r on a held-out split + null-permutation control.
+2. ``pipeline.run`` — detrend (paper §2.1.4) → 90/10 split (§2.2.4) →
+   standardize (train-fitted) → ``BrainEncoder`` fit (solver picked by
+   complexity-driven dispatch; mutualised RidgeCV on one device) →
+   Pearson-r evaluation with the §4.2 null-permutation control.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ridge, scoring
 from repro.data import fmri
+from repro.encoding import pipeline
 
 
 def main():
     # CNeuroMod-shaped data: 25% of targets are 'visual cortex' (responsive).
     spec = fmri.SubjectSpec(n=1200, p=128, t=512, frac_responsive=0.25)
     X, Y, responsive = fmri.generate(jax.random.PRNGKey(0), spec)
-    Y = fmri.detrend(Y)  # regress out slow drifts (paper §2.1.4)
 
-    # Paper §2.2.4: 90/10 random split, λ grid CV inside the training set.
-    tr, te = scoring.train_test_split_indices(jax.random.PRNGKey(1), spec.n)
-    res = ridge.ridge_cv(X[tr], Y[tr])
-    print(f"selected λ = {float(res.best_lambda)} "
-          f"(grid: {ridge.PAPER_LAMBDA_GRID})")
+    # The whole paper pipeline in one call — no solver choice, no mesh
+    # boilerplate; dispatch resolves from (n, p, t, device_count).
+    state = pipeline.run(X, Y, n_perms=10)
+    report, ev = state.report, state.evaluation
 
-    preds = ridge.predict(X[te], res.weights)
-    r = np.asarray(scoring.pearson_r(Y[te], preds))
+    d = report.decision
+    print(f"dispatch picked: {d.solver} ({d.rationale})")
+    print(f"selected λ = {report.best_lambda} (grid: {report.lambdas})")
+
     m = np.asarray(responsive)
-    print(f"test Pearson r — responsive: {r[m].mean():.3f}, "
-          f"non-responsive: {r[~m].mean():.3f}")
-
-    null = scoring.null_permutation_scores(jax.random.PRNGKey(2), X[te],
-                                           Y[te], res.weights, n_perms=10)
-    print(f"null |r| (shuffled stimuli, paper §4.2): "
-          f"{float(jnp.mean(jnp.abs(null))):.4f}")
-    assert r[m].mean() > 5 * float(jnp.mean(jnp.abs(null)))
+    print(f"test Pearson r — responsive: {ev.pearson_r[m].mean():.3f}, "
+          f"non-responsive: {ev.pearson_r[~m].mean():.3f}")
+    print(f"null |r| (shuffled stimuli, paper §4.2): {ev.null_abs_r:.4f}")
+    assert ev.pearson_r[m].mean() > 5 * ev.null_abs_r
     print("OK: encoding is significant vs the null, as in the paper.")
 
 

@@ -1,0 +1,41 @@
+"""repro — scaling up ridge regression for brain encoding (JAX/Pallas).
+
+Public surface:
+
+* ``repro.encoding`` — the estimator API (``BrainEncoder``,
+  ``EncoderConfig``, ``ShardingPlan``, ``pipeline``).  Start here.
+* ``repro.core`` — documented low-level solver layer (``ridge_cv``,
+  ``bmor_fit``, ``banded_ridge_cv``, the §3 ``complexity`` model).
+* ``repro.data`` / ``repro.models`` / ``repro.launch`` — data generators,
+  feature-extractor backbones, and drivers.
+
+Exports are lazy (PEP 562) so that ``import repro`` never initialises JAX
+device state — launchers must be able to set ``XLA_FLAGS`` first.
+"""
+from __future__ import annotations
+
+import importlib
+
+_LAZY = {
+    "BrainEncoder": ("repro.encoding.estimator", "BrainEncoder"),
+    "EncoderConfig": ("repro.encoding.config", "EncoderConfig"),
+    "EncodingReport": ("repro.encoding.estimator", "EncodingReport"),
+    "EvaluationReport": ("repro.encoding.estimator", "EvaluationReport"),
+    "ShardingPlan": ("repro.encoding.sharding", "ShardingPlan"),
+    "encoding": ("repro.encoding", None),
+    "core": ("repro.core", None),
+    "configs": ("repro.configs", None),
+    "data": ("repro.data", None),
+    "launch": ("repro.launch", None),
+    "models": ("repro.models", None),
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name: str):
+    if name not in _LAZY:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}")
+    module, attr = _LAZY[name]
+    mod = importlib.import_module(module)
+    return mod if attr is None else getattr(mod, attr)

@@ -1,13 +1,23 @@
-"""Core library: the paper's contribution — scalable multi-target ridge.
+"""Low-level solver layer: the paper's scalable multi-target ridge.
 
-Public API:
+This is the *documented low-level layer*.  New code should go through the
+estimator facade in ``repro.encoding`` (``BrainEncoder``), which resolves
+the solver and mesh layout from the problem shape and owns all sharding
+boilerplate.  The modules here stay importable for direct use, benchmarks,
+and tests:
+
   ridge.RidgeCVConfig / ridge.ridge_cv   — mutualised single-shard RidgeCV
   mor.mor_fit / mor.mor_fit_distributed  — MultiOutput baseline (paper Fig. 8)
-  bmor.bmor_fit                          — Batch Multi-Output ridge (paper Alg. 1)
+  bmor.bmor_fit / bmor.bmor_fit_dual     — Batch Multi-Output ridge (Alg. 1)
+  banded.banded_ridge_cv                 — per-feature-space λ (ref [13])
   scoring.pearson_r                      — encoding performance metric
   complexity                             — analytic cost model (paper §3)
+  compat.shard_map / compat.make_mesh    — JAX version shims
 """
-from repro.core import bmor, complexity, mor, ridge, scoring  # noqa: F401
+from repro.core import (  # noqa: F401
+    banded, bmor, compat, complexity, mor, ridge, scoring,
+)
+from repro.core.banded import BandedConfig, BandedResult  # noqa: F401
 from repro.core.bmor import BMORResult, bmor_fit  # noqa: F401
 from repro.core.ridge import (  # noqa: F401
     PAPER_LAMBDA_GRID, RidgeCVConfig, RidgeCVResult, ridge_cv,

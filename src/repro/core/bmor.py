@@ -27,8 +27,9 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.compat import shard_map
 
 from repro.core import ridge
 from repro.core.ridge import RidgeCVConfig

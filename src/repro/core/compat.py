@@ -1,0 +1,62 @@
+"""JAX version compatibility shims.
+
+The repo targets both the installed JAX (0.4.x) and newer releases whose
+public API moved:
+
+* ``shard_map`` — ``jax.shard_map`` (new) vs
+  ``jax.experimental.shard_map.shard_map`` (0.4.x).  The replication-check
+  kwarg was also renamed ``check_rep`` → ``check_vma``.
+* ``make_mesh`` — the ``axis_types=`` kwarg (and ``jax.sharding.AxisType``)
+  only exist on newer JAX; on 0.4.x every mesh axis already behaves like the
+  explicit-auto default, so the kwarg is dropped.
+
+Everything in the repo goes through these wrappers instead of importing the
+moved symbols directly — a bare ``from jax import shard_map`` is what broke
+test collection on the seed.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+
+try:  # JAX >= 0.6 style
+    from jax import shard_map as _shard_map
+    _SHARD_MAP_NEW = True
+except ImportError:  # 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SHARD_MAP_NEW = False
+
+# jax.sharding.AxisType is absent on 0.4.x; expose None so callers can gate.
+AxisType = getattr(jax.sharding, "AxisType", None)
+
+
+def auto_axis_types(n: int):
+    """``axis_types`` tuple for n Auto axes, or None where unsupported."""
+    return None if AxisType is None else (AxisType.Auto,) * n
+
+
+def shard_map(f: Callable, *, mesh, in_specs, out_specs,
+              check_vma: bool = False) -> Callable:
+    """``shard_map`` across JAX versions (``check_vma`` ≡ old ``check_rep``)."""
+    if _SHARD_MAP_NEW:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check_vma)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              *, devices: Sequence[Any] | None = None,
+              axis_types: Sequence[Any] | None = None):
+    """``jax.make_mesh`` that tolerates ``axis_types`` on old JAX."""
+    kwargs: dict[str, Any] = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if axis_types is not None and AxisType is not None:
+        try:
+            return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                                 axis_types=tuple(axis_types), **kwargs)
+        except TypeError:  # make_mesh predates the kwarg
+            pass
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)

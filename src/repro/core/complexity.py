@@ -42,6 +42,26 @@ def t_w(w: RidgeWorkload) -> float:
     return float(w.p) * w.n * w.t * w.r
 
 
+def t_m_dual(w: RidgeWorkload) -> float:
+    """T_M in the dual/kernel form: factorise K = XXᵀ (n×n) — O(n²pr + nr).
+
+    The dual mirror of ``t_m``: the paper's whole-brain-MOR workload
+    (n=1,000 ≪ p=16,384) is exactly the regime where this term is the cheap
+    one, which is what ``encoding.dispatch`` exploits.
+    """
+    return float(w.n) ** 2 * w.p * w.r + float(w.n) * w.r
+
+
+def t_bmor_sharded(w: RidgeWorkload, c_data: int, c_target: int) -> float:
+    """B-MOR with rows additionally sharded over ``c_data`` shards.
+
+    Extends Eq. 7: the target-batch axis divides T_W (c⁻¹·T_W) while the
+    row-shard axis divides the Gram accumulation inside T_M (the psum'd
+    ``XᵀX`` is a sum over row shards — DESIGN §2).
+    """
+    return t_w(w) / c_target + t_m(w) / c_data
+
+
 def t_ridge_single(w: RidgeWorkload) -> float:
     """Single-worker mutualised RidgeCV: T_M + T_W (paper §3.1)."""
     return t_m(w) + t_w(w)

@@ -69,8 +69,9 @@ def mor_fit_distributed(X: jax.Array, Y: jax.Array, mesh: jax.sharding.Mesh,
     Targets are split over ``axis`` shards; each shard still loops one
     RidgeCV per target.  Critical-path cost: c⁻¹·(T_W + t·T_M), paper Eq. 6.
     """
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.core.compat import shard_map
 
     def shard_fn(X_local: jax.Array, Y_local: jax.Array) -> jax.Array:
         return mor_fit(X_local, Y_local, cfg)

@@ -95,14 +95,14 @@ def factorize(X: jax.Array, cfg: RidgeCVConfig) -> RidgeFactors:
     if method == "eigh":
         if cfg.use_pallas:
             from repro.kernels import ops
-            G = ops.gram(X) + cfg.jitter * jnp.eye(p, dtype=jnp.float32)
-            evals, Q = jnp.linalg.eigh(G)
-            return RidgeFactors(basis=Q, evals=evals, primal=True)
-        G = gram(X) + cfg.jitter * jnp.eye(p, dtype=X.dtype)
+            gram_fn = ops.gram
+        else:
+            gram_fn = gram
+        G = gram_fn(X) + cfg.jitter * jnp.eye(p, dtype=jnp.float32)
         evals, Q = jnp.linalg.eigh(G)
         return RidgeFactors(basis=Q, evals=evals, primal=True)
     K = jnp.matmul(X, X.T, preferred_element_type=jnp.float32)
-    K = K + cfg.jitter * jnp.eye(n, dtype=X.dtype)
+    K = K + cfg.jitter * jnp.eye(n, dtype=jnp.float32)
     evals, P = jnp.linalg.eigh(K)
     return RidgeFactors(basis=P, evals=evals, primal=False)
 
@@ -214,7 +214,10 @@ def ridge_cv(X: jax.Array, Y: jax.Array, cfg: RidgeCVConfig = RidgeCVConfig()
         per_lambda_scores.append(scores)
     cv_scores = jnp.mean(jnp.stack(per_lambda_scores), axis=0)    # (r,)
     best = jnp.argmax(cv_scores)
-    lams = jnp.asarray(cfg.lambdas, dtype=X.dtype)
+    # λ grid in f32 regardless of X.dtype: the whole solve accumulates in f32
+    # (preferred_element_type), so bf16/f16 inputs must sweep — and select —
+    # the identical grid, not a low-precision rounding of it.
+    lams = jnp.asarray(cfg.lambdas, dtype=jnp.float32)
     # Refit on the full data with the selected λ.
     factors = factorize(X, cfg)
     rhs = gram_xty(X, Y) if factors.primal else Y

@@ -1,0 +1,41 @@
+"""repro.encoding — the unified brain-encoding estimator API.
+
+This package is the front door to every ridge solver in the repo.  The
+low-level solvers (``repro.core.ridge``/``mor``/``bmor``/``banded``) stay
+available as the documented low-level layer, but call sites should not need
+them: ``BrainEncoder`` picks the solver and mesh layout from the problem
+shape using the paper's §3 analytic cost model (Eq. 6–7), and owns all
+sharding boilerplate.
+
+Quickstart::
+
+    import jax
+    from repro.encoding import BrainEncoder, pipeline
+    from repro.data import fmri
+
+    X, Y, mask = fmri.generate(jax.random.PRNGKey(0),
+                               fmri.SubjectSpec(n=1200, p=128, t=512))
+    state = pipeline.run(X, Y)            # detrend → split → fit → evaluate
+    print(state.report.decision.solver)   # e.g. "ridge" (1 device) / "bmor"
+    print(state.evaluation.mean_r, state.evaluation.significant)
+
+Or, scikit-learn style, with explicit control::
+
+    enc = BrainEncoder(solver="bmor", target_shards=8, n_folds=3)
+    enc.fit(X_train, Y_train)
+    r_per_target = enc.score(X_test, Y_test)      # Pearson r (paper §4.1)
+
+Modules:
+  config    — ``EncoderConfig``: one config subsuming ridge/banded/sharding
+  dispatch  — complexity-driven solver + mesh-layout resolution
+  sharding  — ``ShardingPlan``: mesh build, row rounding, device_put specs
+  estimator — ``BrainEncoder`` / ``EncodingReport`` / ``EvaluationReport``
+  pipeline  — composable detrend → split → standardize → fit → evaluate
+"""
+from repro.encoding import pipeline  # noqa: F401
+from repro.encoding.config import EncoderConfig  # noqa: F401
+from repro.encoding.dispatch import DispatchDecision, resolve  # noqa: F401
+from repro.encoding.estimator import (  # noqa: F401
+    BrainEncoder, EncodingReport, EvaluationReport,
+)
+from repro.encoding.sharding import ShardingPlan  # noqa: F401

@@ -1,0 +1,78 @@
+"""One configuration object for the whole encoding stack.
+
+``EncoderConfig`` subsumes the per-solver configs that used to live at every
+call site (``ridge.RidgeCVConfig``, ``banded.BandedConfig``) plus the solver
+and sharding choices that previously required hand-written mesh boilerplate.
+It is frozen/hashable so it can ride through ``jax.jit`` static arguments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+from repro.core.banded import BandedConfig
+from repro.core.ridge import PAPER_LAMBDA_GRID, RidgeCVConfig
+
+# Solver identifiers, in the paper's vocabulary:
+#   ridge     — single-shard SVD/eigh-mutualised RidgeCV (§2.3.1)
+#   mor       — MultiOutput ridge baseline, per-target recompute (§2.3.4)
+#   bmor      — Batch Multi-Output ridge, targets batched over shards (Alg. 1)
+#   bmor_dual — B-MOR on the kernel (n < p regime; rows replicated)
+#   banded    — per-feature-space λ (la Tour et al. 2022, paper ref [13])
+Solver = Literal["auto", "ridge", "mor", "bmor", "bmor_dual", "banded"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    """Everything a ``BrainEncoder`` needs, in one place.
+
+    ``solver="auto"`` (the default) lets ``encoding.dispatch`` pick the
+    implementation from the problem shape and device count using the §3
+    analytic cost model; every field below can still be pinned explicitly.
+    """
+
+    # --- ridge CV (paper §2.2.4) ------------------------------------------
+    lambdas: tuple[float, ...] = PAPER_LAMBDA_GRID
+    n_folds: int = 5
+    jitter: float = 1e-6
+    scoring: Literal["r", "r2"] = "r2"
+    use_pallas: bool = False
+
+    # --- solver selection --------------------------------------------------
+    solver: Solver = "auto"
+    # Factorisation side for the ridge path ("auto" → primal iff n >= p).
+    method: Literal["auto", "eigh", "dual"] = "auto"
+    # MOR only: pay the per-target dispatch cost for real (paper Fig. 8
+    # semantics) instead of one fused XLA program.
+    mor_taskwise: bool = False
+
+    # --- banded ridge (set ``bands`` to enable) ----------------------------
+    bands: tuple[int, ...] | None = None
+    n_band_candidates: int = 16
+    band_log_lambda_range: tuple[float, float] = (-2.0, 4.0)
+
+    # --- sharding (None → chosen by dispatch from jax.device_count()) ------
+    data_shards: int | None = None
+    target_shards: int | None = None
+    data_axis: str = "data"
+    target_axis: str = "model"
+
+    # --- determinism -------------------------------------------------------
+    seed: int = 0
+
+    def ridge_cv_config(self, method: str | None = None) -> RidgeCVConfig:
+        """Project onto the low-level ``RidgeCVConfig``."""
+        return RidgeCVConfig(
+            lambdas=self.lambdas, n_folds=self.n_folds,
+            method=method or self.method, jitter=self.jitter,
+            scoring=self.scoring, use_pallas=self.use_pallas)
+
+    def banded_config(self) -> BandedConfig:
+        """Project onto the low-level ``BandedConfig`` (requires ``bands``)."""
+        if self.bands is None:
+            raise ValueError("EncoderConfig.bands must be set for the banded "
+                             "solver (one feature count per band)")
+        return BandedConfig(
+            bands=self.bands, n_candidates=self.n_band_candidates,
+            log_lambda_range=self.band_log_lambda_range,
+            n_folds=self.n_folds, jitter=self.jitter)

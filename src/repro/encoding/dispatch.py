@@ -1,0 +1,165 @@
+"""Complexity-driven solver dispatch (paper §3, Eq. 6–7).
+
+The paper's core finding is that the right ridge parallelisation depends on
+the problem shape: MOR's per-target refactorisation (Eq. 6, ``c⁻¹(T_W +
+t·T_M)``) is impractical at scale, while B-MOR (Eq. 7, ``c⁻¹·T_W + T_M``)
+scales to 33×.  This module turns that analysis into code: given ``(n, p, t,
+device_count)`` and an ``EncoderConfig``, ``resolve`` picks
+
+* the solver — single-shard mutualised ridge, B-MOR, dual B-MOR, or banded —
+* the factorisation side (primal eigh when n ≥ p, dual kernel otherwise),
+* and the mesh layout ``(data_shards, target_shards)`` minimising the
+  analytic critical-path cost ``T_W/c_t + T_M/c_d``.
+
+MOR is never auto-selected (that is the paper's point); it stays available
+as an explicit override for baselines and benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import complexity
+from repro.core.complexity import RidgeWorkload
+from repro.encoding.config import EncoderConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchDecision:
+    """The resolved execution plan, with the model cost that justified it."""
+
+    solver: str              # "ridge" | "mor" | "bmor" | "bmor_dual" | "banded"
+    method: str              # "eigh" | "dual" factorisation side
+    data_shards: int
+    target_shards: int
+    predicted_cost: float    # §3 fp-mult count on the critical path
+    rationale: str
+
+    @property
+    def device_count(self) -> int:
+        return self.data_shards * self.target_shards
+
+
+def _divisor_layouts(c: int) -> list[tuple[int, int]]:
+    """All (data_shards, target_shards) with data·target == c."""
+    return [(d, c // d) for d in range(1, c + 1) if c % d == 0]
+
+
+def _best_bmor_layout(w: RidgeWorkload, device_count: int,
+                      data_shards: int | None, target_shards: int | None
+                      ) -> tuple[int, int, float]:
+    """Minimise T_W/c_t + T_M/c_d over divisor splits of the device count.
+
+    Pinned shard counts are honoured directly (a mesh may occupy a device
+    subset — benchmark sweeps pin c=1,2,4 on an 8-device host); with one
+    side pinned the other takes the remaining devices; with neither pinned
+    the search covers divisor pairs of the full device count, ties
+    preferring more target shards (the paper's batch axis — per-batch λ,
+    Alg. 1 line 13).
+    """
+    if data_shards is not None and target_shards is not None:
+        if data_shards * target_shards > device_count:
+            raise ValueError(
+                f"pinned layout {data_shards}x{target_shards} needs more "
+                f"than the {device_count} available devices")
+        return (data_shards, target_shards,
+                complexity.t_bmor_sharded(w, data_shards, target_shards))
+    if data_shards is not None or target_shards is not None:
+        pinned = data_shards if data_shards is not None else target_shards
+        if not 1 <= pinned <= device_count:
+            raise ValueError(f"pinned shard count {pinned} exceeds the "
+                             f"{device_count} available devices")
+        other = device_count // pinned
+        c_d, c_t = ((pinned, other) if data_shards is not None
+                    else (other, pinned))
+        return c_d, c_t, complexity.t_bmor_sharded(w, c_d, c_t)
+    best_key: tuple[float, int] | None = None
+    best_layout: tuple[int, int, float] | None = None
+    for c_d, c_t in _divisor_layouts(device_count):
+        if c_d > max(w.n, 1):
+            continue
+        cost = complexity.t_bmor_sharded(w, c_d, c_t)
+        key = (cost, -c_t)
+        if best_key is None or key < best_key:
+            best_key, best_layout = key, (c_d, c_t, cost)
+    assert best_layout is not None
+    return best_layout
+
+
+def resolve(cfg: EncoderConfig, n: int, p: int, t: int,
+            device_count: int) -> DispatchDecision:
+    """Resolve ``cfg.solver`` ("auto" or explicit) into a concrete plan."""
+    valid = ("auto", "ridge", "mor", "bmor", "bmor_dual", "banded")
+    if cfg.solver not in valid:
+        raise ValueError(f"unknown solver {cfg.solver!r}; expected one of "
+                         f"{valid}")
+    for name, pinned in (("data_shards", cfg.data_shards),
+                         ("target_shards", cfg.target_shards)):
+        if pinned is not None and not 1 <= pinned <= device_count:
+            raise ValueError(f"{name}={pinned} is outside the valid range "
+                             f"[1, {device_count}] (available devices)")
+    w = RidgeWorkload(n=n, p=p, t=t, r=len(cfg.lambdas), n_folds=cfg.n_folds)
+    method = cfg.method if cfg.method != "auto" else (
+        "eigh" if n >= p else "dual")
+    solver = cfg.solver
+
+    if solver == "auto":
+        if cfg.bands is not None:
+            solver = "banded"
+        elif device_count <= 1:
+            solver = "ridge"
+        elif n < p:
+            solver = "bmor_dual"
+        else:
+            solver = "bmor"
+
+    if solver == "banded":
+        if cfg.bands is None:
+            raise ValueError("banded solver requires EncoderConfig.bands")
+        return DispatchDecision(
+            solver="banded", method="eigh", data_shards=1, target_shards=1,
+            predicted_cost=cfg.n_band_candidates * complexity.t_m(w),
+            rationale=f"{len(cfg.bands)} feature bands → per-band λ "
+                      f"(Tikhonov substitution), one T_M per candidate")
+
+    if solver == "ridge":
+        cost = (complexity.t_w(w) +
+                (complexity.t_m(w) if method == "eigh"
+                 else complexity.t_m_dual(w)))
+        return DispatchDecision(
+            solver="ridge", method=method, data_shards=1, target_shards=1,
+            predicted_cost=cost,
+            rationale=f"single shard, {method} factorisation mutualised "
+                      f"across t={t} targets and r={w.r} λ (T_M + T_W)")
+
+    if solver == "mor":
+        c_t = cfg.target_shards or 1
+        cost = complexity.t_mor(w, c_t)
+        return DispatchDecision(
+            solver="mor", method=method, data_shards=1, target_shards=c_t,
+            predicted_cost=cost,
+            rationale=f"explicit MOR baseline: t·T_M recompute, Eq. 6 — "
+                      f"{complexity.mor_overhead_factor(w, max(c_t, 1)):.0f}×"
+                      f" the B-MOR work at c={c_t} (never auto-selected)")
+
+    if solver == "bmor_dual":
+        c_t = cfg.target_shards or device_count
+        if cfg.data_shards not in (None, 1):
+            raise ValueError("bmor_dual replicates rows; data_shards must "
+                             "be 1 (the n×n kernel is small when n < p)")
+        cost = complexity.t_w(w) / c_t + complexity.t_m_dual(w)
+        return DispatchDecision(
+            solver="bmor_dual", method="dual", data_shards=1,
+            target_shards=c_t, predicted_cost=cost,
+            rationale=f"n={n} < p={p}: kernel (n×n) factorisation replicated,"
+                      f" targets batched over c={c_t} shards (Eq. 7 dual)")
+
+    assert solver == "bmor", solver
+    c_d, c_t, cost = _best_bmor_layout(w, device_count, cfg.data_shards,
+                                       cfg.target_shards)
+    return DispatchDecision(
+        solver="bmor", method="eigh", data_shards=c_d, target_shards=c_t,
+        predicted_cost=cost,
+        rationale=f"B-MOR Eq. 7: T_W/{c_t} + T_M/{c_d} minimal over divisor "
+                  f"layouts of {device_count} devices "
+                  f"(vs MOR {complexity.mor_overhead_factor(w, c_t):.0f}× "
+                  f"work at equal parallelism)")

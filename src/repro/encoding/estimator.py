@@ -1,0 +1,209 @@
+"""``BrainEncoder`` — the scikit-learn-style facade over every ridge solver.
+
+One estimator, one result type.  ``fit`` resolves the solver through
+``encoding.dispatch`` (unless pinned), owns all mesh/sharding boilerplate via
+``encoding.sharding.ShardingPlan``, and normalises the four historical result
+types (``RidgeCVResult``, ``BMORResult``, ``BandedResult``, bare MOR weight
+matrices) into a single ``EncodingReport``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import banded, bmor, mor, ridge, scoring
+from repro.encoding.config import EncoderConfig
+from repro.encoding.dispatch import DispatchDecision, resolve
+from repro.encoding.sharding import ShardingPlan
+
+_SOLVER_LABELS = {
+    "ridge": "RidgeCV", "mor": "MOR", "bmor": "B-MOR",
+    "bmor_dual": "dual B-MOR", "banded": "banded RidgeCV",
+}
+
+
+@dataclasses.dataclass
+class EncodingReport:
+    """Unified fit result across all solvers.
+
+    ``best_lambda`` always has one entry per target batch: shape ``(1,)`` for
+    single-shard solvers, ``(target_shards,)`` for B-MOR (per-batch λ,
+    Alg. 1 line 13), ``(t,)`` conceptually for MOR (not materialised — MOR
+    selects per target inside the fused program; the array is empty there).
+    """
+
+    weights: jax.Array                 # (p, t)
+    best_lambda: np.ndarray            # (n_batches,) — see docstring
+    cv_scores: np.ndarray              # (n_batches, r) CV curve per batch
+    lambdas: tuple[float, ...]         # the swept grid (banded: empty)
+    decision: DispatchDecision
+    band_lambdas: np.ndarray | None = None   # (n_bands,), banded solver only
+
+    @property
+    def solver_label(self) -> str:
+        return _SOLVER_LABELS[self.decision.solver]
+
+
+@dataclasses.dataclass
+class EvaluationReport:
+    """Held-out evaluation in the paper's metrics (§4.1–4.2)."""
+
+    pearson_r: np.ndarray              # (t,) per-target test correlation
+    r2: np.ndarray                     # (t,)
+    null_r: np.ndarray                 # (n_perms, t) shuffled-stimulus control
+    mean_r: float
+    null_abs_r: float
+
+    @property
+    def significant(self) -> bool:
+        """Aligned encoding clears the null floor (paper §4.2 criterion)."""
+        return self.mean_r > 5.0 * self.null_abs_r
+
+
+class BrainEncoder:
+    """Multi-target brain-encoding ridge with automatic solver dispatch.
+
+    >>> enc = BrainEncoder()                      # solver="auto"
+    >>> enc.fit(X_train, Y_train)
+    >>> r = enc.score(X_test, Y_test)             # per-target Pearson r
+    >>> enc.report_.decision.solver               # what dispatch picked
+
+    Keyword overrides are ``EncoderConfig`` fields:
+
+    >>> BrainEncoder(solver="bmor", target_shards=8, n_folds=3)
+    >>> BrainEncoder(bands=(4096, 4096))          # banded → per-band λ
+
+    Attributes set by ``fit``: ``report_`` (an ``EncodingReport``),
+    ``weights_`` (alias of ``report_.weights``).
+    """
+
+    def __init__(self, config: EncoderConfig | None = None, **overrides: Any):
+        base = config or EncoderConfig()
+        self.config = (dataclasses.replace(base, **overrides)
+                       if overrides else base)
+        self.report_: EncodingReport | None = None
+
+    # -- sklearn-ish surface -------------------------------------------------
+    def fit(self, X: jax.Array, Y: jax.Array) -> "BrainEncoder":
+        n, p = X.shape
+        t = Y.shape[1]
+        decision = resolve(self.config, n, p, t, jax.device_count())
+        fitter = getattr(self, f"_fit_{decision.solver}")
+        self.report_ = fitter(X, Y, decision)
+        return self
+
+    @property
+    def weights_(self) -> jax.Array:
+        assert self.report_ is not None, "call fit() first"
+        return self.report_.weights
+
+    def predict(self, X: jax.Array) -> jax.Array:
+        return ridge.predict(X, self.weights_)
+
+    def score(self, X: jax.Array, Y: jax.Array) -> np.ndarray:
+        """Per-target Pearson r on held-out data (the paper's metric)."""
+        return np.asarray(scoring.pearson_r(Y, self.predict(X)))
+
+    def evaluate(self, X: jax.Array, Y: jax.Array, *, n_perms: int = 10,
+                 key: jax.Array | None = None) -> EvaluationReport:
+        """Pearson r + R² + the §4.2 null-permutation control."""
+        preds = self.predict(X)
+        r = np.asarray(scoring.pearson_r(Y, preds))
+        r2 = np.asarray(scoring.r2_score(Y, preds))
+        if key is None:
+            key = jax.random.PRNGKey(self.config.seed + 1)
+        null = np.asarray(scoring.null_permutation_scores(
+            key, X, Y, self.weights_, n_perms=n_perms))
+        return EvaluationReport(
+            pearson_r=r, r2=r2, null_r=null, mean_r=float(r.mean()),
+            null_abs_r=float(np.abs(null).mean()))
+
+    # -- per-solver fit paths ------------------------------------------------
+    def _fit_ridge(self, X, Y, decision: DispatchDecision) -> EncodingReport:
+        res = ridge.ridge_cv(X, Y, self.config.ridge_cv_config(decision.method))
+        return EncodingReport(
+            weights=res.weights,
+            best_lambda=np.asarray(res.best_lambda)[None],
+            cv_scores=np.asarray(res.cv_scores)[None, :],
+            lambdas=self.config.lambdas, decision=decision)
+
+    def _fit_mor(self, X, Y, decision: DispatchDecision) -> EncodingReport:
+        cfg = self.config.ridge_cv_config(decision.method)
+        if self.config.mor_taskwise and decision.target_shards > 1:
+            # Distributed MOR is one fused XLA program per shard, which hoists
+            # the per-target refactorisation (see mor.mor_fit's NOTE) — the
+            # opposite of what the taskwise flag exists to measure.
+            raise ValueError("mor_taskwise=True is incompatible with "
+                             "target_shards > 1: taskwise MOR is a host-level "
+                             "per-target loop (paper Fig. 8 cost semantics)")
+        if decision.target_shards > 1:
+            plan = ShardingPlan(data_shards=1,
+                                target_shards=decision.target_shards,
+                                data_axis=self.config.data_axis,
+                                target_axis=self.config.target_axis)
+            X, Y, t = plan.prepare(X, Y)
+            W = mor.mor_fit_distributed(X, Y, plan.build_mesh(),
+                                        axis=plan.target_axis, cfg=cfg)
+            W = W[:, :t]
+        elif self.config.mor_taskwise:
+            W = mor.mor_fit_taskwise(X, Y, cfg)
+        else:
+            W = mor.mor_fit(X, Y, cfg)
+        return EncodingReport(
+            weights=W,
+            best_lambda=np.empty((0,)),          # per-target λ stays internal
+            cv_scores=np.empty((0, len(self.config.lambdas))),
+            lambdas=self.config.lambdas, decision=decision)
+
+    def _fit_bmor(self, X, Y, decision: DispatchDecision) -> EncodingReport:
+        plan = ShardingPlan(data_shards=decision.data_shards,
+                            target_shards=decision.target_shards,
+                            data_axis=self.config.data_axis,
+                            target_axis=self.config.target_axis)
+        X, Y, t = plan.prepare(X, Y)
+        mesh = plan.build_mesh()
+        Xs, Ys = plan.place(mesh, X, Y)
+        res = bmor.bmor_fit(Xs, Ys, mesh, data_axis=plan.data_axis,
+                            target_axis=plan.target_axis,
+                            cfg=self.config.ridge_cv_config("eigh"))
+        return EncodingReport(
+            weights=res.weights[:, :t],
+            best_lambda=np.asarray(res.best_lambda),
+            cv_scores=np.asarray(res.cv_scores),
+            lambdas=self.config.lambdas, decision=decision)
+
+    def _fit_bmor_dual(self, X, Y, decision: DispatchDecision
+                       ) -> EncodingReport:
+        plan = ShardingPlan(data_shards=1,
+                            target_shards=decision.target_shards,
+                            data_axis=self.config.data_axis,
+                            target_axis=self.config.target_axis,
+                            replicate_rows=True)
+        X, Y, t = plan.prepare(X, Y)
+        mesh = plan.build_mesh()
+        Xs, Ys = plan.place(mesh, X, Y)
+        res = bmor.bmor_fit_dual(Xs, Ys, mesh, target_axis=plan.target_axis,
+                                 cfg=self.config.ridge_cv_config("dual"))
+        return EncodingReport(
+            weights=res.weights[:, :t],
+            best_lambda=np.asarray(res.best_lambda),
+            cv_scores=np.asarray(res.cv_scores),
+            lambdas=self.config.lambdas, decision=decision)
+
+    def _fit_banded(self, X, Y, decision: DispatchDecision) -> EncodingReport:
+        bands = self.config.bands
+        if sum(bands) != X.shape[1]:
+            raise ValueError(f"bands {bands} sum to {sum(bands)} but X has "
+                             f"{X.shape[1]} features")
+        res = banded.banded_ridge_cv(jax.random.PRNGKey(self.config.seed),
+                                     X, Y, self.config.banded_config())
+        return EncodingReport(
+            weights=res.weights,
+            best_lambda=np.empty((0,)),          # per-band, not per-grid-λ
+            cv_scores=np.asarray(res.cv_scores)[None, :],
+            lambdas=(), decision=decision,
+            band_lambdas=np.asarray(res.band_lambdas))

@@ -1,0 +1,138 @@
+"""Composable encoding pipeline: detrend → split → standardize → fit → eval.
+
+Each stage is a plain ``PipelineState → PipelineState`` callable, so drivers
+can insert, drop, or reorder steps (e.g. skip ``detrend`` for backbone
+features that were never polluted with scanner drift) while the default
+``run(X, Y, config)`` reproduces the paper's §2 preprocessing + §4 evaluation
+end to end.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scoring
+from repro.data import fmri
+from repro.encoding.config import EncoderConfig
+from repro.encoding.estimator import (BrainEncoder, EncodingReport,
+                                      EvaluationReport)
+
+
+@dataclasses.dataclass
+class PipelineState:
+    """Everything flowing between stages."""
+
+    X: jax.Array
+    Y: jax.Array
+    X_test: jax.Array | None = None
+    Y_test: jax.Array | None = None
+    encoder: BrainEncoder | None = None
+    report: EncodingReport | None = None
+    evaluation: EvaluationReport | None = None
+
+
+Stage = Callable[[PipelineState], PipelineState]
+
+
+def detrend(tr_seconds: float = 1.49, cutoff_hz: float = 0.01) -> Stage:
+    """Regress slow scanner drifts out of Y (paper §2.1.4)."""
+    def stage(s: PipelineState) -> PipelineState:
+        s.Y = fmri.detrend(s.Y, tr_seconds=tr_seconds, cutoff_hz=cutoff_hz)
+        return s
+    return stage
+
+
+def standardize(features: bool = True, targets: bool = True) -> Stage:
+    """Column-wise zero-mean / unit-variance (paper §2.1.4 preprocessing).
+
+    Statistics are computed on the rows currently in ``state.X``/``state.Y``
+    — i.e. the *training* rows when a ``split`` stage ran first — and the
+    same transform is applied to the held-out rows, so no test-set
+    statistics leak into the fit or the evaluation.
+    """
+    def stage(s: PipelineState) -> PipelineState:
+        if features:
+            mu, sd = s.X.mean(0), s.X.std(0) + 1e-6
+            s.X = (s.X - mu) / sd
+            if s.X_test is not None:
+                s.X_test = (s.X_test - mu) / sd
+        if targets:
+            mu, sd = s.Y.mean(0), s.Y.std(0) + 1e-6
+            s.Y = (s.Y - mu) / sd
+            if s.Y_test is not None:
+                s.Y_test = (s.Y_test - mu) / sd
+        return s
+    return stage
+
+
+def split(test_frac: float = 0.1, seed: int = 0) -> Stage:
+    """Paper §2.2.4: random 90/10 train/test split."""
+    def stage(s: PipelineState) -> PipelineState:
+        tr, te = scoring.train_test_split_indices(
+            jax.random.PRNGKey(seed), s.X.shape[0], test_frac)
+        s.X_test, s.Y_test = s.X[te], s.Y[te]
+        s.X, s.Y = s.X[tr], s.Y[tr]
+        return s
+    return stage
+
+
+def fit(config: EncoderConfig | None = None, **overrides) -> Stage:
+    """Fit a ``BrainEncoder`` on the (training) X/Y in the state."""
+    def stage(s: PipelineState) -> PipelineState:
+        s.encoder = BrainEncoder(config, **overrides).fit(s.X, s.Y)
+        s.report = s.encoder.report_
+        return s
+    return stage
+
+
+def evaluate(n_perms: int = 10, seed: int = 1,
+             on_train: bool = False) -> Stage:
+    """Held-out Pearson r / R² + null-permutation control (§4.1–4.2).
+
+    Refuses to silently report in-sample numbers: if no ``split`` stage ran,
+    pass ``on_train=True`` to explicitly evaluate on the training rows.
+    """
+    def stage(s: PipelineState) -> PipelineState:
+        assert s.encoder is not None, "evaluate() needs a fit() stage first"
+        if s.X_test is None and not on_train:
+            raise ValueError(
+                "evaluate(): no split stage ran, so only training rows are "
+                "available; add pipeline.split(...) or opt in to in-sample "
+                "metrics with evaluate(on_train=True)")
+        X_ev = s.X_test if s.X_test is not None else s.X
+        Y_ev = s.Y_test if s.Y_test is not None else s.Y
+        s.evaluation = s.encoder.evaluate(
+            X_ev, Y_ev, n_perms=n_perms, key=jax.random.PRNGKey(seed))
+        return s
+    return stage
+
+
+def run_stages(X: jax.Array, Y: jax.Array,
+               stages: Sequence[Stage]) -> PipelineState:
+    state = PipelineState(X=jnp.asarray(X), Y=jnp.asarray(Y))
+    for stage in stages:
+        state = stage(state)
+    return state
+
+
+def default_stages(config: EncoderConfig | None = None, *,
+                   detrend_targets: bool = True, test_frac: float = 0.1,
+                   n_perms: int = 10, seed: int = 0) -> list[Stage]:
+    """The paper's end-to-end recipe as a stage list (editable by callers)."""
+    stages: list[Stage] = []
+    if detrend_targets:
+        stages.append(detrend())
+    # split BEFORE standardize: μ/σ come from training rows only and are
+    # applied to the held-out rows, so the §4 evaluation stays leak-free.
+    stages += [split(test_frac=test_frac, seed=seed), standardize(),
+               fit(config), evaluate(n_perms=n_perms, seed=seed + 1)]
+    return stages
+
+
+def run(X: jax.Array, Y: jax.Array, config: EncoderConfig | None = None,
+        **kwargs) -> PipelineState:
+    """One-call pipeline: ``run(X, Y, EncoderConfig(...))``."""
+    return run_stages(X, Y, default_stages(config, **kwargs))

@@ -1,0 +1,90 @@
+"""ShardingPlan — mesh construction and data placement, in one object.
+
+Before this module, every distributed call site (``launch/encode.py``,
+``examples/distributed_ridge.py``, ``examples/brain_encoding_e2e.py``,
+``benchmarks/distributed_bench.py``) hand-rolled the same four steps: build a
+``(data, model)`` mesh, round the row count to a multiple of the data-shard
+count, ``device_put`` X over rows, ``device_put`` Y over rows × targets.
+``ShardingPlan`` owns those steps — plus target-count padding, which the
+hand-rolled versions silently could not handle (``shard_map`` needs the
+target dimension divisible by the target-shard count).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.compat import make_mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    """How a ``(n, p) × (n, t)`` ridge problem maps onto the device mesh.
+
+    ``data_shards`` splits rows (time samples) — the Gram/psum axis of
+    B-MOR's TPU adaptation; ``target_shards`` splits columns of Y — the
+    paper's batch axis (c in Eq. 7).  ``replicate_rows=True`` is the dual
+    regime, where the kernel is small and rows live on every shard.
+    """
+
+    data_shards: int = 1
+    target_shards: int = 1
+    data_axis: str = "data"
+    target_axis: str = "model"
+    replicate_rows: bool = False
+
+    @property
+    def device_count(self) -> int:
+        return self.data_shards * self.target_shards
+
+    def build_mesh(self) -> Mesh:
+        assert self.device_count <= jax.device_count(), (
+            f"plan wants {self.device_count} devices, "
+            f"have {jax.device_count()}")
+        return make_mesh((self.data_shards, self.target_shards),
+                         (self.data_axis, self.target_axis))
+
+    # -- shape rounding ------------------------------------------------------
+    def round_rows(self, n: int) -> int:
+        """Largest row count ≤ n divisible by the data-shard count."""
+        if self.replicate_rows:
+            return n
+        return (n // self.data_shards) * self.data_shards
+
+    def padded_targets(self, t: int) -> int:
+        """Smallest target count ≥ t divisible by the target-shard count."""
+        c = self.target_shards
+        return ((t + c - 1) // c) * c
+
+    def prepare(self, X: jax.Array, Y: jax.Array
+                ) -> tuple[jax.Array, jax.Array, int]:
+        """Round rows / zero-pad targets so shapes divide the mesh.
+
+        Returns ``(X', Y', t_original)``; padded weight columns are sliced
+        off again by the caller (see ``BrainEncoder.fit``).
+        """
+        t = Y.shape[1]
+        keep = self.round_rows(X.shape[0])
+        X, Y = X[:keep], Y[:keep]
+        t_pad = self.padded_targets(t)
+        if t_pad != t:
+            Y = jnp.concatenate(
+                [Y, jnp.zeros((Y.shape[0], t_pad - t), Y.dtype)], axis=1)
+        return X, Y, t
+
+    # -- placement -----------------------------------------------------------
+    def x_spec(self) -> P:
+        return P() if self.replicate_rows else P(self.data_axis, None)
+
+    def y_spec(self) -> P:
+        row = None if self.replicate_rows else self.data_axis
+        return P(row, self.target_axis)
+
+    def place(self, mesh: Mesh, X: jax.Array, Y: jax.Array
+              ) -> tuple[jax.Array, jax.Array]:
+        Xs = jax.device_put(X, NamedSharding(mesh, self.x_spec()))
+        Ys = jax.device_put(Y, NamedSharding(mesh, self.y_spec()))
+        return Xs, Ys

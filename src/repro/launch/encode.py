@@ -1,8 +1,9 @@
 """Brain-encoding driver — the paper's full pipeline, end to end.
 
 stimulus features (backbone hidden states or synthetic VGG16-shaped
-features) → distributed B-MOR RidgeCV → Pearson-r encoding map + null
-permutation control.
+features) → ``BrainEncoder`` (solver picked by complexity-driven dispatch:
+distributed B-MOR on a multi-device mesh, mutualised RidgeCV otherwise) →
+Pearson-r encoding map + null permutation control.
 
 ``python -m repro.launch.encode --backbone qwen3-1.7b --smoke`` runs the
 whole thing on CPU; ``--features vgg16`` uses the paper-faithful synthetic
@@ -20,17 +21,18 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--n", type=int, default=512, help="time samples")
     ap.add_argument("--targets", type=int, default=256)
-    ap.add_argument("--model-shards", type=int, default=2)
+    ap.add_argument("--solver", default="auto",
+                    help="auto|ridge|mor|bmor|bmor_dual|banded")
+    ap.add_argument("--target-shards", type=int, default=None,
+                    help="pin the target-batch shard count (default: dispatch)")
     args = ap.parse_args()
 
     import jax
     import jax.numpy as jnp
     import numpy as np
-    from jax.sharding import NamedSharding, PartitionSpec as P
     from repro import configs
-    from repro.core import bmor, ridge, scoring
     from repro.data import fmri, synthetic
-    from repro.launch import mesh as mesh_lib
+    from repro.encoding import EncoderConfig, pipeline
     from repro.models import build_model
 
     n, t = args.n, args.targets
@@ -61,37 +63,30 @@ def main() -> None:
         W_true = W_true * jnp.where(mask, 1.0, 0.0)[None, :]
         Y = X @ W_true * 2.0 + jax.random.normal(jax.random.PRNGKey(4),
                                                  Y.shape)
-        Y = (Y - Y.mean(0)) / (Y.std(0) + 1e-6)
         print(f"backbone features from {cfg.name}: X{X.shape} Y{Y.shape}")
 
-    # 2. Train/test split (paper: 90/10 random).
-    tr, te = scoring.train_test_split_indices(jax.random.PRNGKey(5),
-                                              X.shape[0])
-    X_tr, Y_tr, X_te, Y_te = X[tr], Y[tr], X[te], Y[te]
+    # 2-4. 90/10 split → standardize (train-fitted) → fit → evaluate, through
+    # the unified estimator API: no mesh/device_put boilerplate here, the
+    # dispatch layer picks ridge vs (dual) B-MOR from the problem shape and
+    # jax.device_count() (§3 cost model).
+    enc_cfg = EncoderConfig(solver=args.solver,
+                            target_shards=args.target_shards)
+    state = pipeline.run(X, Y, enc_cfg, detrend_targets=False, n_perms=5)
+    report, ev = state.report, state.evaluation
 
-    # 3. Distributed B-MOR fit.
-    n_dev = jax.device_count()
-    model_shards = min(args.model_shards, n_dev)
-    mesh = mesh_lib.make_host_mesh(model=model_shards)
-    n_data = mesh.shape["data"]
-    keep = (X_tr.shape[0] // n_data) * n_data
-    X_tr, Y_tr = X_tr[:keep], Y_tr[:keep]
-    Xs = jax.device_put(X_tr, NamedSharding(mesh, P("data", None)))
-    Ys = jax.device_put(Y_tr, NamedSharding(mesh, P("data", "model")))
-    res = bmor.bmor_fit(Xs, Ys, mesh)
-    print(f"B-MOR fit: per-batch λ = {np.asarray(res.best_lambda)}")
+    d = report.decision
+    print(f"dispatch: solver={d.solver} mesh={d.data_shards}x"
+          f"{d.target_shards} ({d.rationale})")
+    print(f"{report.solver_label} fit: per-batch λ = {report.best_lambda}")
 
-    # 4. Evaluate (paper §4.1-4.2).
-    preds = ridge.predict(X_te, res.weights)
-    r = scoring.pearson_r(Y_te, preds)
-    null = scoring.null_permutation_scores(jax.random.PRNGKey(6), X_te, Y_te,
-                                           res.weights, n_perms=5)
-    r_np = np.asarray(r)
+    r_np = ev.pearson_r
     m = np.asarray(mask)
     print(f"test Pearson r: responsive targets mean={r_np[m].mean():.3f}  "
           f"non-responsive mean={r_np[~m].mean():.3f}")
-    print(f"null permutation |r|: mean={float(jnp.mean(jnp.abs(null))):.4f} "
-          f"(aligned encoding is significant, paper §4.2)")
+    ok = r_np[m].mean() > 5 * ev.null_abs_r
+    print(f"null permutation |r|: mean={ev.null_abs_r:.4f} "
+          + ("(aligned encoding is significant, paper §4.2)" if ok else
+             "(WARNING: responsive targets do not clear the null floor)"))
 
 
 if __name__ == "__main__":

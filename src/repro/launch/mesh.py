@@ -11,14 +11,14 @@ state (the dry-run launcher must set XLA_FLAGS before first jax init).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.core.compat import auto_axis_types, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=auto_axis_types(len(axes)))
 
 
 def make_host_mesh(model: int = 2, data: int | None = None, pod: int = 1):
@@ -28,10 +28,10 @@ def make_host_mesh(model: int = 2, data: int | None = None, pod: int = 1):
         data = n // (model * pod)
     assert pod * data * model == n, (pod, data, model, n)
     if pod > 1:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+        return make_mesh((pod, data, model), ("pod", "data", "model"),
+                         axis_types=auto_axis_types(3))
+    return make_mesh((data, model), ("data", "model"),
+                     axis_types=auto_axis_types(2))
 
 
 # TPU v5e hardware constants for the roofline analysis (per chip).

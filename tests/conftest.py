@@ -1,0 +1,8 @@
+import pytest
+
+
+def pytest_configure(config):
+    # pytest-timeout provides this marker when installed; register it so the
+    # suite runs warning-free (and without the plugin, e.g. in this container).
+    config.addinivalue_line(
+        "markers", "timeout(seconds): per-test timeout (pytest-timeout)")

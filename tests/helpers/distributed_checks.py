@@ -96,8 +96,7 @@ def check_bmor_perbatch_lambda():
 
 def check_bmor_dual_matches_single_device():
     """Dual-form B-MOR (n < p) vs the single-device dual RidgeCV."""
-    mesh = jax.make_mesh((1, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = jax.make_mesh((1, 4), ("data", "model"))
     n, p, t = 40, 96, 16                       # n < p → dual regime
     X, Y, _ = make_problem(jax.random.PRNGKey(9), n, p, t, noise=0.01)
     cfg = RidgeCVConfig(n_folds=4, method="dual")

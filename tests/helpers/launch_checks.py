@@ -21,8 +21,9 @@ from repro.optim import AdamWConfig, adamw_init
 
 
 def _mesh(data=4, model=2):
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.core.compat import auto_axis_types, make_mesh
+    return make_mesh((data, model), ("data", "model"),
+                     axis_types=auto_axis_types(2))
 
 
 def check_sharded_train_step_runs():

@@ -1,0 +1,230 @@
+"""Unified BrainEncoder API: dispatch rules + single-device solver parity.
+
+Multi-device parity (auto → B-MOR / dual B-MOR on a sharded mesh) lives in
+``tests/helpers/encoder_checks.py``, run by ``test_encoder_distributed.py``.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import banded, mor, ridge
+from repro.encoding import BrainEncoder, EncoderConfig, pipeline, resolve
+
+
+def _make_problem(key, n=160, p=24, t=12, noise=0.05):
+    k1, k2, k3 = jax.random.split(key, 3)
+    X = jax.random.normal(k1, (n, p), jnp.float32)
+    W = jax.random.normal(k2, (p, t), jnp.float32) / np.sqrt(p)
+    Y = X @ W + noise * jax.random.normal(k3, (n, t), jnp.float32)
+    return X, Y
+
+
+# ---------------------------------------------------------------------------
+# dispatch.resolve — pure unit tests (device_count passed explicitly)
+# ---------------------------------------------------------------------------
+
+def test_dispatch_single_device_picks_ridge():
+    d = resolve(EncoderConfig(), n=1000, p=100, t=500, device_count=1)
+    assert d.solver == "ridge" and d.method == "eigh"
+    assert (d.data_shards, d.target_shards) == (1, 1)
+
+
+def test_dispatch_dual_for_n_lt_p():
+    d = resolve(EncoderConfig(), n=50, p=200, t=500, device_count=1)
+    assert d.solver == "ridge" and d.method == "dual"
+    d = resolve(EncoderConfig(), n=50, p=200, t=500, device_count=8)
+    assert d.solver == "bmor_dual" and d.method == "dual"
+    assert d.target_shards == 8 and d.data_shards == 1
+
+
+def test_dispatch_bmor_when_devices_gt_1():
+    d = resolve(EncoderConfig(), n=1000, p=100, t=500, device_count=8)
+    assert d.solver == "bmor"
+    assert d.data_shards * d.target_shards == 8
+    # layout minimises T_W/c_t + T_M/c_d ⇔ t/c_t + p/c_d (common p·n·r)
+    costs = {(cd, 8 // cd): 500 / (8 // cd) + 100 / cd
+             for cd in (1, 2, 4, 8)}
+    assert costs[(d.data_shards, d.target_shards)] == min(costs.values())
+
+
+def test_dispatch_layout_follows_shape():
+    # Many targets, few features → shard targets; the reverse → shard rows.
+    d_t = resolve(EncoderConfig(), n=10_000, p=16, t=100_000, device_count=8)
+    assert d_t.target_shards == 8
+    d_d = resolve(EncoderConfig(), n=100_000, p=8_192, t=16, device_count=8)
+    assert d_d.data_shards == 8
+
+
+def test_dispatch_respects_explicit_overrides():
+    d = resolve(EncoderConfig(solver="ridge"), n=1000, p=10, t=100,
+                device_count=8)
+    assert d.solver == "ridge"
+    d = resolve(EncoderConfig(solver="bmor", data_shards=4, target_shards=2),
+                n=1000, p=10, t=100, device_count=8)
+    assert (d.data_shards, d.target_shards) == (4, 2)
+    d = resolve(EncoderConfig(solver="mor", target_shards=4), n=100, p=10,
+                t=20, device_count=8)
+    assert d.solver == "mor" and d.target_shards == 4
+    # Pinned layouts may occupy a device subset (benchmark sweeps do this).
+    d = resolve(EncoderConfig(solver="bmor", data_shards=1, target_shards=1),
+                n=100, p=10, t=20, device_count=8)
+    assert (d.data_shards, d.target_shards) == (1, 1)
+    with pytest.raises(ValueError):
+        resolve(EncoderConfig(solver="bmor", data_shards=16), n=100, p=10,
+                t=20, device_count=8)  # more shards than devices
+
+
+def test_dispatch_never_auto_selects_mor():
+    for shape in [(100, 10, 1000), (10_000, 100, 10), (50, 500, 100)]:
+        for c in (1, 2, 8):
+            d = resolve(EncoderConfig(), *shape, device_count=c)
+            assert d.solver != "mor", (shape, c)
+
+
+def test_dispatch_banded_from_bands():
+    d = resolve(EncoderConfig(bands=(8, 8)), n=100, p=16, t=32,
+                device_count=8)
+    assert d.solver == "banded"
+    with pytest.raises(ValueError):
+        resolve(EncoderConfig(solver="banded"), n=100, p=16, t=32,
+                device_count=1)  # bands not set
+
+
+def test_dispatch_predicted_cost_ordering():
+    """B-MOR's modelled critical path beats MOR's at equal parallelism."""
+    cfg_bmor = EncoderConfig(solver="bmor", target_shards=8)
+    cfg_mor = EncoderConfig(solver="mor", target_shards=8)
+    n, p, t = 10_000, 512, 50_000
+    d_bmor = resolve(cfg_bmor, n, p, t, device_count=8)
+    d_mor = resolve(cfg_mor, n, p, t, device_count=8)
+    assert d_bmor.predicted_cost < d_mor.predicted_cost
+
+
+# ---------------------------------------------------------------------------
+# BrainEncoder parity vs direct solver calls (single device)
+# ---------------------------------------------------------------------------
+
+def test_encoder_ridge_parity():
+    X, Y = _make_problem(jax.random.PRNGKey(0))
+    enc = BrainEncoder(n_folds=3).fit(X, Y)
+    assert enc.report_.decision.solver == "ridge"
+    ref = ridge.ridge_cv(X, Y, enc.config.ridge_cv_config("eigh"))
+    np.testing.assert_allclose(np.asarray(enc.weights_),
+                               np.asarray(ref.weights), rtol=1e-6, atol=1e-6)
+    assert enc.report_.best_lambda[0] == float(ref.best_lambda)
+    np.testing.assert_allclose(enc.report_.cv_scores[0],
+                               np.asarray(ref.cv_scores), rtol=1e-6)
+
+
+def test_encoder_mor_parity():
+    X, Y = _make_problem(jax.random.PRNGKey(1), n=60, p=8, t=6)
+    cfg = EncoderConfig(solver="mor", n_folds=3, lambdas=(0.1, 1.0, 100.0))
+    enc = BrainEncoder(cfg).fit(X, Y)
+    W_ref = mor.mor_fit(X, Y, cfg.ridge_cv_config("eigh"))
+    np.testing.assert_allclose(np.asarray(enc.weights_), np.asarray(W_ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_encoder_banded_parity():
+    X, Y = _make_problem(jax.random.PRNGKey(2), n=90, p=24, t=6)
+    enc = BrainEncoder(bands=(12, 12), n_band_candidates=8, n_folds=3,
+                       seed=3).fit(X, Y)
+    ref = banded.banded_ridge_cv(jax.random.PRNGKey(3), X, Y,
+                                 enc.config.banded_config())
+    np.testing.assert_allclose(np.asarray(enc.weights_),
+                               np.asarray(ref.weights), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(enc.report_.band_lambdas,
+                               np.asarray(ref.band_lambdas), rtol=1e-6)
+
+
+def test_encoder_dual_method_parity():
+    X, Y = _make_problem(jax.random.PRNGKey(4), n=30, p=64, t=6)
+    enc = BrainEncoder(n_folds=3).fit(X, Y)
+    assert enc.report_.decision.method == "dual"
+    ref = ridge.ridge_cv(X, Y, enc.config.ridge_cv_config("dual"))
+    np.testing.assert_allclose(np.asarray(enc.weights_),
+                               np.asarray(ref.weights), rtol=1e-6, atol=1e-6)
+
+
+def test_encoder_predict_score_evaluate():
+    X, Y = _make_problem(jax.random.PRNGKey(5), n=200, p=16, t=8, noise=0.01)
+    enc = BrainEncoder(n_folds=3).fit(X[:160], Y[:160])
+    preds = enc.predict(X[160:])
+    assert preds.shape == (40, 8)
+    r = enc.score(X[160:], Y[160:])
+    assert r.shape == (8,) and r.mean() > 0.9
+    ev = enc.evaluate(X[160:], Y[160:], n_perms=4)
+    assert ev.null_r.shape == (4, 8)
+    assert ev.significant  # low-noise planted model clears the null floor
+
+
+def test_unfit_encoder_raises():
+    with pytest.raises(AssertionError):
+        BrainEncoder().predict(jnp.zeros((4, 4)))
+
+
+# ---------------------------------------------------------------------------
+# pipeline stages
+# ---------------------------------------------------------------------------
+
+def test_pipeline_stages_compose():
+    X, Y = _make_problem(jax.random.PRNGKey(6), n=220, p=16, t=8, noise=0.05)
+    state = pipeline.run_stages(X, Y, [
+        pipeline.standardize(),
+        pipeline.split(test_frac=0.2, seed=0),
+        pipeline.fit(EncoderConfig(n_folds=3)),
+        pipeline.evaluate(n_perms=3),
+    ])
+    assert state.X.shape[0] == 176 and state.X_test.shape[0] == 44
+    assert state.report is not None and state.evaluation is not None
+    assert state.evaluation.pearson_r.shape == (8,)
+
+
+def test_pipeline_evaluate_without_split_refuses_silent_in_sample():
+    X, Y = _make_problem(jax.random.PRNGKey(9), n=80, p=8, t=4)
+    with pytest.raises(ValueError, match="no split stage"):
+        pipeline.run_stages(X, Y, [
+            pipeline.fit(EncoderConfig(n_folds=3)),
+            pipeline.evaluate(n_perms=2),
+        ])
+    state = pipeline.run_stages(X, Y, [
+        pipeline.fit(EncoderConfig(n_folds=3)),
+        pipeline.evaluate(n_perms=2, on_train=True),   # explicit opt-in
+    ])
+    assert state.evaluation is not None
+
+
+def test_pipeline_standardize_uses_train_stats_only():
+    X, Y = _make_problem(jax.random.PRNGKey(10), n=100, p=6, t=3)
+    state = pipeline.run_stages(X, Y, [
+        pipeline.split(test_frac=0.2, seed=0),
+        pipeline.standardize(),
+    ])
+    # Training rows are exactly standardized; held-out rows only approximately
+    # (they were transformed with the TRAIN μ/σ, not their own).
+    np.testing.assert_allclose(np.asarray(state.X.mean(0)), 0.0, atol=1e-5)
+    assert float(jnp.abs(state.X_test.mean(0)).max()) > 1e-4
+
+
+def test_pipeline_run_defaults():
+    X, Y = _make_problem(jax.random.PRNGKey(7), n=200, p=12, t=6, noise=0.02)
+    state = pipeline.run(X, Y, n_perms=2)
+    assert state.evaluation.mean_r > 0.8
+    assert state.report.decision.solver == "ridge"  # single device here
+
+
+# ---------------------------------------------------------------------------
+# dtype: f32 accumulation means bf16 inputs select the same λ (satellite)
+# ---------------------------------------------------------------------------
+
+def test_bf16_input_selects_same_lambda():
+    X, Y = _make_problem(jax.random.PRNGKey(8), n=150, p=16, t=8, noise=0.5)
+    cfg = ridge.RidgeCVConfig(n_folds=3)
+    res32 = ridge.ridge_cv(X, Y, cfg)
+    res16 = ridge.ridge_cv(X.astype(jnp.bfloat16), Y.astype(jnp.bfloat16),
+                           cfg)
+    assert res16.best_lambda.dtype == jnp.float32
+    assert float(res16.best_lambda) == float(res32.best_lambda)
+    np.testing.assert_allclose(np.asarray(res16.weights),
+                               np.asarray(res32.weights), rtol=0.1, atol=0.05)

@@ -1,0 +1,23 @@
+"""BrainEncoder auto-dispatch parity on a multi-device mesh, run in a
+subprocess so the virtual-device XLA flag never leaks into this test process
+(per the single-device policy for smoke tests)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.timeout(600)
+def test_encoder_distributed_checks():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tests", "helpers",
+                                      "encoder_checks.py")],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    assert "ALL_OK" in proc.stdout

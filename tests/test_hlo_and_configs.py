@@ -44,13 +44,12 @@ def test_collective_bytes_counts_start_not_done():
 
 
 def test_collective_bytes_real_psum():
-    mesh = jax.make_mesh((1,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core.compat import make_mesh, shard_map
+    mesh = make_mesh((1,), ("x",))
 
     def f(a):
         return jax.lax.psum(a, "x")
 
-    from jax import shard_map
     from jax.sharding import PartitionSpec as Pspec
     g = shard_map(f, mesh=mesh, in_specs=Pspec(), out_specs=Pspec())
     hlo = jax.jit(g).lower(jnp.zeros((32, 32), jnp.float32)).compile().as_text()
