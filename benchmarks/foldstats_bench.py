@@ -1,0 +1,115 @@
+"""Fold-statistics perf trajectory: seed per-fold CV vs single-pass downdating.
+
+Times ``ridge.ridge_cv_reference`` (the seed path: every CV split
+concatenates its training rows and re-accumulates their Gram — ``k·np²`` of
+``T_W`` on the critical path) against ``ridge.ridge_cv`` (single-pass fold
+statistics + exact Gram downdating, ``np²`` once) on the shapes used by
+``benchmarks/run.py``/``distributed_bench.py``, for both factorisation
+sides, and asserts bit-level λ agreement plus f32-tolerance weight parity
+while it measures.
+
+Writes ``BENCH_foldstats.json`` next to the repo root so the perf
+trajectory is machine-readable::
+
+    {"rows": [{"name", "n", "p", "t", "n_folds", "seed_us", "folded_us",
+               "speedup", "lambda_match", "max_weight_err"}, ...]}
+
+``--smoke`` runs one tiny shape with a single rep — a CI guard that the
+perf path still imports and the two implementations still agree.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# (name, n, p, t): shapes track benchmarks/run.py + distributed_bench
+# problem sizes; dual is the n < p whole-brain-MOR-style regime.
+SHAPES = [
+    ("small", 512, 128, 256),
+    ("fig4_encoding", 1080, 128, 512),     # run.py fig4's train split
+    ("medium", 1024, 256, 512),            # distributed_bench.py's shape
+    ("fig7_largest", 1024, 384, 1024),     # run.py fig7's largest row
+    ("dual", 256, 1024, 256),
+]
+SMOKE_SHAPES = [("smoke", 96, 16, 8), ("smoke_dual", 24, 48, 8)]
+
+
+def timed(fn, reps: int) -> float:
+    import jax
+    jax.block_until_ready(fn())  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.time() - t0) / reps * 1e6  # µs
+
+
+def bench_shape(name: str, n: int, p: int, t: int, n_folds: int,
+                reps: int) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.core import ridge
+
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    X = jax.random.normal(k1, (n, p), jnp.float32)
+    W = jax.random.normal(k2, (p, t), jnp.float32) / np.sqrt(p)
+    Y = X @ W + 0.1 * jax.random.normal(k3, (n, t), jnp.float32)
+    cfg = ridge.RidgeCVConfig(n_folds=n_folds)
+
+    seed_us = timed(lambda: ridge.ridge_cv_reference(X, Y, cfg), reps)
+    folded_us = timed(lambda: ridge.ridge_cv(X, Y, cfg), reps)
+
+    ref = ridge.ridge_cv_reference(X, Y, cfg)
+    new = ridge.ridge_cv(X, Y, cfg)
+    lambda_match = float(ref.best_lambda) == float(new.best_lambda)
+    max_err = float(np.max(np.abs(np.asarray(ref.weights) -
+                                  np.asarray(new.weights))))
+    row = {"name": name, "n": n, "p": p, "t": t, "n_folds": n_folds,
+           "seed_us": round(seed_us, 1), "folded_us": round(folded_us, 1),
+           "speedup": round(seed_us / folded_us, 2),
+           "lambda_match": lambda_match,
+           "max_weight_err": max_err}
+    print(f"foldstats_{name},{folded_us:.1f},"
+          f"seed_us={seed_us:.1f};speedup={row['speedup']:.2f};"
+          f"lambda_match={lambda_match};max_weight_err={max_err:.2e}",
+          flush=True)
+    if not lambda_match:
+        raise SystemExit(f"λ selection diverged on {name}")
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shape, 1 rep — perf-path import/parity guard")
+    ap.add_argument("--n-folds", type=int, default=5)
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default: BENCH_foldstats.json, or "
+                         "BENCH_foldstats_smoke.json with --smoke so a CI "
+                         "smoke never clobbers the real trajectory)")
+    args = ap.parse_args()
+    if args.out is None:
+        name = ("BENCH_foldstats_smoke.json" if args.smoke
+                else "BENCH_foldstats.json")
+        args.out = os.path.join(REPO, name)
+
+    shapes = SMOKE_SHAPES if args.smoke else SHAPES
+    reps = 1 if args.smoke else args.reps
+    print("name,us_per_call,derived")
+    rows = [bench_shape(name, n, p, t, args.n_folds, reps)
+            for name, n, p, t in shapes]
+    payload = {"n_folds": args.n_folds, "smoke": args.smoke, "rows": rows}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {args.out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -52,25 +52,25 @@ def timed(fn, reps=3):
 def bench_quality():
     import jax
     import jax.numpy as jnp
-    from repro.core import ridge, scoring
+    from repro.core import scoring
     from repro.data import fmri
+    from repro.encoding import BrainEncoder
 
     spec = fmri.SubjectSpec(n=1200, p=128, t=512)
     X, Y, mask = fmri.generate(jax.random.PRNGKey(0), spec)
     tr, te = scoring.train_test_split_indices(jax.random.PRNGKey(1), spec.n)
     Xtr, Ytr = X[tr], Y[tr]
 
-    us = timed(lambda: ridge.ridge_cv(Xtr, Ytr), reps=2)
-    res = ridge.ridge_cv(Xtr, Ytr)
-    r = np.asarray(scoring.pearson_r(Y[te], ridge.predict(X[te],
-                                                          res.weights)))
+    enc = BrainEncoder()                      # auto → single-shard ridge
+    us = timed(lambda: enc.fit(Xtr, Ytr).weights_, reps=2)
+    r = enc.score(X[te], Y[te])
     m = np.asarray(mask)
     row("fig4_encoding_quality", us,
         f"r_responsive={r[m].mean():.3f};r_other={r[~m].mean():.3f};"
-        f"lambda={float(res.best_lambda)}")
+        f"lambda={float(enc.report_.best_lambda[0])}")
 
     null = scoring.null_permutation_scores(jax.random.PRNGKey(2), X[te],
-                                           Y[te], res.weights, n_perms=10)
+                                           Y[te], enc.weights_, n_perms=10)
     row("fig5_null_permutation", 0.0,
         f"null_abs_r={float(jnp.mean(jnp.abs(null))):.4f};"
         f"aligned_r={r[m].mean():.3f}")
@@ -98,15 +98,15 @@ def bench_thread_scaling():
     p is large so the factorisation term T_M ∝ p²n genuinely dominates."""
     import jax
     import jax.numpy as jnp
-    from repro.core import ridge
+    from repro.encoding import BrainEncoder
 
     n, p = 1024, 384
     X = jax.random.normal(jax.random.PRNGKey(0), (n, p), jnp.float32)
-    cfg = ridge.RidgeCVConfig(n_folds=3)
     base = None
     for t in (16, 128, 1024):
         Y = jax.random.normal(jax.random.PRNGKey(1), (n, t), jnp.float32)
-        us = timed(lambda: ridge.ridge_cv(X, Y, cfg), reps=2)
+        enc = BrainEncoder(solver="ridge", n_folds=3)
+        us = timed(lambda: enc.fit(X, Y).weights_, reps=2)
         per_target = us / t
         base = base or per_target
         row(f"fig7_tm_amortisation_t{t}", us,

@@ -7,6 +7,8 @@ boilerplate.  The modules here stay importable for direct use, benchmarks,
 and tests:
 
   ridge.RidgeCVConfig / ridge.ridge_cv   — mutualised single-shard RidgeCV
+  foldstats.compute / FoldStatsAccumulator — single-pass fold statistics
+                                           (downdating CV, out-of-core)
   mor.mor_fit / mor.mor_fit_distributed  — MultiOutput baseline (paper Fig. 8)
   bmor.bmor_fit / bmor.bmor_fit_dual     — Batch Multi-Output ridge (Alg. 1)
   banded.banded_ridge_cv                 — per-feature-space λ (ref [13])
@@ -15,8 +17,9 @@ and tests:
   compat.shard_map / compat.make_mesh    — JAX version shims
 """
 from repro.core import (  # noqa: F401
-    banded, bmor, compat, complexity, mor, ridge, scoring,
+    banded, bmor, compat, complexity, foldstats, mor, ridge, scoring,
 )
+from repro.core.foldstats import FoldStats, FoldStatsAccumulator  # noqa: F401
 from repro.core.banded import BandedConfig, BandedResult  # noqa: F401
 from repro.core.bmor import BMORResult, bmor_fit  # noqa: F401
 from repro.core.ridge import (  # noqa: F401

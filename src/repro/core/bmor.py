@@ -10,20 +10,21 @@ weights for its targets.  Complexity: ``T_B-MOR = c⁻¹·T_W + T_M`` (Eq. 7).
 TPU adaptation (DESIGN §2): rows of ``X``/``Y`` (time samples) are
 additionally sharded over ``data_axis``, and the factorisation works on the
 Gram matrix ``G = XᵀX`` — a *sum over row shards* — so distribution costs one
-``psum`` of p² (+ p·t_local) elements instead of a distributed SVD.  The
-eigenvalues of G are the squared singular values of X, so the λ sweep is the
-same diagonal rescale as paper Eq. 5.
+``psum`` instead of a distributed SVD.  The eigenvalues of G are the squared
+singular values of X, so the λ sweep is the same diagonal rescale as paper
+Eq. 5.
 
-Cross-validation over row-sharded data uses the Gram downdate identity:
-``G_train(fold) = G_total − G_fold`` and ``XᵀY_train = XᵀY_total − XᵀY_fold``,
-with fold membership computed from global row indices.  Each fold still pays
+Cross-validation over row-sharded data runs on the shared fold-statistics
+subsystem (``repro.core.foldstats``): each shard accumulates its per-fold
+partials ``{G_f, C_f}`` once, ONE ``psum`` of the stacked ``(k, p, ·)``
+tensors globalises them, and every training split derives by the Gram
+downdate ``G_train(f) = G_total − G_f`` (exact algebra — see the
+Algorithm-1 fidelity note in ``repro.core.ridge``).  Each fold still pays
 its own eigendecomposition — the per-split ``svd(X_train)`` of Algorithm 1.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +32,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.compat import shard_map
 
-from repro.core import ridge
+from repro.core import foldstats
 from repro.core.ridge import RidgeCVConfig
 
 
@@ -46,26 +47,6 @@ def _global_row_ids(n_local: int, axis: str | tuple[str, ...]) -> jax.Array:
     """Global row indices of this shard's rows (row-major shard order)."""
     idx = jax.lax.axis_index(axis)
     return idx * n_local + jnp.arange(n_local)
-
-
-def _fold_of_rows(row_ids: jax.Array, n_total: int, n_folds: int) -> jax.Array:
-    """Contiguous fold id of each global row (same split as ridge._fold_bounds)."""
-    base, rem = divmod(n_total, n_folds)
-    # Rows [0, (base+1)*rem) live in folds of size base+1; the rest size base.
-    big = (base + 1) * rem
-    in_big = row_ids < big
-    fold_big = row_ids // jnp.maximum(base + 1, 1)
-    fold_small = rem + (row_ids - big) // jnp.maximum(base, 1)
-    return jnp.where(in_big, fold_big, fold_small).astype(jnp.int32)
-
-
-def _masked_gram(X: jax.Array, Y: jax.Array, mask: jax.Array
-                 ) -> tuple[jax.Array, jax.Array]:
-    Xm = X * mask[:, None]
-    G = jnp.matmul(Xm.T, Xm, preferred_element_type=jnp.float32)
-    XtY = jnp.matmul(Xm.T, Y * mask[:, None],
-                     preferred_element_type=jnp.float32)
-    return G, XtY
 
 
 def bmor_fit(X: jax.Array, Y: jax.Array, mesh: Mesh,
@@ -85,22 +66,24 @@ def bmor_fit(X: jax.Array, Y: jax.Array, mesh: Mesh,
         lams = jnp.asarray(cfg.lambdas, dtype=jnp.float32)          # (r,)
         rows = _global_row_ids(n_local, data_spec if len(data_spec) > 1
                                else data_spec[0])
-        folds = _fold_of_rows(rows, n_total, cfg.n_folds)
+        folds = foldstats.fold_of_rows(rows, n_total, cfg.n_folds)
 
-        # Total Gram statistics: one psum over the row shards (DESIGN §2).
-        G_tot, XtY_tot = _masked_gram(X_l, Y_l, jnp.ones((n_local,), X_l.dtype))
-        G_tot = jax.lax.psum(G_tot, data_spec)
-        XtY_tot = jax.lax.psum(XtY_tot, data_spec)
+        # Per-fold partial statistics, globalised in ONE psum each (the
+        # stacked (k, p, ·) layout replaces the seed's k+1 separate psums);
+        # totals and training splits then derive by summation/downdating.
+        G_folds, C_folds = foldstats.partial_fold_stats(
+            X_l, Y_l, folds, cfg.n_folds)
+        G_folds = jax.lax.psum(G_folds, data_spec)                  # (k,p,p)
+        C_folds = jax.lax.psum(C_folds, data_spec)                  # (k,p,t_l)
+        G_tot = jnp.sum(G_folds, axis=0)
+        C_tot = jnp.sum(C_folds, axis=0)
         eye = cfg.jitter * jnp.eye(p, dtype=jnp.float32)
 
         def fold_scores(f: int) -> jax.Array:
             val = (folds == f).astype(X_l.dtype)                    # (n_local,)
-            G_f, XtY_f = _masked_gram(X_l, Y_l, val)
-            G_f = jax.lax.psum(G_f, data_spec)
-            XtY_f = jax.lax.psum(XtY_f, data_spec)
             # Gram downdate: training statistics for this split.
-            evals, Q = jnp.linalg.eigh(G_tot - G_f + eye)           # per-split
-            A = jnp.matmul(Q.T, XtY_tot - XtY_f,
+            evals, Q = jnp.linalg.eigh(G_tot - G_folds[f] + eye)    # per-split
+            A = jnp.matmul(Q.T, C_tot - C_folds[f],
                            preferred_element_type=jnp.float32)      # (p, t_l)
             Bv = jnp.matmul(X_l * val[:, None], Q,
                             preferred_element_type=jnp.float32)     # (n_l, p)
@@ -124,7 +107,7 @@ def bmor_fit(X: jax.Array, Y: jax.Array, mesh: Mesh,
 
         # Final refit on all rows with this batch's λ (Alg. 1 line 14).
         evals, Q = jnp.linalg.eigh(G_tot + eye)
-        z = jnp.matmul(Q.T, XtY_tot, preferred_element_type=jnp.float32)
+        z = jnp.matmul(Q.T, C_tot, preferred_element_type=jnp.float32)
         z = z / (evals + lams[best])[:, None]
         W_l = jnp.matmul(Q, z, preferred_element_type=jnp.float32)  # (p, t_l)
         return W_l, lams[best][None], cv_scores[None, :]
@@ -140,34 +123,6 @@ def bmor_fit(X: jax.Array, Y: jax.Array, mesh: Mesh,
     return BMORResult(weights=W, best_lambda=best_lam, cv_scores=cv)
 
 
-def bmor_fit_jit(X: jax.Array, Y: jax.Array, mesh: Mesh,
-                 data_axis="data", target_axis="model",
-                 cfg: RidgeCVConfig = RidgeCVConfig()) -> BMORResult:
-    """jit'd entry point with explicit input shardings."""
-    data_spec = data_axis if isinstance(data_axis, tuple) else (data_axis,)
-    fn = jax.jit(partial(bmor_fit, mesh=mesh, data_axis=data_axis,
-                         target_axis=target_axis, cfg=cfg),
-                 in_shardings=(
-                     jax.sharding.NamedSharding(mesh, P(data_spec, None)),
-                     jax.sharding.NamedSharding(mesh, P(data_spec, target_axis))))
-    return fn(X, Y)
-
-
-def encode_features(X: jax.Array, Y: jax.Array, mesh: Mesh,
-                    cfg: RidgeCVConfig = RidgeCVConfig(),
-                    data_axis="data", target_axis="model"
-                    ) -> tuple[BMORResult, jax.Array]:
-    """Fit B-MOR and return (result, test predictions on the training X).
-
-    Convenience wrapper used by the encoding launcher; callers wanting a held
-    out evaluation should split first (``scoring.train_test_split_indices``).
-    """
-    res = bmor_fit(X, Y, mesh, data_axis=data_axis, target_axis=target_axis,
-                   cfg=cfg)
-    preds = ridge.predict(X, res.weights)
-    return res, preds
-
-
 def bmor_fit_dual(X: jax.Array, Y: jax.Array, mesh: Mesh,
                   target_axis: str = "model",
                   cfg: RidgeCVConfig = RidgeCVConfig()) -> BMORResult:
@@ -177,12 +132,14 @@ def bmor_fit_dual(X: jax.Array, Y: jax.Array, mesh: Mesh,
     In the dual form the factorisation lives on the kernel ``K = XXᵀ``
     (n×n), which is SMALL precisely when the dual form is chosen — so rows
     are replicated (no psum needed) and only the paper's batch axis (the
-    targets) is sharded.  Each target batch pays one eigendecomposition per
-    CV split, exactly Algorithm 1 with ``svd(X_train)`` replaced by
-    ``eigh(K_train)`` (identical spectrum).
+    targets) is sharded.  ``K`` is accumulated once per shard and every CV
+    split slices its training block ``K[tr, tr]`` out of it (the dual
+    mirror of the Gram downdate); each target batch still pays one
+    eigendecomposition per split, exactly Algorithm 1 with
+    ``svd(X_train)`` replaced by ``eigh(K_train)`` (identical spectrum).
     """
     n = X.shape[0]
-    bounds = ridge._fold_bounds(n, cfg.n_folds)
+    bounds = foldstats.fold_bounds(n, cfg.n_folds)
 
     def shard_fn(X_l: jax.Array, Y_l: jax.Array):
         lams = jnp.asarray(cfg.lambdas, dtype=jnp.float32)

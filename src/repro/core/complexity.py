@@ -42,6 +42,44 @@ def t_w(w: RidgeWorkload) -> float:
     return float(w.p) * w.n * w.t * w.r
 
 
+def t_w_per_fold(w: RidgeWorkload) -> float:
+    """Gram-statistics cost of per-fold re-accumulation (the seed CV path).
+
+    Each of the k splits recomputes ``X_trᵀX_tr`` over its ``(k−1)/k·n``
+    training rows — ``(k−1)·np²`` total — and the full-data refit pays one
+    more ``np²``: the dominant ``O(np²)`` term is on the critical path
+    ``k`` times.
+    """
+    return float(w.n_folds) * w.n * float(w.p) ** 2
+
+
+def t_w_folded(w: RidgeWorkload) -> float:
+    """Gram-statistics cost with single-pass fold statistics — ``np²``.
+
+    All per-fold partials ``{G_f, C_f}`` are accumulated in one pass over
+    the rows (``repro.core.foldstats``); every training split derives by
+    the exact downdate ``G_total − G_f`` and the refit statistics are the
+    fold sums themselves, so the ``np²`` term is paid exactly once
+    (k-independent) instead of ``t_w_per_fold``'s ``k·np²``.
+    """
+    return float(w.n) * float(w.p) ** 2
+
+
+def t_w_folded_dual(w: RidgeWorkload) -> float:
+    """Dual mirror of ``t_w_folded``: one n×n kernel accumulation (``n²p``).
+
+    ``K = XXᵀ`` is built once and every CV split slices its training block
+    ``K[tr, tr]`` from it, so the accumulation cost is k-independent just
+    like the primal fold statistics.
+    """
+    return float(w.n) ** 2 * w.p
+
+
+def fold_redundancy_factor(w: RidgeWorkload) -> float:
+    """How much Gram work per-fold CV repeats vs the single-pass path (= k)."""
+    return t_w_per_fold(w) / t_w_folded(w)
+
+
 def t_m_dual(w: RidgeWorkload) -> float:
     """T_M in the dual/kernel form: factorise K = XXᵀ (n×n) — O(n²pr + nr).
 
@@ -57,9 +95,12 @@ def t_bmor_sharded(w: RidgeWorkload, c_data: int, c_target: int) -> float:
 
     Extends Eq. 7: the target-batch axis divides T_W (c⁻¹·T_W) while the
     row-shard axis divides the Gram accumulation inside T_M (the psum'd
-    ``XᵀX`` is a sum over row shards — DESIGN §2).
+    ``XᵀX`` is a sum over row shards — DESIGN §2).  The single-pass fold
+    statistics (``t_w_folded``) ride the same row-shard axis, keeping this
+    cost comparable with the ridge branch's ``t_w_folded + T_M`` (both
+    paths pay the np² accumulation exactly once).
     """
-    return t_w(w) / c_target + t_m(w) / c_data
+    return t_w(w) / c_target + (t_m(w) + t_w_folded(w)) / c_data
 
 
 def t_ridge_single(w: RidgeWorkload) -> float:

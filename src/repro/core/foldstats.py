@@ -1,0 +1,330 @@
+"""Single-pass fold-aware Gram statistics (CV by downdating, not recompute).
+
+The paper's mutualisation lever (Eq. 4-5) computes the expensive statistics
+once and reuses them across all targets and all λ — but k-fold CV naively
+re-accumulates the Gram matrix ``G_train = X_trᵀX_tr`` for every split,
+paying the dominant ``T_W = O(np²)`` term ``k`` times (each split covers
+``(k-1)/k`` of the rows, so the total is ``(k-1)·np²`` plus ``np²`` for the
+full-data refit).
+
+This module reformulates CV on *sufficient statistics*: every per-fold
+partial statistic
+
+    G_f = X_fᵀX_f        C_f = X_fᵀY_f        (plus first/second moments)
+
+is accumulated in ONE streaming pass over the rows — each row enters exactly
+one fold's accumulator — and every training-split statistic is then derived
+by subtraction (the Gram downdate identity, exact in exact arithmetic):
+
+    G_train(f) = Σ_g G_g − G_f        C_train(f) = Σ_g C_g − C_f
+
+The full-data refit statistics are the sums themselves, so a complete
+k-fold CV + refit costs a single ``np²`` accumulation.  The same identity
+is what makes the distributed B-MOR path a single ``psum`` over row shards
+(``repro.core.bmor``); here it is factored out so the single-shard
+``ridge.ridge_cv``, the dual path, B-MOR, and the Pallas kernel
+(``repro.kernels.gram.xty_folds``) all consume one implementation.
+
+The per-row moment statistics (``xsum``, ``ysum``, ``ysq``, ``count``) make
+validation scores computable from the statistics alone (no validation-row
+matrix needed): for weights ``W`` the held-out sums are ``Σŷ = xsum_fᵀW``,
+``Σŷ² = diag(WᵀG_fW)``, ``Σyŷ = diag(C_fᵀW)`` — which is what opens the
+out-of-core path (``FoldStatsAccumulator`` / ``BrainEncoder.fit_chunks``)
+where ``X`` arrives as row batches larger than device memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def fold_bounds(n: int, n_folds: int) -> list[tuple[int, int]]:
+    """Contiguous k-fold boundaries (static, trace-time).
+
+    The first ``n % n_folds`` folds get the extra row, matching
+    scikit-learn's ``KFold`` and the seed ``ridge._fold_bounds``.
+    """
+    if not 1 <= n_folds <= n:
+        raise ValueError(f"need 1 <= n_folds <= n, got n_folds={n_folds}, "
+                         f"n={n}")
+    sizes = [n // n_folds + (1 if i < n % n_folds else 0)
+             for i in range(n_folds)]
+    bounds, start = [], 0
+    for s in sizes:
+        bounds.append((start, start + s))
+        start += s
+    return bounds
+
+
+def fold_of_rows(row_ids: jax.Array, n_total: int, n_folds: int) -> jax.Array:
+    """Contiguous fold id of each global row (same split as ``fold_bounds``).
+
+    Traced-index variant for sharded rows, where a shard's slice of the
+    global row range is only known at run time (``jax.lax.axis_index``).
+    """
+    base, rem = divmod(n_total, n_folds)
+    # Rows [0, (base+1)*rem) live in folds of size base+1; the rest size base.
+    big = (base + 1) * rem
+    in_big = row_ids < big
+    fold_big = row_ids // jnp.maximum(base + 1, 1)
+    fold_small = rem + (row_ids - big) // jnp.maximum(base, 1)
+    return jnp.where(in_big, fold_big, fold_small).astype(jnp.int32)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FoldStats:
+    """Per-fold sufficient statistics of a supervised row stream.
+
+    All statistics are f32 accumulations regardless of the input dtype
+    (bf16/f32 inputs hit the MXU with ``preferred_element_type=float32``,
+    the DESIGN §2 adaptation of the paper's float64 BLAS).
+    """
+
+    G: jax.Array        # (k, p, p)  per-fold XᵀX
+    C: jax.Array        # (k, p, t)  per-fold XᵀY
+    xsum: jax.Array     # (k, p)     per-fold Σ x
+    ysum: jax.Array     # (k, t)     per-fold Σ y
+    # Per-fold CENTRED second moment Σ (y − ȳ_f)², not the raw Σ y²: raw
+    # second moments cancel catastrophically in f32 (ss_tot = Σy² − mȳ²)
+    # for targets with large means, flipping λ selection on un-standardized
+    # data.  The streaming accumulator maintains it with the Chan et al.
+    # pairwise-combination update, so it stays exact under chunking.
+    ysq: jax.Array      # (k, t)     per-fold Σ (y − ȳ_f)²
+    count: jax.Array    # (k,)       per-fold row count
+
+    @property
+    def n_folds(self) -> int:
+        return self.G.shape[0]
+
+    @property
+    def G_total(self) -> jax.Array:
+        """Full-data Gram — the sums over folds ARE the refit statistics."""
+        return jnp.sum(self.G, axis=0)
+
+    @property
+    def C_total(self) -> jax.Array:
+        return jnp.sum(self.C, axis=0)
+
+    def train(self, f: int) -> tuple[jax.Array, jax.Array]:
+        """Downdated training statistics ``(G_tr, C_tr)`` for split ``f``.
+
+        ``G_total − G_f`` equals ``X_trᵀX_tr`` exactly in exact arithmetic
+        (it is a sum over disjoint row sets), so this is Algorithm 1's
+        per-split factorisation input without re-touching the rows.
+        """
+        return self.G_total - self.G[f], self.C_total - self.C[f]
+
+
+def _xty(X: jax.Array, Y: jax.Array) -> jax.Array:
+    return jnp.matmul(X.T, Y, preferred_element_type=jnp.float32)
+
+
+def compute(X: jax.Array, Y: jax.Array, n_folds: int, *,
+            use_pallas: bool = False) -> FoldStats:
+    """All per-fold statistics in one pass over the rows.
+
+    Fold membership is contiguous and trace-time static (``fold_bounds``),
+    so each fold's ``{G_f, C_f}`` is a matmul over exactly its own rows —
+    no row is touched by more than one accumulation, no per-fold
+    ``concatenate`` copy of ``X`` is made.  With ``use_pallas`` the fold
+    tiles come from ``kernels.gram.xty_folds``, which streams HBM row
+    blocks once and scatters each block's contribution to its fold's
+    output tile.
+    """
+    n, p = X.shape
+    bounds = fold_bounds(n, n_folds)
+    if use_pallas:
+        from repro.kernels import ops
+        # One fused kernel invocation: Xᵀ[X | Y] per fold — a single repack
+        # and a single HBM sweep of X instead of separate G and C passes.
+        dt = jnp.promote_types(X.dtype, Y.dtype)
+        Z = jnp.concatenate([X.astype(dt), Y.astype(dt)], axis=1)
+        GC = ops.xty_folds(X.astype(dt), Z, tuple(bounds))
+        G, C = GC[:, :, :p], GC[:, :, p:]
+    else:
+        G = jnp.stack([_xty(X[lo:hi], X[lo:hi]) for lo, hi in bounds])
+        C = jnp.stack([_xty(X[lo:hi], Y[lo:hi]) for lo, hi in bounds])
+    Xf = X.astype(jnp.float32)
+    Yf = Y.astype(jnp.float32)
+    xsum = jnp.stack([jnp.sum(Xf[lo:hi], axis=0) for lo, hi in bounds])
+    ysum = jnp.stack([jnp.sum(Yf[lo:hi], axis=0) for lo, hi in bounds])
+    ysq = jnp.stack([
+        jnp.sum((Yf[lo:hi] - jnp.mean(Yf[lo:hi], axis=0)) ** 2, axis=0)
+        for lo, hi in bounds])
+    count = jnp.asarray([hi - lo for lo, hi in bounds], jnp.float32)
+    return FoldStats(G=G, C=C, xsum=xsum, ysum=ysum, ysq=ysq, count=count)
+
+
+def partial_fold_stats(X: jax.Array, Y: jax.Array, fold_ids: jax.Array,
+                       n_folds: int) -> tuple[jax.Array, jax.Array]:
+    """Per-fold ``{G_f, C_f}`` from traced fold membership (sharded rows).
+
+    Inside ``shard_map`` a shard's global row range depends on
+    ``axis_index`` — not trace-time static — so fold membership is a mask,
+    not a slice.  Each fold costs a masked matmul over the local rows; the
+    payoff is collective, not FLOP, economy: the stacked ``(k, p, ·)``
+    result is ONE ``psum`` and the total/training statistics then derive
+    by summation/downdating with no further collectives (B-MOR previously
+    paid ``k+1`` psums of the same bytes).
+    """
+    def one(f: int) -> tuple[jax.Array, jax.Array]:
+        m = (fold_ids == f).astype(X.dtype)[:, None]
+        Xm = X * m
+        return _xty(Xm, Xm), _xty(Xm, Y * m)
+    per_fold = [one(f) for f in range(n_folds)]
+    return (jnp.stack([g for g, _ in per_fold]),
+            jnp.stack([c for _, c in per_fold]))
+
+
+class FoldStatsAccumulator:
+    """Streaming builder of ``FoldStats`` from ordered row chunks.
+
+    The out-of-core entry point (``BrainEncoder.fit_chunks``): rows arrive
+    as host-sized batches, each batch is split at the (static) fold
+    boundaries it spans, and every segment updates its fold's accumulators
+    in place.  Rows must arrive in global row order; ``finalize`` checks
+    that exactly ``n_total`` rows were seen.
+    """
+
+    def __init__(self, n_total: int, n_folds: int):
+        self.n_total = n_total
+        self.bounds = fold_bounds(n_total, n_folds)
+        self._offset = 0
+        self._stats: FoldStats | None = None
+
+    def _init_stats(self, p: int, t: int) -> FoldStats:
+        k = len(self.bounds)
+        z = jnp.zeros
+        return FoldStats(G=z((k, p, p), jnp.float32),
+                         C=z((k, p, t), jnp.float32),
+                         xsum=z((k, p), jnp.float32),
+                         ysum=z((k, t), jnp.float32),
+                         ysq=z((k, t), jnp.float32),
+                         count=z((k,), jnp.float32))
+
+    def update(self, X_chunk: jax.Array, Y_chunk: jax.Array) -> None:
+        m = X_chunk.shape[0]
+        if self._offset + m > self.n_total:
+            raise ValueError(
+                f"chunk of {m} rows at offset {self._offset} overruns "
+                f"n_total={self.n_total}")
+        if self._stats is None:
+            self._stats = self._init_stats(X_chunk.shape[1],
+                                           Y_chunk.shape[1])
+        s = self._stats
+        for f, (lo, hi) in enumerate(self.bounds):
+            # Static intersection of [offset, offset+m) with this fold.
+            seg_lo = max(lo, self._offset) - self._offset
+            seg_hi = min(hi, self._offset + m) - self._offset
+            if seg_lo >= seg_hi:
+                continue
+            Xs = X_chunk[seg_lo:seg_hi]
+            Ys = Y_chunk[seg_lo:seg_hi]
+            Xs32, Ys32 = Xs.astype(jnp.float32), Ys.astype(jnp.float32)
+            # Chan et al. pairwise combination of the centred second moment:
+            # M2_{a∪b} = M2_a + M2_b + (μ_a − μ_b)²·n_a n_b/(n_a+n_b) —
+            # exact, and free of the Σy² − mȳ² cancellation.
+            n_a, n_b = s.count[f], float(seg_hi - seg_lo)
+            mu_b = jnp.mean(Ys32, axis=0)
+            m2_b = jnp.sum((Ys32 - mu_b) ** 2, axis=0)
+            mu_a = s.ysum[f] / jnp.maximum(n_a, 1.0)
+            delta2 = jnp.where(n_a > 0, (mu_a - mu_b) ** 2, 0.0)
+            m2_add = m2_b + delta2 * n_a * n_b / (n_a + n_b)
+            s = FoldStats(
+                G=s.G.at[f].add(_xty(Xs, Xs)),
+                C=s.C.at[f].add(_xty(Xs, Ys)),
+                xsum=s.xsum.at[f].add(jnp.sum(Xs32, axis=0)),
+                ysum=s.ysum.at[f].add(jnp.sum(Ys32, axis=0)),
+                ysq=s.ysq.at[f].add(m2_add),
+                count=s.count.at[f].add(n_b))
+        self._stats = s
+        self._offset += m
+
+    def finalize(self) -> FoldStats:
+        if self._stats is None or self._offset != self.n_total:
+            raise ValueError(
+                f"saw {self._offset} rows, expected n_total={self.n_total}")
+        return self._stats
+
+
+def compute_chunked(chunks: Iterable[tuple[jax.Array, jax.Array]],
+                    n_total: int, n_folds: int) -> FoldStats:
+    """One-call streaming accumulation over ``(X_chunk, Y_chunk)`` batches."""
+    acc = FoldStatsAccumulator(n_total, n_folds)
+    for X_chunk, Y_chunk in chunks:
+        acc.update(X_chunk, Y_chunk)
+    return acc.finalize()
+
+
+def validation_scores_from_stats(
+        stats: FoldStats, f: int, Q: jax.Array, evals: jax.Array,
+        C_tr: jax.Array, lambdas: jax.Array, scoring: str) -> jax.Array:
+    """Per-λ validation score of split ``f`` from sufficient statistics.
+
+    With ``W_r = Q (Λ+λ_r)⁻¹ QᵀC_tr``, the held-out error needs only the
+    fold's own statistics — no validation rows:
+
+        Σŷ   = xsum_fᵀ W_r          Σŷ²  = diag(W_rᵀ G_f W_r)
+        Σyŷ  = diag(C_fᵀ W_r)       ȳ, Σ(y−ȳ)², m  from the moment stats.
+
+    Everything stays in the eigenbasis, so the per-λ work is diagonal plus
+    one ``(p×p)·(p×t)`` contraction per λ — the mutualisation of Eq. 5
+    extended to the scoring itself.  Returns mean score across targets,
+    shape ``(r,)`` — ``"r2"`` and ``"r"`` match ``ridge._score`` exactly in
+    exact arithmetic.
+
+    Precision caveat: unlike the row-based CV loop (which centres the
+    validation rows before any large contraction), statistics can only be
+    centred *after* rotation, so f32 accuracy degrades roughly
+    quadratically in ``|ȳ|/σ_y``.  λ selection stays robust for "r2"
+    (score gaps between λ grow with the mean via the shrinkage penalty),
+    but extreme un-standardized targets should be standardized first —
+    ``BrainEncoder.fit_chunks`` enforces this.
+    """
+    # Coefficients in the eigenbasis, per λ: Z_r = (Λ+λ_r)⁻¹ QᵀC_tr.
+    A = jnp.matmul(Q.T, C_tr, preferred_element_type=jnp.float32)  # (p, t)
+    Z = A[None] / (evals[None, :, None] + lambdas[:, None, None])  # (r, p, t)
+    m = stats.count[f]
+    mu = (stats.ysum[f] / m)[None]                                 # (1, t) ȳ
+    m2 = stats.ysq[f][None]                                        # Σ(y−ȳ)²
+    # Rotate this fold's validation statistics into the eigenbasis, in
+    # CENTRED form: Ghat_c/Chat_c are the rotations of Σ(x−x̄)(x−x̄)ᵀ and
+    # Σ(x−x̄)(y−ȳ)ᵀ, so every per-λ contraction below runs at signal
+    # scale — the raw-moment expansions (s_hat2 − mŷ̄², …) would cancel
+    # catastrophically in f32 when predictions inherit large target means
+    # (the regime FoldStats.ysq is centred for).
+    u = jnp.matmul(stats.xsum[f], Q,
+                   preferred_element_type=jnp.float32)             # (p,)
+    Chat = jnp.matmul(Q.T, stats.C[f],
+                      preferred_element_type=jnp.float32)          # (p, t)
+    Chat_c = Chat - u[:, None] * mu
+    Ghat = jnp.matmul(Q.T, jnp.matmul(stats.G[f], Q,
+                                      preferred_element_type=jnp.float32),
+                      preferred_element_type=jnp.float32)          # (p, p)
+    Ghat_c = Ghat - u[:, None] * u[None, :] / m
+    s_hat = jnp.einsum("p,rpt->rt", u, Z,
+                       preferred_element_type=jnp.float32)         # Σŷ
+    c_xy = jnp.einsum("pt,rpt->rt", Chat_c, Z,
+                      preferred_element_type=jnp.float32)          # Σ(y−ȳ)ŷ
+    c_p2 = jnp.einsum("rpt,pq,rqt->rt", Z, Ghat_c, Z,
+                      preferred_element_type=jnp.float32)          # Σ(ŷ−ŷ̄)²
+    if scoring == "r2":
+        # Σ(y−ŷ)² = Σ(y−ȳ)² − 2Σ(y−ȳ)(ŷ−ŷ̄) + Σ(ŷ−ŷ̄)² + m(ŷ̄−ȳ)²,
+        # with only the scalar fold means meeting at full magnitude.
+        mean_term = m * (s_hat / m - mu) ** 2
+        ss_res = m2 - 2.0 * c_xy + c_p2 + mean_term
+        return jnp.mean(1.0 - ss_res / (m2 + 1e-12), axis=1)
+    # Pearson r from centred moments per target.
+    den = jnp.sqrt(jnp.maximum(m2 * c_p2, 0.0)) + 1e-12
+    return jnp.mean(c_xy / den, axis=1)
+
+
+__all__: Sequence[str] = (
+    "FoldStats", "FoldStatsAccumulator", "compute", "compute_chunked",
+    "fold_bounds", "fold_of_rows", "partial_fold_stats",
+    "validation_scores_from_stats",
+)

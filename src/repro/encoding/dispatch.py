@@ -122,14 +122,21 @@ def resolve(cfg: EncoderConfig, n: int, p: int, t: int,
                       f"(Tikhonov substitution), one T_M per candidate")
 
     if solver == "ridge":
+        # The CV Gram statistics are single-pass (t_w_folded = np², not the
+        # per-fold k·np² of the seed path) — foldstats downdating keeps the
+        # k-fold redundancy off the critical path.
         cost = (complexity.t_w(w) +
-                (complexity.t_m(w) if method == "eigh"
-                 else complexity.t_m_dual(w)))
+                (complexity.t_m(w) + complexity.t_w_folded(w)
+                 if method == "eigh"
+                 else complexity.t_m_dual(w) + complexity.t_w_folded_dual(w)))
         return DispatchDecision(
             solver="ridge", method=method, data_shards=1, target_shards=1,
             predicted_cost=cost,
             rationale=f"single shard, {method} factorisation mutualised "
-                      f"across t={t} targets and r={w.r} λ (T_M + T_W)")
+                      f"across t={t} targets and r={w.r} λ (T_M + T_W); "
+                      f"single-pass fold stats save "
+                      f"{complexity.fold_redundancy_factor(w):.0f}× on the "
+                      f"np² Gram term")
 
     if solver == "mor":
         c_t = cfg.target_shards or 1
@@ -146,7 +153,8 @@ def resolve(cfg: EncoderConfig, n: int, p: int, t: int,
         if cfg.data_shards not in (None, 1):
             raise ValueError("bmor_dual replicates rows; data_shards must "
                              "be 1 (the n×n kernel is small when n < p)")
-        cost = complexity.t_w(w) / c_t + complexity.t_m_dual(w)
+        cost = (complexity.t_w(w) / c_t + complexity.t_m_dual(w) +
+                complexity.t_w_folded_dual(w))
         return DispatchDecision(
             solver="bmor_dual", method="dual", data_shards=1,
             target_shards=c_t, predicted_cost=cost,

@@ -9,13 +9,13 @@ matrices) into a single ``EncodingReport``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Iterable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import banded, bmor, mor, ridge, scoring
+from repro.core import banded, bmor, foldstats, mor, ridge, scoring
 from repro.encoding.config import EncoderConfig
 from repro.encoding.dispatch import DispatchDecision, resolve
 from repro.encoding.sharding import ShardingPlan
@@ -94,6 +94,54 @@ class BrainEncoder:
         decision = resolve(self.config, n, p, t, jax.device_count())
         fitter = getattr(self, f"_fit_{decision.solver}")
         self.report_ = fitter(X, Y, decision)
+        return self
+
+    def fit_chunks(self, chunks: Iterable[tuple[jax.Array, jax.Array]],
+                   n_total: int) -> "BrainEncoder":
+        """Out-of-core fit from ordered ``(X_chunk, Y_chunk)`` row batches.
+
+        The chunks are streamed through a ``foldstats.FoldStatsAccumulator``
+        — only the ``(k, p, p+t)`` sufficient statistics ever live on the
+        device, so ``X`` may be arbitrarily taller than device memory — and
+        the CV'd solve runs entirely on the accumulated statistics
+        (``ridge.ridge_cv_from_stats``).  Primal/eigh single-shard only:
+        the streaming regime is tall-``n``, exactly where the Gram form
+        (p×p) is the small object.  Chunks must arrive in global row order;
+        the fold split matches ``fit`` on the concatenated rows.
+        """
+        if self.config.solver not in ("auto", "ridge"):
+            raise ValueError(
+                f"fit_chunks supports only the single-shard ridge solver; "
+                f"solver={self.config.solver!r} is pinned — use fit() for "
+                f"B-MOR/MOR/banded semantics")
+        if self.config.method == "dual" or self.config.bands is not None:
+            raise ValueError(
+                "fit_chunks is primal/eigh only (streamed row statistics "
+                "cannot build the dual kernel or per-band refits)")
+        stats = foldstats.compute_chunked(chunks, n_total,
+                                          self.config.n_folds)
+        p, t = stats.G.shape[1], stats.C.shape[2]
+        # Statistics-based CV scores lose f32 precision roughly
+        # quadratically in |ȳ|/σ_y (see foldstats.validation_scores_from
+        # _stats); refuse clearly pathological un-standardized targets
+        # instead of returning silently corrupted scores.
+        mu = np.asarray(jnp.sum(stats.ysum, axis=0)) / n_total
+        var = np.asarray(jnp.sum(stats.ysq, axis=0)) / max(n_total - 1, 1)
+        ratio = float(np.max(np.abs(mu) / np.sqrt(var + 1e-12)))
+        if ratio > 1e3:
+            raise ValueError(
+                f"fit_chunks: target mean/std ratio {ratio:.0f} is too "
+                f"large for statistics-based CV scoring in float32 — "
+                f"standardize the targets first (pipeline.standardize)")
+        cfg = dataclasses.replace(self.config, solver="ridge", method="eigh")
+        decision = resolve(cfg, n_total, p, t, jax.device_count())
+        res = ridge.ridge_cv_from_stats(stats,
+                                        cfg.ridge_cv_config("eigh"))
+        self.report_ = EncodingReport(
+            weights=res.weights,
+            best_lambda=np.asarray(res.best_lambda)[None],
+            cv_scores=np.asarray(res.cv_scores)[None, :],
+            lambdas=self.config.lambdas, decision=decision)
         return self
 
     @property

@@ -88,6 +88,27 @@ def fit(config: EncoderConfig | None = None, **overrides) -> Stage:
     return stage
 
 
+def fit_chunked(config: EncoderConfig | None = None, *,
+                chunk_rows: int = 1024, **overrides) -> Stage:
+    """Out-of-core fit stage: stream the training rows in ``chunk_rows``
+    batches through ``BrainEncoder.fit_chunks``.
+
+    Exercises the fold-statistics accumulator end to end (each batch is
+    folded into the ``(k, p, p+t)`` sufficient statistics and discarded);
+    callers whose ``X`` genuinely exceeds device memory should call
+    ``fit_chunks`` directly with a generator that loads batches lazily.
+    """
+    def stage(s: PipelineState) -> PipelineState:
+        n = s.X.shape[0]
+        chunks = ((s.X[lo:lo + chunk_rows], s.Y[lo:lo + chunk_rows])
+                  for lo in range(0, n, chunk_rows))
+        s.encoder = BrainEncoder(config, **overrides).fit_chunks(
+            chunks, n_total=n)
+        s.report = s.encoder.report_
+        return s
+    return stage
+
+
 def evaluate(n_perms: int = 10, seed: int = 1,
              on_train: bool = False) -> Stage:
     """Held-out Pearson r / R² + null-permutation control (§4.1–4.2).

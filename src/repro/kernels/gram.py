@@ -81,6 +81,85 @@ def gram(x: jax.Array, *, block_n: int = DEFAULT_BLOCK_N,
     return xty(x, x, block_n=block_n, block_p=block_p, interpret=interpret)
 
 
+def _make_xty_folds_kernel(blocks_per_fold: int):
+    """One (i, j) tile of one fold's output; reduction over that fold's
+    row blocks (grid axis 2).  The accumulator tile is zeroed at the fold's
+    first row block — a static modulus, since every fold spans exactly
+    ``blocks_per_fold`` blocks of the repacked row stream."""
+
+    def kernel(x_ref, y_ref, o_ref):
+        @pl.when(pl.program_id(2) % blocks_per_fold == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        x = x_ref[...]            # (bn, bpi)
+        y = y_ref[...]            # (bn, bpj)
+        o_ref[0, :, :] += jnp.dot(x.T, y,
+                                  preferred_element_type=jnp.float32)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("bounds", "block_n", "block_p",
+                                             "interpret"))
+def xty_folds(x: jax.Array, y: jax.Array, bounds: tuple[tuple[int, int], ...],
+              *, block_n: int = DEFAULT_BLOCK_N,
+              block_p: int = DEFAULT_BLOCK_P,
+              interpret: bool = False) -> jax.Array:
+    """Per-fold cross-Gram tiles ``out[f] = X_fᵀY_f`` in one HBM pass.
+
+    ``bounds`` are the (static) contiguous fold row ranges of
+    ``foldstats.fold_bounds`` — disjoint, covering ``[0, n)``.  The rows are
+    repacked so every fold occupies the same whole number of row blocks
+    (zero padding contributes nothing to the reduction, and fold sizes
+    differ by at most one row, so the waste is < k blocks); the fold of a
+    row block is then the static arithmetic ``b // blocks_per_fold``, which
+    steers each block's partial product into its fold's ``(f, i, j)``
+    output tile.  That tile stays resident in VMEM across the fold's
+    contiguous run of row blocks (the n axis is the innermost grid
+    dimension) and is zero-initialised at the fold's first block.  Net
+    effect: the full k-fold statistics cost one pass over ``X``/``Y``
+    instead of one pass per fold.
+
+    x: (n, p), y: (n, q) → (k, p, q) float32.
+    """
+    n, p = x.shape
+    n2, q = y.shape
+    assert n == n2, (x.shape, y.shape)
+    assert bounds and bounds[0][0] == 0 and bounds[-1][1] == n and all(
+        bounds[i][1] == bounds[i + 1][0] for i in range(len(bounds) - 1)), (
+        f"bounds {bounds} must be contiguous over [0, {n})")
+    k = len(bounds)
+    max_fold = max(hi - lo for lo, hi in bounds)
+    bn = min(block_n, _ceil_mult(max_fold, 8))
+    bp = min(block_p, _ceil_mult(max(p, q), 128))
+    p_pad, q_pad = _pad_to(p, bp), _pad_to(q, bp)
+
+    # Repack rows: fold f lives in blocks [f·B, (f+1)·B) of the row stream.
+    blocks_per_fold = pl.cdiv(max_fold, bn)
+    stride = blocks_per_fold * bn
+    xp = jnp.zeros((k * stride, p_pad), x.dtype)
+    yp = jnp.zeros((k * stride, q_pad), y.dtype)
+    for f, (lo, hi) in enumerate(bounds):
+        xp = xp.at[f * stride:f * stride + (hi - lo), :p].set(x[lo:hi])
+        yp = yp.at[f * stride:f * stride + (hi - lo), :q].set(y[lo:hi])
+
+    grid = (p_pad // bp, q_pad // bp, k * blocks_per_fold)
+    out = pl.pallas_call(
+        _make_xty_folds_kernel(blocks_per_fold),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bp), lambda i, j, b: (b, i)),
+            pl.BlockSpec((bn, bp), lambda i, j, b: (b, j)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, bp, bp), lambda i, j, b: (b // blocks_per_fold, i, j)),
+        out_shape=jax.ShapeDtypeStruct((k, p_pad, q_pad), jnp.float32),
+        interpret=interpret,
+    )(xp, yp)
+    return out[:, :p, :q]
+
+
 def _pad_to(v: int, m: int) -> int:
     return ((v + m - 1) // m) * m
 

@@ -35,6 +35,12 @@ def xty(x, y, **kw):
     return _gram.xty(x, y, **kw)
 
 
+def xty_folds(x, y, bounds, **kw):
+    """Per-fold XᵀY tiles in one HBM pass.  (n, p), (n, q) → (k, p, q)."""
+    kw.setdefault("interpret", _interpret())
+    return _gram.xty_folds(x, y, tuple(tuple(b) for b in bounds), **kw)
+
+
 def solve_lambda_grid(q, evals, a, lambdas, **kw):
     """Fused multi-λ eigenbasis solve.  → (r, p, t)."""
     kw.setdefault("interpret", _interpret())

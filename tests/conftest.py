@@ -6,3 +6,9 @@ def pytest_configure(config):
     # suite runs warning-free (and without the plugin, e.g. in this container).
     config.addinivalue_line(
         "markers", "timeout(seconds): per-test timeout (pytest-timeout)")
+    # Slow lane: interpret-mode Pallas kernel tests (correct but orders of
+    # magnitude slower than compiled).  CI's quick lane runs
+    # ``pytest -m "not slow"``; the tier-1 gate still runs everything.
+    config.addinivalue_line(
+        "markers", "slow: interpret-mode Pallas / long-running tests "
+                   "(excluded from the CI quick lane)")

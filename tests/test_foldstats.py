@@ -1,0 +1,313 @@
+"""Fold-statistics subsystem: downdating exactness, kernel, and CV parity.
+
+Property-style float64-oracle checks that the single-pass per-fold
+statistics and their downdated training splits equal directly-computed
+statistics (primal, dual, sharded-masked; f32 and bf16 inputs), plus parity
+of the rewritten ``ridge.ridge_cv`` against the seed per-fold
+implementation (``ridge.ridge_cv_reference``) on every solver path.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import complexity, foldstats, ridge
+from repro.core.ridge import RidgeCVConfig
+
+
+def _make_problem(key, n, p, t, noise=0.05, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    X = jax.random.normal(k1, (n, p), dtype)
+    W = jax.random.normal(k2, (p, t), dtype) / np.sqrt(p)
+    Y = (X @ W + noise * jax.random.normal(k3, (n, t), dtype)).astype(dtype)
+    return X, Y
+
+
+def _tol(dtype):
+    # bf16 inputs accumulate in f32 but quantise the operands first.
+    return dict(rtol=2e-2, atol=2e-1) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Downdated statistics vs float64 oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_downdated_primal_stats_match_f64_oracle(seed, dtype):
+    n, p, t, k = 157, 12, 7, 5
+    X, Y = _make_problem(jax.random.PRNGKey(seed), n, p, t, dtype=dtype)
+    X64 = np.asarray(X, np.float64)
+    Y64 = np.asarray(Y, np.float64)
+    stats = foldstats.compute(X, Y, k)
+    bounds = foldstats.fold_bounds(n, k)
+    for f, (lo, hi) in enumerate(bounds):
+        tr = np.r_[0:lo, hi:n]
+        G_tr, C_tr = stats.train(f)
+        np.testing.assert_allclose(np.asarray(G_tr),
+                                   X64[tr].T @ X64[tr], **_tol(dtype))
+        np.testing.assert_allclose(np.asarray(C_tr),
+                                   X64[tr].T @ Y64[tr], **_tol(dtype))
+        # Per-fold partials themselves.
+        np.testing.assert_allclose(np.asarray(stats.G[f]),
+                                   X64[lo:hi].T @ X64[lo:hi], **_tol(dtype))
+    # Totals are the full-data refit statistics.
+    np.testing.assert_allclose(np.asarray(stats.G_total), X64.T @ X64,
+                               **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(stats.C_total), X64.T @ Y64,
+                               **_tol(dtype))
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dual_kernel_blocks_match_f64_oracle(seed, dtype):
+    """The dual mirror: per-fold K[tr, tr] blocks of one XXᵀ."""
+    n, p, k = 37, 64, 4
+    X, _ = _make_problem(jax.random.PRNGKey(seed + 10), n, p, 3, dtype=dtype)
+    X64 = np.asarray(X, np.float64)
+    K = ridge.xxt(X)
+    for lo, hi in foldstats.fold_bounds(n, k):
+        tr = np.r_[0:lo, hi:n]
+        np.testing.assert_allclose(np.asarray(K[tr][:, tr]),
+                                   X64[tr] @ X64[tr].T, **_tol(dtype))
+        np.testing.assert_allclose(np.asarray(K[lo:hi][:, tr]),
+                                   X64[lo:hi] @ X64[tr].T, **_tol(dtype))
+
+
+@pytest.mark.parametrize("n,k", [(100, 5), (101, 5), (64, 3)])
+def test_sharded_masked_partials_match_slice_partials(n, k):
+    """The masked (traced-membership) accumulation used inside B-MOR's
+    shard_map equals the static-slice accumulation, fold by fold."""
+    X, Y = _make_problem(jax.random.PRNGKey(3), n, 10, 6)
+    fold_ids = foldstats.fold_of_rows(jnp.arange(n), n, k)
+    G_m, C_m = foldstats.partial_fold_stats(X, Y, fold_ids, k)
+    stats = foldstats.compute(X, Y, k)
+    np.testing.assert_allclose(np.asarray(G_m), np.asarray(stats.G),
+                               rtol=2e-5, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(C_m), np.asarray(stats.C),
+                               rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("n,k", [(10, 3), (100, 5), (101, 5), (7, 7)])
+def test_fold_of_rows_matches_fold_bounds(n, k):
+    ids = np.asarray(foldstats.fold_of_rows(jnp.arange(n), n, k))
+    want = np.empty(n, np.int32)
+    for f, (lo, hi) in enumerate(foldstats.fold_bounds(n, k)):
+        want[lo:hi] = f
+    np.testing.assert_array_equal(ids, want)
+
+
+def test_chunked_accumulator_matches_single_pass():
+    n, k = 203, 5
+    X, Y = _make_problem(jax.random.PRNGKey(4), n, 12, 8)
+    whole = foldstats.compute(X, Y, k)
+    for chunk in (37, 64, 203):
+        acc = foldstats.FoldStatsAccumulator(n, k)
+        for lo in range(0, n, chunk):
+            acc.update(X[lo:lo + chunk], Y[lo:lo + chunk])
+        got = acc.finalize()
+        for name in ("G", "C", "xsum", "ysum", "ysq", "count"):
+            np.testing.assert_allclose(np.asarray(getattr(got, name)),
+                                       np.asarray(getattr(whole, name)),
+                                       rtol=2e-5, atol=2e-4)
+
+
+def test_accumulator_rejects_bad_row_counts():
+    acc = foldstats.FoldStatsAccumulator(10, 2)
+    X, Y = _make_problem(jax.random.PRNGKey(5), 10, 4, 2)
+    with pytest.raises(ValueError, match="overruns"):
+        acc.update(X[:6], Y[:6]), acc.update(X, Y)
+    with pytest.raises(ValueError, match="expected n_total"):
+        foldstats.FoldStatsAccumulator(10, 2).finalize()
+
+
+# ---------------------------------------------------------------------------
+# ridge_cv (downdating) vs ridge_cv_reference (seed per-fold path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scoring", ["r2", "r"])
+@pytest.mark.parametrize("shape", [(160, 24, 12), (30, 64, 6)])
+def test_ridge_cv_parity_with_reference(shape, scoring):
+    """λ selection identical, weights/scores equal to f32 tolerance —
+    primal (n ≥ p) and dual (n < p), both scoring modes."""
+    n, p, t = shape
+    X, Y = _make_problem(jax.random.PRNGKey(6), n, p, t)
+    cfg = RidgeCVConfig(n_folds=4, scoring=scoring)
+    new = ridge.ridge_cv(X, Y, cfg)
+    ref = ridge.ridge_cv_reference(X, Y, cfg)
+    assert float(new.best_lambda) == float(ref.best_lambda)
+    np.testing.assert_allclose(np.asarray(new.cv_scores),
+                               np.asarray(ref.cv_scores), rtol=1e-3,
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(new.weights),
+                               np.asarray(ref.weights), rtol=2e-3, atol=2e-3)
+
+
+def test_ridge_cv_parity_bf16():
+    X, Y = _make_problem(jax.random.PRNGKey(7), 150, 16, 8, noise=0.5)
+    cfg = RidgeCVConfig(n_folds=3)
+    new = ridge.ridge_cv(X.astype(jnp.bfloat16), Y.astype(jnp.bfloat16), cfg)
+    ref = ridge.ridge_cv_reference(X.astype(jnp.bfloat16),
+                                   Y.astype(jnp.bfloat16), cfg)
+    assert float(new.best_lambda) == float(ref.best_lambda)
+    np.testing.assert_allclose(np.asarray(new.weights),
+                               np.asarray(ref.weights), rtol=5e-2, atol=5e-2)
+
+
+def test_ridge_cv_parity_unstandardized_large_mean_targets():
+    """Un-standardized targets with an intercept-bearing X: the centred
+    trace-identity scoring must not cancel catastrophically (raw-moment
+    expansions drift quadratically in the target mean here)."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(20), 3)
+    X = jax.random.normal(k1, (310, 24), jnp.float32).at[:, 0].set(1.0)
+    W = jax.random.normal(k2, (24, 12), jnp.float32) / 5
+    base = X @ W + 0.05 * jax.random.normal(k3, (310, 12), jnp.float32)
+    cfg = RidgeCVConfig(n_folds=5)
+    for offset, score_atol in ((100.0, 5e-3), (1e4, None)):
+        Y = base + offset
+        new = ridge.ridge_cv(X, Y, cfg)
+        ref = ridge.ridge_cv_reference(X, Y, cfg)
+        assert float(new.best_lambda) == float(ref.best_lambda), offset
+        # The out-of-core stats path (fit_chunks) scores from centred
+        # sufficient statistics and must stay λ-stable here too.
+        stats = foldstats.compute(X, Y, cfg.n_folds)
+        from_stats = ridge.ridge_cv_from_stats(stats, cfg)
+        assert float(from_stats.best_lambda) == float(ref.best_lambda), offset
+        if score_atol is not None:
+            np.testing.assert_allclose(np.asarray(new.cv_scores),
+                                       np.asarray(ref.cv_scores),
+                                       atol=score_atol)
+            np.testing.assert_allclose(np.asarray(from_stats.cv_scores),
+                                       np.asarray(ref.cv_scores),
+                                       atol=score_atol)
+
+
+def test_ridge_cv_high_noise_parity():
+    """Ill-conditioned regime (n_train < p within folds): downdated path
+    still selects the reference λ."""
+    X, Y = _make_problem(jax.random.PRNGKey(8), 40, 32, 8, noise=3.0)
+    cfg = RidgeCVConfig(n_folds=4)
+    new = ridge.ridge_cv(X, Y, cfg)
+    ref = ridge.ridge_cv_reference(X, Y, cfg)
+    assert float(new.best_lambda) == float(ref.best_lambda)
+
+
+def test_ridge_cv_from_stats_matches_ridge_cv():
+    n, p, t = 190, 20, 10
+    X, Y = _make_problem(jax.random.PRNGKey(9), n, p, t)
+    for scoring in ("r2", "r"):
+        cfg = RidgeCVConfig(n_folds=5, scoring=scoring)
+        stats = foldstats.compute(X, Y, cfg.n_folds)
+        a = ridge.ridge_cv_from_stats(stats, cfg)
+        b = ridge.ridge_cv(X, Y, cfg)
+        assert float(a.best_lambda) == float(b.best_lambda)
+        np.testing.assert_allclose(np.asarray(a.cv_scores),
+                                   np.asarray(b.cv_scores), rtol=1e-3,
+                                   atol=1e-3)
+        np.testing.assert_allclose(np.asarray(a.weights),
+                                   np.asarray(b.weights), rtol=1e-4,
+                                   atol=1e-4)
+    with pytest.raises(ValueError, match="primal-only"):
+        ridge.ridge_cv_from_stats(stats, RidgeCVConfig(method="dual"))
+
+
+def test_bmor_single_shard_matches_reference_weights():
+    """B-MOR (downdating via foldstats) on a 1-device mesh reproduces the
+    seed single-shard refit weights at f32 tolerance."""
+    from repro.core import bmor
+    from repro.core.compat import make_mesh
+
+    X, Y = _make_problem(jax.random.PRNGKey(10), 120, 16, 8, noise=0.01)
+    cfg = RidgeCVConfig(n_folds=3)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    res = bmor.bmor_fit(X, Y, mesh, cfg=cfg)
+    ref = ridge.ridge_cv_reference(X, Y, cfg)
+    assert float(res.best_lambda[0]) == float(ref.best_lambda)
+    np.testing.assert_allclose(np.asarray(res.weights),
+                               np.asarray(ref.weights), rtol=2e-3, atol=2e-3)
+
+
+def test_encoder_fit_chunks_matches_fit():
+    from repro.encoding import BrainEncoder
+
+    X, Y = _make_problem(jax.random.PRNGKey(11), 310, 24, 12)
+    enc = BrainEncoder(n_folds=4).fit(X, Y)
+    chunks = ((X[i:i + 64], Y[i:i + 64]) for i in range(0, 310, 64))
+    enc2 = BrainEncoder(n_folds=4).fit_chunks(chunks, n_total=310)
+    assert enc2.report_.best_lambda[0] == enc.report_.best_lambda[0]
+    np.testing.assert_allclose(np.asarray(enc2.weights_),
+                               np.asarray(enc.weights_), rtol=1e-4,
+                               atol=1e-4)
+    assert enc2.report_.decision.solver == "ridge"
+    # Pinned non-ridge solvers and pathological un-standardized targets are
+    # rejected, not silently mis-fit.
+    with pytest.raises(ValueError, match="single-shard ridge"):
+        BrainEncoder(solver="bmor").fit_chunks([(X, Y)], n_total=310)
+    with pytest.raises(ValueError, match="primal/eigh only"):
+        BrainEncoder(bands=(12, 12)).fit_chunks([(X, Y)], n_total=310)
+    with pytest.raises(ValueError, match="standardize"):
+        BrainEncoder(n_folds=4).fit_chunks([(X, 1e5 + 0.01 * Y)],
+                                           n_total=310)
+
+
+# ---------------------------------------------------------------------------
+# Pallas fold kernel (interpret mode on CPU → slow lane)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,k", [(203, 5), (64, 4)])
+def test_xty_folds_kernel_matches_f64_oracle(n, k, dtype):
+    from repro.kernels import ops
+
+    X, Y = _make_problem(jax.random.PRNGKey(12), n, 24, 17, dtype=dtype)
+    bounds = tuple(foldstats.fold_bounds(n, k))
+    got = ops.xty_folds(X, Y, bounds)
+    assert got.dtype == jnp.float32 and got.shape == (k, 24, 17)
+    X64, Y64 = np.asarray(X, np.float64), np.asarray(Y, np.float64)
+    want = np.stack([X64[lo:hi].T @ Y64[lo:hi] for lo, hi in bounds])
+    np.testing.assert_allclose(np.asarray(got), want, **_tol(dtype))
+
+
+@pytest.mark.slow
+def test_foldstats_compute_pallas_path_matches():
+    X, Y = _make_problem(jax.random.PRNGKey(13), 120, 16, 8)
+    base = foldstats.compute(X, Y, 4)
+    pall = foldstats.compute(X, Y, 4, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(pall.G), np.asarray(base.G),
+                               rtol=2e-5, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(pall.C), np.asarray(base.C),
+                               rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.slow
+def test_ridge_cv_dual_pallas_path_matches_xla():
+    """use_pallas now covers the dual path too: XXᵀ and Xᵀα."""
+    X, Y = _make_problem(jax.random.PRNGKey(14), 30, 64, 6)
+    cfg = RidgeCVConfig(n_folds=3)
+    base = ridge.ridge_cv(X, Y, cfg)
+    pall = ridge.ridge_cv(X, Y, RidgeCVConfig(n_folds=3, use_pallas=True))
+    assert float(base.best_lambda) == float(pall.best_lambda)
+    np.testing.assert_allclose(np.asarray(pall.weights),
+                               np.asarray(base.weights), rtol=2e-3,
+                               atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Complexity model: the folded T_W term
+# ---------------------------------------------------------------------------
+
+def test_t_w_folded_is_k_independent_and_k_times_cheaper():
+    for n, p, k in [(1000, 64, 5), (69_202, 16_384, 5), (512, 128, 10)]:
+        w = complexity.RidgeWorkload(n=n, p=p, t=100, n_folds=k)
+        assert complexity.t_w_folded(w) == float(n) * p * p
+        np.testing.assert_allclose(complexity.fold_redundancy_factor(w), k)
+        assert complexity.t_w_per_fold(w) == k * complexity.t_w_folded(w)
+
+
+def test_dispatch_ridge_rationale_mentions_fold_savings():
+    from repro.encoding import EncoderConfig, resolve
+    d = resolve(EncoderConfig(), n=1000, p=100, t=500, device_count=1)
+    assert "single-pass fold stats" in d.rationale
+    assert d.predicted_cost > 0
