@@ -1,0 +1,206 @@
+"""Out-of-core trajectory: in-memory vs streamed vs sharded-streamed fits.
+
+Each variant runs in its OWN subprocess so its peak RSS
+(``getrusage(RUSAGE_SELF).ru_maxrss``) is an honest per-variant high-water
+mark, not polluted by a predecessor's allocations:
+
+* ``inmem``    — ``RunStore.load()`` then the ordinary materialised
+  ``BrainEncoder.fit(X, Y)`` (the λ reference; holds ``(n, p)+(n, t)``).
+* ``streamed`` — ``fit(store=...)`` under a 1-byte memory budget: dispatch
+  pins ``method="chunked"`` and the rows stream from the memory-mapped
+  shards; resident set is one chunk + the ``(k, p, p+t)`` statistics.
+* ``sharded``  — the same, with the accumulation sharded over 8 virtual
+  CPU devices (``shard_row_ranges`` windows, single psum at finalize).
+
+The parent asserts λ selection is bit-identical across all variants and
+writes ``BENCH_oocore.json``::
+
+    {"rss_cap_mb": ..., "rows": [{"name", "n", "p", "t",
+      "array_mb",              # n·(p+t)·4 — what in-memory must hold
+      "inmem": {"wall_s", "peak_rss_mb", "best_lambda"},
+      "streamed": {...}, "sharded": {...},
+      "lambda_match": true, "streamed_under_cap": true}, ...]}
+
+``--smoke`` runs one small shape (CI parity guard).  ``--streamed-only``
+runs just the streaming variants on the tall shape — the mode the CI
+memory-capped lane executes under a ulimit the in-memory path could not
+survive — and fails if the streamed peak RSS exceeds ``--rss-cap-mb`` or
+if the in-memory array bytes do NOT exceed the cap (i.e. the cap would
+not have proven anything).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+# (name, n, p, t, chunk_rows).  ``tall`` is sized so its arrays alone
+# (n·(p+t)·4 B ≈ 1.2 GB) exceed the CI lane's 1 GiB RSS cap; its chunk
+# size keeps even the 8-virtual-device sharded variant (8 device
+# allocator arenas, one in-flight chunk each) under that cap.
+SHAPES = [
+    ("medium", 400_000, 64, 96, 32_768),
+    ("tall", 1_200_000, 96, 160, 16_384),
+]
+SMOKE_SHAPES = [("smoke", 60_000, 32, 48, 8_192)]
+
+
+def _ensure_store(path: str, n: int, p: int, t: int) -> None:
+    from repro.data import fmri
+    from repro.data.store import MANIFEST_NAME, RunStore
+
+    if os.path.exists(os.path.join(path, MANIFEST_NAME)):
+        return
+    spec = fmri.SubjectSpec(n=n, p=p, t=t)
+    RunStore.create(path).materialize_synthetic(spec, rows_per_run=65_536)
+
+
+def run_variant(variant: str, store_path: str, n_folds: int,
+                chunk_rows: int) -> dict:
+    """Child entry: one fit, one JSON result line on stdout."""
+    import resource
+
+    import numpy as np
+    from repro.data.store import RunStore
+    from repro.encoding import BrainEncoder
+
+    store = RunStore.open(store_path)
+    t0 = time.time()
+    if variant == "inmem":
+        X, Y = store.load()
+        enc = BrainEncoder(solver="ridge", method="eigh",
+                           n_folds=n_folds).fit(X, Y)
+    else:
+        import jax
+        data_shards = jax.device_count() if variant == "sharded" else 1
+        enc = BrainEncoder(n_folds=n_folds, device_memory_budget=1,
+                           chunk_rows=chunk_rows,
+                           data_shards=data_shards).fit(store=store)
+        assert enc.report_.decision.method == "chunked"
+    np.asarray(enc.weights_)                      # force materialisation
+    wall = time.time() - t0
+    peak_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    return {"variant": variant, "wall_s": round(wall, 2),
+            "peak_rss_mb": round(peak_kb / 1024, 1),
+            "best_lambda": float(enc.report_.best_lambda[0])}
+
+
+def spawn_variant(variant: str, store_path: str, n_folds: int,
+                  chunk_rows: int) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    if variant == "sharded":
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--variant", variant,
+         "--store", store_path, "--n-folds", str(n_folds),
+         "--chunk-rows", str(chunk_rows)],
+        capture_output=True, text=True, env=env)
+    if proc.returncode != 0:
+        raise SystemExit(f"{variant} child failed:\n{proc.stdout}\n"
+                         f"{proc.stderr}")
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("OOCORE_RESULT ")][-1]
+    return json.loads(line[len("OOCORE_RESULT "):])
+
+
+def bench_shape(name: str, n: int, p: int, t: int, chunk_rows: int,
+                n_folds: int, workdir: str, variants: list[str],
+                rss_cap_mb: float) -> dict:
+    store_path = os.path.join(workdir, f"{name}_{n}x{p}x{t}")
+    print(f"[{name}] materialising store at {store_path} ...", flush=True)
+    _ensure_store(store_path, n, p, t)
+    row: dict = {"name": name, "n": n, "p": p, "t": t,
+                 "chunk_rows": chunk_rows,
+                 "array_mb": round(n * (p + t) * 4 / 2**20, 1)}
+    for variant in variants:
+        res = spawn_variant(variant, store_path, n_folds, chunk_rows)
+        row[variant] = {k: res[k] for k in
+                        ("wall_s", "peak_rss_mb", "best_lambda")}
+        print(f"[{name}] {variant}: {res['wall_s']}s "
+              f"rss={res['peak_rss_mb']}MB λ={res['best_lambda']}",
+              flush=True)
+    lams = {row[v]["best_lambda"] for v in variants}
+    row["lambda_match"] = len(lams) == 1
+    if not row["lambda_match"]:
+        raise SystemExit(f"λ selection diverged on {name}: {lams}")
+    streamed = [v for v in variants if v != "inmem"]
+    row["streamed_under_cap"] = all(
+        row[v]["peak_rss_mb"] < rss_cap_mb for v in streamed)
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--variant", default=None,
+                    help="(internal) child mode: inmem|streamed|sharded")
+    ap.add_argument("--store", default=None, help="(internal) child store")
+    ap.add_argument("--chunk-rows", type=int, default=8192,
+                    help="(internal) child streaming chunk size")
+    ap.add_argument("--n-folds", type=int, default=5)
+    ap.add_argument("--smoke", action="store_true",
+                    help="one small shape — CI parity guard")
+    ap.add_argument("--streamed-only", action="store_true",
+                    help="skip the in-memory variant (memory-capped CI "
+                         "lane: the cap would kill it) and enforce the cap")
+    ap.add_argument("--rss-cap-mb", type=float, default=1024.0,
+                    help="RSS ceiling the streamed variants must stay under")
+    ap.add_argument("--workdir", default=None,
+                    help="store directory (default: a temp dir)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.variant:                               # child mode
+        res = run_variant(args.variant, args.store, args.n_folds,
+                          args.chunk_rows)
+        print("OOCORE_RESULT " + json.dumps(res), flush=True)
+        return
+
+    if args.out is None:
+        args.out = os.path.join(
+            REPO, "BENCH_oocore_smoke.json" if args.smoke
+            else "BENCH_oocore.json")
+    shapes = SMOKE_SHAPES if args.smoke else SHAPES
+    variants = (["streamed", "sharded"] if args.streamed_only
+                else ["inmem", "streamed", "sharded"])
+    workdir = args.workdir or tempfile.mkdtemp(prefix="oocore_bench_")
+
+    rows = []
+    for name, n, p, t, chunk_rows in shapes:
+        if args.streamed_only and name not in ("tall", "smoke"):
+            continue
+        rows.append(bench_shape(name, n, p, t, chunk_rows, args.n_folds,
+                                workdir, variants, args.rss_cap_mb))
+
+    if args.streamed_only:
+        for row in rows:
+            if not row["streamed_under_cap"]:
+                raise SystemExit(
+                    f"streamed path exceeded the {args.rss_cap_mb} MB cap: "
+                    f"{row}")
+            if not args.smoke and row["array_mb"] <= args.rss_cap_mb:
+                raise SystemExit(
+                    f"cap {args.rss_cap_mb} MB does not bind: in-memory "
+                    f"arrays are only {row['array_mb']} MB — raise the "
+                    f"shape or lower the cap")
+        print(f"# streamed path bounded under {args.rss_cap_mb} MB RSS")
+
+    payload = {"n_folds": args.n_folds, "smoke": args.smoke,
+               "rss_cap_mb": args.rss_cap_mb, "rows": rows}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {args.out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

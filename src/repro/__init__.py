@@ -21,6 +21,7 @@ _LAZY = {
     "EncoderConfig": ("repro.encoding.config", "EncoderConfig"),
     "EncodingReport": ("repro.encoding.estimator", "EncodingReport"),
     "EvaluationReport": ("repro.encoding.estimator", "EvaluationReport"),
+    "RunStore": ("repro.data.store", "RunStore"),
     "ShardingPlan": ("repro.encoding.sharding", "ShardingPlan"),
     "encoding": ("repro.encoding", None),
     "core": ("repro.core", None),

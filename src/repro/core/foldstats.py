@@ -187,13 +187,29 @@ class FoldStatsAccumulator:
     as host-sized batches, each batch is split at the (static) fold
     boundaries it spans, and every segment updates its fold's accumulators
     in place.  Rows must arrive in global row order; ``finalize`` checks
-    that exactly ``n_total`` rows were seen.
+    that exactly the owned row window was seen.
+
+    ``row_start``/``row_stop`` restrict the accumulator to a contiguous
+    window of the global rows — the sharded out-of-core path gives each
+    shard its own window (``shard_row_ranges``) and combines the partial
+    ``FoldStats`` afterwards (``combine`` / ``compute_sharded_chunked``).
+    Fold membership always derives from the GLOBAL ``(n_total, n_folds)``
+    split, so a shard boundary in the middle of a fold is handled exactly:
+    the fold's statistics simply arrive as two partials that ``combine``
+    merges with the Chan update.
     """
 
-    def __init__(self, n_total: int, n_folds: int):
+    def __init__(self, n_total: int, n_folds: int, *, row_start: int = 0,
+                 row_stop: int | None = None):
         self.n_total = n_total
         self.bounds = fold_bounds(n_total, n_folds)
-        self._offset = 0
+        self.row_start = row_start
+        self.row_stop = n_total if row_stop is None else row_stop
+        if not 0 <= self.row_start < self.row_stop <= n_total:
+            raise ValueError(
+                f"need 0 <= row_start < row_stop <= n_total, got "
+                f"[{row_start}, {row_stop}) with n_total={n_total}")
+        self._offset = self.row_start
         self._stats: FoldStats | None = None
 
     def _init_stats(self, p: int, t: int) -> FoldStats:
@@ -208,13 +224,18 @@ class FoldStatsAccumulator:
 
     def update(self, X_chunk: jax.Array, Y_chunk: jax.Array) -> None:
         m = X_chunk.shape[0]
-        if self._offset + m > self.n_total:
+        if self._offset + m > self.row_stop:
             raise ValueError(
                 f"chunk of {m} rows at offset {self._offset} overruns "
-                f"n_total={self.n_total}")
+                f"row_stop={self.row_stop}")
         if self._stats is None:
             self._stats = self._init_stats(X_chunk.shape[1],
                                            Y_chunk.shape[1])
+        # One host→device conversion per chunk; the per-segment work below
+        # then slices device-resident arrays (streamed chunks arrive as
+        # read-only numpy memmap views).
+        X_chunk = jnp.asarray(X_chunk)
+        Y_chunk = jnp.asarray(Y_chunk)
         s = self._stats
         for f, (lo, hi) in enumerate(self.bounds):
             # Static intersection of [offset, offset+m) with this fold.
@@ -245,9 +266,10 @@ class FoldStatsAccumulator:
         self._offset += m
 
     def finalize(self) -> FoldStats:
-        if self._stats is None or self._offset != self.n_total:
+        if self._stats is None or self._offset != self.row_stop:
             raise ValueError(
-                f"saw {self._offset} rows, expected n_total={self.n_total}")
+                f"saw rows [{self.row_start}, {self._offset}), expected the "
+                f"full window [{self.row_start}, {self.row_stop})")
         return self._stats
 
 
@@ -258,6 +280,151 @@ def compute_chunked(chunks: Iterable[tuple[jax.Array, jax.Array]],
     for X_chunk, Y_chunk in chunks:
         acc.update(X_chunk, Y_chunk)
     return acc.finalize()
+
+
+@jax.jit
+def _combine_pair(a: FoldStats, b: FoldStats) -> FoldStats:
+    """Chan et al. pairwise combination of two per-fold partials.
+
+    ``G``/``C``/``xsum``/``ysum``/``count`` are plain sums over disjoint row
+    sets; the centred second moment needs the pairwise update
+    ``M2_{a∪b} = M2_a + M2_b + (μ_a − μ_b)²·n_a n_b/(n_a+n_b)`` per fold —
+    exact, and free of the ``Σy² − mȳ²`` cancellation (the reason
+    ``FoldStats.ysq`` is stored centred at all).
+    """
+    n_a = a.count[:, None]                                   # (k, 1)
+    n_b = b.count[:, None]
+    mu_a = a.ysum / jnp.maximum(n_a, 1.0)
+    mu_b = b.ysum / jnp.maximum(n_b, 1.0)
+    both = (n_a > 0) & (n_b > 0)
+    delta2 = jnp.where(both, (mu_a - mu_b) ** 2, 0.0)
+    ysq = a.ysq + b.ysq + delta2 * n_a * n_b / jnp.maximum(n_a + n_b, 1.0)
+    return FoldStats(G=a.G + b.G, C=a.C + b.C, xsum=a.xsum + b.xsum,
+                     ysum=a.ysum + b.ysum, ysq=ysq, count=a.count + b.count)
+
+
+def combine(parts: Sequence[FoldStats]) -> FoldStats:
+    """Merge per-shard partial ``FoldStats`` into the global statistics.
+
+    Pairwise (tree) reduction: exact for the summed statistics and applies
+    the Chan update to the centred moments at every merge, so the result is
+    invariant (to f32 rounding) under how the rows were split into shards.
+    """
+    if not parts:
+        raise ValueError("combine() needs at least one partial FoldStats")
+    parts = list(parts)
+    while len(parts) > 1:
+        merged = [_combine_pair(parts[i], parts[i + 1])
+                  for i in range(0, len(parts) - 1, 2)]
+        if len(parts) % 2:
+            merged.append(parts[-1])
+        parts = merged
+    return parts[0]
+
+
+def shard_row_ranges(n_total: int, n_shards: int) -> list[tuple[int, int]]:
+    """Contiguous near-equal row windows, one per shard (``data_axis``).
+
+    Same size policy as ``fold_bounds`` (first ``n % s`` shards get the
+    extra row) — but the two splits are independent: shard windows may cut
+    folds anywhere, ``combine`` reconciles the partials.
+    """
+    if not 1 <= n_shards <= n_total:
+        raise ValueError(f"need 1 <= n_shards <= n_total, got "
+                         f"n_shards={n_shards}, n={n_total}")
+    return fold_bounds(n_total, n_shards)
+
+
+def compute_sharded_chunked(
+        shard_streams: Sequence[Iterable[tuple[jax.Array, jax.Array]]],
+        n_total: int, n_folds: int, *, mesh=None,
+        data_axis: str = "data") -> FoldStats:
+    """Sharded out-of-core accumulation along ``data_axis``.
+
+    ``shard_streams[s]`` yields shard ``s``'s row chunks, covering exactly
+    the window ``shard_row_ranges(n_total, len(shard_streams))[s]`` in
+    global row order.  Each shard accumulates its own partial ``FoldStats``
+    (``FoldStatsAccumulator`` with the shard's row window — the streaming
+    mirror of ``partial_fold_stats``'s masked accumulation inside B-MOR's
+    ``shard_map``); the finalize step then combines the partials:
+
+    * the heavy ``(k, p, p+t)`` stacks ``[G | C]`` merge in a SINGLE
+      ``psum`` over ``data_axis`` when a ``mesh`` is given (one collective
+      for all folds, the same economy ``bmor.bmor_fit`` gets from the
+      stacked layout), or a host-side tree reduction otherwise;
+    * the small centred moment statistics merge with the Chan pairwise
+      update (``combine``), which a plain ``psum`` cannot express.
+    """
+    ranges = shard_row_ranges(n_total, len(shard_streams))
+    parts: list[FoldStats] = []
+    for (lo, hi), stream in zip(ranges, shard_streams):
+        acc = FoldStatsAccumulator(n_total, n_folds, row_start=lo,
+                                   row_stop=hi)
+        for X_chunk, Y_chunk in stream:
+            acc.update(X_chunk, Y_chunk)
+        parts.append(acc.finalize())
+    if mesh is None or len(parts) == 1:
+        return combine(parts)
+    # Device-mesh finalize: the heavy (k, p, p+t) stacks reduce in ONE
+    # psum over data_axis; only the (k, t)-sized moment statistics go
+    # through the host-side Chan merge (stripped of their G/C so the big
+    # tensors are reduced exactly once).
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.compat import shard_map
+
+    if mesh.shape[data_axis] != len(parts):
+        raise ValueError(
+            f"mesh axis {data_axis!r} has {mesh.shape[data_axis]} shards "
+            f"but {len(parts)} shard streams were accumulated")
+    merged = combine([dataclasses.replace(s, G=s.G[:, :0, :0],
+                                          C=s.C[:, :0, :0]) for s in parts])
+    GC = jnp.stack([jnp.concatenate([s.G, s.C], axis=-1) for s in parts])
+    GC = jax.device_put(GC, NamedSharding(mesh, P(data_axis)))
+    reduced = jax.jit(shard_map(
+        lambda gc: jax.lax.psum(gc[0], data_axis), mesh=mesh,
+        in_specs=(P(data_axis),), out_specs=P(), check_vma=False))(GC)
+    p = parts[0].G.shape[1]
+    return dataclasses.replace(merged, G=reduced[..., :p],
+                               C=reduced[..., p:])
+
+
+class ColumnMoments:
+    """Streaming per-column mean/variance over row chunks (Chan/Welford).
+
+    The first pass of the two-pass streaming standardization
+    (``pipeline.fit_chunked``): accumulates ``(count, mean, M2)`` per
+    column in float64 on the host — the chunks are memmap views, so this
+    pass costs one read of the rows and O(columns) residency.
+    """
+
+    def __init__(self) -> None:
+        self.count = 0.0
+        self.mean: "np.ndarray | None" = None
+        self.m2: "np.ndarray | None" = None
+
+    def update(self, A) -> None:
+        import numpy as np
+        A = np.asarray(A, np.float64)
+        n_b = float(A.shape[0])
+        if n_b == 0:
+            return
+        mu_b = A.mean(axis=0)
+        m2_b = ((A - mu_b) ** 2).sum(axis=0)
+        if self.mean is None:
+            self.count, self.mean, self.m2 = n_b, mu_b, m2_b
+            return
+        n_a = self.count
+        delta = mu_b - self.mean
+        tot = n_a + n_b
+        self.mean = self.mean + delta * (n_b / tot)
+        self.m2 = self.m2 + m2_b + delta ** 2 * (n_a * n_b / tot)
+        self.count = tot
+
+    def std(self, eps: float = 1e-6) -> "np.ndarray":
+        import numpy as np
+        assert self.mean is not None, "no rows seen"
+        return np.sqrt(self.m2 / self.count) + eps
 
 
 def validation_scores_from_stats(
@@ -324,7 +491,8 @@ def validation_scores_from_stats(
 
 
 __all__: Sequence[str] = (
-    "FoldStats", "FoldStatsAccumulator", "compute", "compute_chunked",
-    "fold_bounds", "fold_of_rows", "partial_fold_stats",
+    "ColumnMoments", "FoldStats", "FoldStatsAccumulator", "combine",
+    "compute", "compute_chunked", "compute_sharded_chunked", "fold_bounds",
+    "fold_of_rows", "partial_fold_stats", "shard_row_ranges",
     "validation_scores_from_stats",
 )

@@ -1,1 +1,2 @@
-from repro.data import fmri, synthetic  # noqa: F401
+from repro.data import fmri, store, synthetic  # noqa: F401
+from repro.data.store import RunStore, StoreError  # noqa: F401

@@ -1,0 +1,363 @@
+"""Out-of-core run store: memory-mapped fMRI runs behind a JSON manifest.
+
+The paper's whole-brain workload (Table 1: n≈60k TRs × t≈264k targets per
+subject) does not fit in device — or often host — memory, which is why its
+Batch-MultiOutput design streams target batches across workers.  ``RunStore``
+is the row-streaming half of that story: each acquisition *run* is written
+once as a pair of ``.npy`` shards (``X``: stimulus features, ``Y``: BOLD
+targets) and thereafter only ever *memory-mapped*, so ``iter_chunks`` hands
+out zero-copy row batches whose resident footprint is one chunk, never
+``(n, p)``.
+
+Layout on disk::
+
+    <root>/manifest.json          # shapes, dtypes, row offsets, fold split
+    <root>/<run_id>.X.npy         # (n_run, p) feature shard
+    <root>/<run_id>.Y.npy         # (n_run, t) target shard
+
+Design points:
+
+* **Global row order is the manifest's run order.**  Runs are concatenated
+  at their recorded ``row_offset``; the k-fold split used downstream
+  (``foldstats.fold_bounds`` over ``n_total``) is recorded in the manifest
+  at write time so every consumer — in-memory, chunked, sharded-chunked —
+  derives the identical fold assignment.
+* **Read paths are read-only.**  ``open()`` maps shards with
+  ``mmap_mode="r"``; writing through a served chunk raises, so a streaming
+  fit can never corrupt the store it is reading.
+* **Validation is eager.**  ``open()`` cross-checks every shard's header
+  shape/dtype against the manifest and the run offsets against each other;
+  a missing shard, a shape/dtype mismatch, or overlapping row ranges raise
+  ``StoreError`` before any fit starts.
+* **Chunks respect nothing but row order.**  ``iter_chunks`` slices freely
+  across run boundaries (a chunk may span two runs) and across fold
+  boundaries — the fold-stats accumulator splits at fold bounds itself —
+  so chunk size is purely a memory/throughput knob.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Iterator
+
+import numpy as np
+
+from repro.data.fmri import SubjectSpec
+
+MANIFEST_NAME = "manifest.json"
+_MANIFEST_VERSION = 1
+
+
+class StoreError(ValueError):
+    """Manifest/shard inconsistency (missing file, shape/dtype mismatch,
+    overlapping or gapped row ranges)."""
+
+
+def _dtype_from_name(name: str) -> np.dtype:
+    """Resolve a manifest dtype name, including the ml_dtypes extras
+    (``bfloat16``) that plain ``np.dtype(...)`` does not know by name."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _storage_dtype(dtype: np.dtype) -> np.dtype:
+    """On-disk dtype for a logical dtype.
+
+    ``np.save`` demotes non-native dtypes (ml_dtypes ``bfloat16``) to raw
+    void records that neither numpy nor JAX will touch afterwards, so such
+    shards are stored as same-width unsigned bit patterns and viewed back
+    at read time — the memmap view is still zero-copy.
+    """
+    if dtype.kind == "V" or dtype.name == "bfloat16":
+        return np.dtype(f"u{dtype.itemsize}")
+    return dtype
+
+
+@dataclasses.dataclass(frozen=True)
+class RunEntry:
+    """One acquisition run inside the store (one X/Y shard pair)."""
+
+    run_id: str
+    row_offset: int     # first global row of this run
+    n_rows: int
+
+    @property
+    def row_end(self) -> int:
+        return self.row_offset + self.n_rows
+
+
+def _shard_paths(root: str, run_id: str) -> tuple[str, str]:
+    return (os.path.join(root, f"{run_id}.X.npy"),
+            os.path.join(root, f"{run_id}.Y.npy"))
+
+
+def _read_npy_header(path: str) -> tuple[tuple[int, ...], np.dtype]:
+    """Shape/dtype from the .npy header alone (no data page-in)."""
+    with open(path, "rb") as f:
+        version = np.lib.format.read_magic(f)
+        shape, _, dtype = np.lib.format._read_array_header(f, version)
+    return shape, dtype
+
+
+class RunStore:
+    """On-disk (X, Y) row store — write runs once, stream them many times.
+
+    Writing (builds/extends the manifest)::
+
+        store = RunStore.create(path, n_folds=5)
+        store.write(X_run1, Y_run1, "ses-001_run-1")
+        store.write(X_run2, Y_run2, "ses-001_run-2")
+
+    Streaming (read-only memmaps; resident set = one chunk)::
+
+        store = RunStore.open(path)
+        for X_c, Y_c in store.iter_chunks(chunk_rows=4096):
+            ...                        # np.ndarray views, zero-copy
+
+    ``materialize_synthetic`` writes a ``data.fmri`` subject once so
+    benchmarks and tests can re-stream it without regenerating.
+    """
+
+    def __init__(self, root: str, *, n_folds: int, dtype_x: np.dtype,
+                 dtype_y: np.dtype, p: int | None, t: int | None,
+                 runs: list[RunEntry], writable: bool):
+        self.root = root
+        self.n_folds = n_folds
+        self.dtype_x = np.dtype(dtype_x)
+        self.dtype_y = np.dtype(dtype_y)
+        self.p = p
+        self.t = t
+        self.runs = runs
+        self._writable = writable
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def create(cls, root: str, *, n_folds: int = 5,
+               dtype: np.dtype | str = np.float32) -> "RunStore":
+        """Start an empty, writable store at ``root`` (created if missing)."""
+        os.makedirs(root, exist_ok=True)
+        if os.path.exists(os.path.join(root, MANIFEST_NAME)):
+            raise StoreError(f"store already exists at {root}; use open()")
+        store = cls(root, n_folds=n_folds, dtype_x=np.dtype(dtype),
+                    dtype_y=np.dtype(dtype), p=None, t=None, runs=[],
+                    writable=True)
+        store._write_manifest()
+        return store
+
+    @classmethod
+    def open(cls, root: str) -> "RunStore":
+        """Open read-only and validate the manifest against the shards."""
+        path = os.path.join(root, MANIFEST_NAME)
+        if not os.path.exists(path):
+            raise StoreError(f"no {MANIFEST_NAME} under {root}")
+        with open(path) as f:
+            m = json.load(f)
+        if m.get("version") != _MANIFEST_VERSION:
+            raise StoreError(f"unsupported manifest version {m.get('version')}")
+        runs = [RunEntry(run_id=r["run_id"], row_offset=r["row_offset"],
+                         n_rows=r["n_rows"]) for r in m["runs"]]
+        store = cls(root, n_folds=m["n_folds"],
+                    dtype_x=_dtype_from_name(m["dtype_x"]),
+                    dtype_y=_dtype_from_name(m["dtype_y"]),
+                    p=m["p"], t=m["t"], runs=runs, writable=False)
+        store._validate()
+        return store
+
+    # -- manifest ------------------------------------------------------------
+    def _write_manifest(self) -> None:
+        payload = {
+            "version": _MANIFEST_VERSION,
+            "n_folds": self.n_folds,
+            "dtype_x": self.dtype_x.name,
+            "dtype_y": self.dtype_y.name,
+            "p": self.p,
+            "t": self.t,
+            "n_total": self.n_total,
+            # The fold split is part of the data contract: every consumer
+            # (in-memory, chunked, sharded) derives the same contiguous
+            # k-fold assignment from (n_total, n_folds).
+            "runs": [{"run_id": r.run_id, "row_offset": r.row_offset,
+                      "n_rows": r.n_rows} for r in self.runs],
+        }
+        tmp = os.path.join(self.root, MANIFEST_NAME + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        os.replace(tmp, os.path.join(self.root, MANIFEST_NAME))
+
+    def _validate(self) -> None:
+        """Cross-check every shard header against the manifest."""
+        offset = 0
+        for r in self.runs:
+            if r.row_offset != offset:
+                raise StoreError(
+                    f"run {r.run_id!r}: row_offset {r.row_offset} overlaps or "
+                    f"gaps the preceding runs (expected {offset})")
+            offset = r.row_end
+            for path, want_cols, want_dtype, name in (
+                    (_shard_paths(self.root, r.run_id)[0], self.p,
+                     _storage_dtype(self.dtype_x), "X"),
+                    (_shard_paths(self.root, r.run_id)[1], self.t,
+                     _storage_dtype(self.dtype_y), "Y")):
+                if not os.path.exists(path):
+                    raise StoreError(f"run {r.run_id!r}: missing {name} shard "
+                                     f"{os.path.basename(path)}")
+                shape, dtype = _read_npy_header(path)
+                if shape != (r.n_rows, want_cols):
+                    raise StoreError(
+                        f"run {r.run_id!r}: {name} shard shape {shape} != "
+                        f"manifest ({r.n_rows}, {want_cols})")
+                if dtype != want_dtype:
+                    raise StoreError(
+                        f"run {r.run_id!r}: {name} shard dtype {dtype} != "
+                        f"manifest {want_dtype}")
+
+    # -- writing -------------------------------------------------------------
+    def write(self, X: np.ndarray, Y: np.ndarray, run_id: str) -> RunEntry:
+        """Append one run's rows; shards land as ``.npy``, manifest updates."""
+        if not self._writable:
+            raise StoreError("store was open()'d read-only; create() to write")
+        X = np.ascontiguousarray(X, dtype=self.dtype_x)
+        Y = np.ascontiguousarray(Y, dtype=self.dtype_y)
+        if X.ndim != 2 or Y.ndim != 2 or X.shape[0] != Y.shape[0]:
+            raise StoreError(f"need matching 2-D row blocks, got X{X.shape} "
+                             f"Y{Y.shape}")
+        if any(r.run_id == run_id for r in self.runs):
+            raise StoreError(f"run {run_id!r} already written")
+        if self.p is None:
+            self.p, self.t = X.shape[1], Y.shape[1]
+        elif (X.shape[1], Y.shape[1]) != (self.p, self.t):
+            raise StoreError(f"run {run_id!r}: columns ({X.shape[1]}, "
+                             f"{Y.shape[1]}) != store ({self.p}, {self.t})")
+        entry = RunEntry(run_id=run_id, row_offset=self.n_total,
+                         n_rows=X.shape[0])
+        x_path, y_path = _shard_paths(self.root, run_id)
+        np.save(x_path, X.view(_storage_dtype(self.dtype_x)))
+        np.save(y_path, Y.view(_storage_dtype(self.dtype_y)))
+        self.runs.append(entry)
+        self._write_manifest()
+        return entry
+
+    def materialize_synthetic(self, spec: SubjectSpec, *, seed: int = 0,
+                              rows_per_run: int | None = None) -> "RunStore":
+        """Write a ``data.fmri`` subject once, split into run-sized shards.
+
+        The subject's ``(n, p)``/``(n, t)`` arrays are generated run by run
+        (each run gets its own fold of the PRNG key) so even materialisation
+        never holds the full subject resident — the generator mirrors how a
+        real scanning session arrives: one run at a time.
+        """
+        import jax
+        from repro.data import fmri
+
+        rows_per_run = rows_per_run or spec.n
+        key = jax.random.PRNGKey(seed)
+        lo = 0
+        while lo < spec.n:
+            hi = min(lo + rows_per_run, spec.n)
+            run_key = jax.random.fold_in(key, lo)
+            run_spec = dataclasses.replace(spec, n=hi - lo)
+            X, Y, _ = fmri.generate(run_key, run_spec)
+            self.write(np.asarray(X), np.asarray(Y),
+                       f"{spec.subject}_rows-{lo:08d}")
+            lo = hi
+        return self
+
+    # -- reading -------------------------------------------------------------
+    @property
+    def n_total(self) -> int:
+        return self.runs[-1].row_end if self.runs else 0
+
+    @property
+    def shape(self) -> tuple[int, int, int]:
+        """(n_total, p, t)."""
+        if self.p is None:
+            raise StoreError("empty store has no shape yet")
+        return self.n_total, self.p, self.t
+
+    def nbytes_resident(self) -> int:
+        """Bytes an in-memory fit would hold resident: full X plus Y."""
+        n, p, t = self.shape
+        return n * (p * self.dtype_x.itemsize + t * self.dtype_y.itemsize)
+
+    def _mmap(self, r: RunEntry) -> tuple[np.ndarray, np.ndarray]:
+        x_path, y_path = _shard_paths(self.root, r.run_id)
+        return (np.load(x_path, mmap_mode="r").view(self.dtype_x),
+                np.load(y_path, mmap_mode="r").view(self.dtype_y))
+
+    def iter_chunks(self, chunk_rows: int, *, dtype: np.dtype | str | None
+                    = None, row_range: tuple[int, int] | None = None
+                    ) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+        """Yield ``(X_chunk, Y_chunk)`` row batches in global row order.
+
+        Batches are views into the read-only memmaps (zero-copy) unless
+        ``dtype`` requests a cast or a chunk spans a run boundary (then the
+        spanning rows are concatenated into a fresh array of ``chunk_rows``
+        rows at most — still O(chunk), never O(n)).  ``row_range=(lo, hi)``
+        restricts the stream to a global row window — the hook the sharded
+        accumulation uses to give each shard its own contiguous slice.
+        """
+        if chunk_rows < 1:
+            raise ValueError(f"chunk_rows must be >= 1, got {chunk_rows}")
+        lo, hi = row_range if row_range is not None else (0, self.n_total)
+        if not 0 <= lo <= hi <= self.n_total:
+            raise ValueError(f"row_range {row_range} outside "
+                             f"[0, {self.n_total}]")
+        pending_x: list[np.ndarray] = []
+        pending_y: list[np.ndarray] = []
+        pending = 0
+
+        def cast(a: np.ndarray) -> np.ndarray:
+            return a if dtype is None else a.astype(dtype, copy=False)
+
+        for r in self.runs:
+            if r.row_end <= lo or r.row_offset >= hi:
+                continue
+            Xm, Ym = self._mmap(r)
+            s_lo = max(lo, r.row_offset) - r.row_offset
+            s_hi = min(hi, r.row_end) - r.row_offset
+            pos = s_lo
+            while pos < s_hi:
+                take = min(chunk_rows - pending, s_hi - pos)
+                if pending:
+                    pending_x.append(Xm[pos:pos + take])
+                    pending_y.append(Ym[pos:pos + take])
+                    pending += take
+                    if pending == chunk_rows:
+                        yield (cast(np.concatenate(pending_x)),
+                               cast(np.concatenate(pending_y)))
+                        pending_x, pending_y, pending = [], [], 0
+                elif take == chunk_rows:
+                    yield cast(Xm[pos:pos + take]), cast(Ym[pos:pos + take])
+                else:
+                    pending_x = [Xm[pos:pos + take]]
+                    pending_y = [Ym[pos:pos + take]]
+                    pending = take
+                pos += take
+        if pending:     # ragged tail
+            yield (cast(np.concatenate(pending_x)),
+                   cast(np.concatenate(pending_y)))
+
+    def load(self, *, dtype: np.dtype | str | None = None
+             ) -> tuple[np.ndarray, np.ndarray]:
+        """Materialise the full (X, Y) — the in-memory reference path.
+
+        Deliberately explicit: streaming consumers must never call this;
+        it exists for parity tests and for ``BrainEncoder.fit(store=...)``
+        when dispatch decides the problem fits the memory budget after all.
+        """
+        n, p, t = self.shape
+        X = np.empty((n, p), self.dtype_x if dtype is None else dtype)
+        Y = np.empty((n, t), self.dtype_y if dtype is None else dtype)
+        for r in self.runs:
+            Xm, Ym = self._mmap(r)
+            X[r.row_offset:r.row_end] = Xm
+            Y[r.row_offset:r.row_end] = Ym
+        return X, Y
+
+
+__all__ = ["RunStore", "RunEntry", "StoreError", "MANIFEST_NAME"]

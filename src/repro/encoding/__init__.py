@@ -25,6 +25,43 @@ Or, scikit-learn style, with explicit control::
     enc.fit(X_train, Y_train)
     r_per_target = enc.score(X_test, Y_test)      # Pearson r (paper §4.1)
 
+Streaming large subjects (out-of-core)
+--------------------------------------
+The paper's whole-brain subjects (Table 1: n≈60k TRs × t≈264k targets)
+cannot be materialised.  Write each run ONCE into an on-disk
+``repro.data.store.RunStore`` (memory-mapped ``.npy`` shards + manifest),
+then stream it::
+
+    from repro.data.store import RunStore
+    from repro.data import fmri
+
+    store = RunStore.create("subj01_store")
+    store.materialize_synthetic(fmri.SubjectSpec(n=500_000), seed=0)
+    store = RunStore.open("subj01_store")          # read-only memmaps
+
+    # 1. Transparent: give fit() a budget and the store — dispatch pins
+    #    the streamed fold-statistics path (method="chunked") whenever
+    #    the resident estimate n·p + n·t_shard exceeds the budget, and
+    #    shards the accumulation over the local devices (one psum of the
+    #    stacked (k, p, p+t) partials at finalize).
+    enc = BrainEncoder(device_memory_budget=2 * 2**30, chunk_rows=65536)
+    enc.fit(store=store)                           # (n, p) never resident
+    print(enc.report_.decision.rationale)
+
+    # 2. Pipeline: two-pass streaming standardize (column μ/σ from one
+    #    ColumnMoments pass) + fold-stats fit, no materialisation.
+    state = pipeline.run_store(store, chunk_rows=65536)
+
+    # 3. Explicit: BrainEncoder.fit_chunks accepts the store (or any
+    #    ordered (X_chunk, Y_chunk) iterator) directly.
+    enc = BrainEncoder(chunk_rows=65536).fit_chunks(store)
+
+Evaluation needs rows that fit in memory — score against a separate held
+-out store/array (``enc.evaluate(X_test, Y_test)``).  CV λ selection on
+the streamed path is bit-identical to the in-memory fit (the chunk
+-invariance harness in ``tests/test_oocore.py`` and the memory-capped CI
+lane lock this down; ``BENCH_oocore.json`` tracks wall time / peak RSS).
+
 Modules:
   config    — ``EncoderConfig``: one config subsuming ridge/banded/sharding
   dispatch  — complexity-driven solver + mesh-layout resolution

@@ -57,6 +57,16 @@ class EncoderConfig:
     data_axis: str = "data"
     target_axis: str = "model"
 
+    # --- out-of-core streaming (paper Table 1 whole-brain regime) ----------
+    # Device-memory budget in BYTES for the resident working set
+    # n·p + n·t_shard (f32).  When the estimate exceeds it, dispatch pins
+    # the streamed fold-statistics path (method="chunked") and
+    # ``BrainEncoder.fit(store=...)`` never materialises (n, p).  None →
+    # unlimited (always materialise).
+    device_memory_budget: int | None = None
+    # Row-batch size of the streaming accumulation (per shard).
+    chunk_rows: int = 8192
+
     # --- determinism -------------------------------------------------------
     seed: int = 0
 

@@ -28,7 +28,10 @@ class DispatchDecision:
     """The resolved execution plan, with the model cost that justified it."""
 
     solver: str              # "ridge" | "mor" | "bmor" | "bmor_dual" | "banded"
-    method: str              # "eigh" | "dual" factorisation side
+    # Factorisation side "eigh" | "dual", or "chunked": the out-of-core
+    # streamed fold-statistics path (always primal/eigh on the accumulated
+    # Gram — the regime is tall-n, where (p, p) is the small object).
+    method: str
     data_shards: int
     target_shards: int
     predicted_cost: float    # §3 fp-mult count on the critical path
@@ -85,6 +88,37 @@ def _best_bmor_layout(w: RidgeWorkload, device_count: int,
     return best_layout
 
 
+def estimated_resident_bytes(n: int, p: int, t: int,
+                             target_shards: int = 1,
+                             itemsize: int = 4) -> int:
+    """Per-device resident working set of a materialised fit: the row block
+    ``n·p`` plus this device's target slice ``n·t_shard`` (f32 by default).
+
+    This is the quantity the paper's Table 1 makes hopeless for the
+    whole-brain subject (n≈60k × t≈264k → hundreds of GB): the term
+    dispatch compares against ``EncoderConfig.device_memory_budget``.
+    """
+    t_shard = -(-t // max(target_shards, 1))
+    return n * (p + t_shard) * itemsize
+
+
+def _chunked_decision(cfg: EncoderConfig, w: RidgeWorkload, resident: int,
+                      device_count: int) -> DispatchDecision:
+    """Pin the streamed fold-statistics path (out-of-core regime)."""
+    c_d = cfg.data_shards or device_count
+    cost = (complexity.t_w(w) +
+            complexity.t_m(w) + complexity.t_w_folded(w) / max(c_d, 1))
+    return DispatchDecision(
+        solver="ridge", method="chunked", data_shards=c_d, target_shards=1,
+        predicted_cost=cost,
+        rationale=f"resident set n·p + n·t_shard = {resident / 2**20:.1f} MB "
+                  f"exceeds device_memory_budget = "
+                  f"{cfg.device_memory_budget / 2**20:.1f} MB → streamed "
+                  f"fold-statistics accumulation over {c_d} row shard(s), "
+                  f"chunk_rows={cfg.chunk_rows} (only the (k, p, p+t) "
+                  f"sufficient statistics stay resident)")
+
+
 def resolve(cfg: EncoderConfig, n: int, p: int, t: int,
             device_count: int) -> DispatchDecision:
     """Resolve ``cfg.solver`` ("auto" or explicit) into a concrete plan."""
@@ -101,6 +135,25 @@ def resolve(cfg: EncoderConfig, n: int, p: int, t: int,
     method = cfg.method if cfg.method != "auto" else (
         "eigh" if n >= p else "dual")
     solver = cfg.solver
+
+    # Memory-budgeted dispatch: when the materialised working set cannot
+    # fit, the ONLY viable plan is the streamed accumulation — it overrides
+    # the FLOP-model choice below (which assumes the rows are resident).
+    if cfg.device_memory_budget is not None and solver in ("auto", "ridge"):
+        # Conservative estimate: unless the caller PINNED a target-shard
+        # count, assume t_shard = t — the ridge path this guard protects
+        # is single-shard, so dividing by device_count here would
+        # under-estimate by device_count× and let fit(store=...)
+        # materialise exactly the arrays the budget was set to prevent.
+        resident = estimated_resident_bytes(n, p, t, cfg.target_shards or 1)
+        if resident > cfg.device_memory_budget:
+            if cfg.method == "dual" or cfg.bands is not None:
+                raise ValueError(
+                    f"resident set {resident} B exceeds device_memory_budget="
+                    f"{cfg.device_memory_budget} B but the pinned "
+                    f"method/bands ({cfg.method!r}/{cfg.bands}) cannot "
+                    f"stream — the chunked path is primal/eigh only")
+            return _chunked_decision(cfg, w, resident, device_count)
 
     if solver == "auto":
         if cfg.bands is not None:

@@ -9,7 +9,7 @@ matrices) into a single ``EncodingReport``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Iterable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -88,7 +88,32 @@ class BrainEncoder:
         self.report_: EncodingReport | None = None
 
     # -- sklearn-ish surface -------------------------------------------------
-    def fit(self, X: jax.Array, Y: jax.Array) -> "BrainEncoder":
+    def fit(self, X: jax.Array | None = None, Y: jax.Array | None = None,
+            *, store=None, chunk_rows: int | None = None) -> "BrainEncoder":
+        """Fit from in-memory arrays, or out-of-core from a ``RunStore``.
+
+        ``fit(X, Y)`` is the classic in-memory path.  ``fit(store=run_store)``
+        resolves dispatch on the store's ``(n, p, t)`` shape: when the
+        resident-set estimate exceeds ``config.device_memory_budget`` the
+        decision pins ``method="chunked"`` and the rows are STREAMED from
+        the memory-mapped shards (sharded over the local devices when
+        ``data_shards > 1``) — ``(n, p)`` is never materialised; otherwise
+        the store is loaded once and routed through the ordinary solver
+        dispatch, so small stores transparently get B-MOR/dual/banded
+        semantics.
+        """
+        if store is not None:
+            if X is not None or Y is not None:
+                raise ValueError("pass either (X, Y) or store=, not both")
+            self._check_store_folds(store)
+            n, p, t = store.shape
+            decision = resolve(self.config, n, p, t, jax.device_count())
+            if decision.method == "chunked":
+                return self._fit_store_chunked(store, decision, chunk_rows)
+            X, Y = store.load()
+            X, Y = jnp.asarray(X), jnp.asarray(Y)
+        if X is None or Y is None:
+            raise ValueError("fit() needs (X, Y) arrays or store=")
         n, p = X.shape
         t = Y.shape[1]
         decision = resolve(self.config, n, p, t, jax.device_count())
@@ -96,8 +121,8 @@ class BrainEncoder:
         self.report_ = fitter(X, Y, decision)
         return self
 
-    def fit_chunks(self, chunks: Iterable[tuple[jax.Array, jax.Array]],
-                   n_total: int) -> "BrainEncoder":
+    def fit_chunks(self, chunks, n_total: int | None = None
+                   ) -> "BrainEncoder":
         """Out-of-core fit from ordered ``(X_chunk, Y_chunk)`` row batches.
 
         The chunks are streamed through a ``foldstats.FoldStatsAccumulator``
@@ -108,7 +133,36 @@ class BrainEncoder:
         the streaming regime is tall-``n``, exactly where the Gram form
         (p×p) is the small object.  Chunks must arrive in global row order;
         the fold split matches ``fit`` on the concatenated rows.
+
+        ``chunks`` may also be a ``repro.data.store.RunStore`` — it is
+        streamed with ``config.chunk_rows`` and ``n_total`` is taken from
+        its manifest.
         """
+        self._check_chunkable()
+        if hasattr(chunks, "iter_chunks"):            # RunStore duck-type
+            self._check_store_folds(chunks)
+            n_total = chunks.shape[0]
+            chunks = chunks.iter_chunks(self.config.chunk_rows)
+        if n_total is None:
+            raise ValueError("fit_chunks needs n_total for iterator sources")
+        stats = foldstats.compute_chunked(chunks, n_total,
+                                          self.config.n_folds)
+        return self._fit_from_stats(stats, n_total)
+
+    def _check_store_folds(self, store) -> None:
+        """The manifest's fold split is part of the store's data contract:
+        every consumer must derive the identical k-fold assignment, so a
+        config that disagrees with the manifest is an error, not a
+        silently different CV."""
+        k = getattr(store, "n_folds", None)
+        if k is not None and k != self.config.n_folds:
+            raise ValueError(
+                f"store manifest records n_folds={k} but the encoder is "
+                f"configured with n_folds={self.config.n_folds} — match "
+                f"EncoderConfig.n_folds to the store (or re-create the "
+                f"store with the intended split)")
+
+    def _check_chunkable(self) -> None:
         if self.config.solver not in ("auto", "ridge"):
             raise ValueError(
                 f"fit_chunks supports only the single-shard ridge solver; "
@@ -118,8 +172,11 @@ class BrainEncoder:
             raise ValueError(
                 "fit_chunks is primal/eigh only (streamed row statistics "
                 "cannot build the dual kernel or per-band refits)")
-        stats = foldstats.compute_chunked(chunks, n_total,
-                                          self.config.n_folds)
+
+    def _fit_from_stats(self, stats: foldstats.FoldStats, n_total: int,
+                        decision: DispatchDecision | None = None
+                        ) -> "BrainEncoder":
+        """CV'd solve from accumulated fold statistics alone."""
         p, t = stats.G.shape[1], stats.C.shape[2]
         # Statistics-based CV scores lose f32 precision roughly
         # quadratically in |ȳ|/σ_y (see foldstats.validation_scores_from
@@ -134,7 +191,8 @@ class BrainEncoder:
                 f"large for statistics-based CV scoring in float32 — "
                 f"standardize the targets first (pipeline.standardize)")
         cfg = dataclasses.replace(self.config, solver="ridge", method="eigh")
-        decision = resolve(cfg, n_total, p, t, jax.device_count())
+        if decision is None:
+            decision = resolve(cfg, n_total, p, t, jax.device_count())
         res = ridge.ridge_cv_from_stats(stats,
                                         cfg.ridge_cv_config("eigh"))
         self.report_ = EncodingReport(
@@ -143,6 +201,27 @@ class BrainEncoder:
             cv_scores=np.asarray(res.cv_scores)[None, :],
             lambdas=self.config.lambdas, decision=decision)
         return self
+
+    def _fit_store_chunked(self, store, decision: DispatchDecision,
+                           chunk_rows: int | None) -> "BrainEncoder":
+        """Streamed fit: shard the row windows over the local devices, each
+        shard accumulating its own chunks; one psum combines the stacks."""
+        self._check_chunkable()
+        n_total = store.shape[0]
+        chunk_rows = chunk_rows or self.config.chunk_rows
+        n_shards = max(1, min(decision.data_shards, jax.device_count(),
+                              n_total))
+        mesh = None
+        if n_shards > 1:
+            from repro.core.compat import make_mesh
+            mesh = make_mesh((n_shards,), (self.config.data_axis,))
+        streams = [
+            store.iter_chunks(chunk_rows, row_range=(lo, hi))
+            for lo, hi in foldstats.shard_row_ranges(n_total, n_shards)]
+        stats = foldstats.compute_sharded_chunked(
+            streams, n_total, self.config.n_folds, mesh=mesh,
+            data_axis=self.config.data_axis)
+        return self._fit_from_stats(stats, n_total, decision)
 
     @property
     def weights_(self) -> jax.Array:

@@ -23,12 +23,18 @@ from repro.encoding.estimator import (BrainEncoder, EncodingReport,
 
 @dataclasses.dataclass
 class PipelineState:
-    """Everything flowing between stages."""
+    """Everything flowing between stages.
 
-    X: jax.Array
-    Y: jax.Array
+    Out-of-core states carry a ``store`` (``repro.data.store.RunStore``)
+    instead of materialised ``X``/``Y`` — stages that need the rows stream
+    them chunk by chunk and never hold ``(n, p)`` resident.
+    """
+
+    X: jax.Array | None
+    Y: jax.Array | None
     X_test: jax.Array | None = None
     Y_test: jax.Array | None = None
+    store: "object | None" = None           # RunStore-shaped source
     encoder: BrainEncoder | None = None
     report: EncodingReport | None = None
     evaluation: EvaluationReport | None = None
@@ -88,22 +94,69 @@ def fit(config: EncoderConfig | None = None, **overrides) -> Stage:
     return stage
 
 
+def streaming_moments(chunks) -> tuple:
+    """First streaming pass: per-column μ/σ of X and Y over the chunks.
+
+    Returns ``(mu_x, sd_x, mu_y, sd_y)`` as float32 numpy arrays — the
+    standardization statistics the second pass applies chunk by chunk, so
+    the streamed fit standardizes exactly like ``pipeline.standardize``
+    does on materialised rows (μ/σ from the training rows it streams)
+    without ever holding them.
+    """
+    import numpy as np
+
+    from repro.core import foldstats as fs
+    mx, my = fs.ColumnMoments(), fs.ColumnMoments()
+    for X_c, Y_c in chunks:
+        mx.update(X_c)
+        my.update(Y_c)
+    return (np.float32(mx.mean), np.float32(mx.std()),
+            np.float32(my.mean), np.float32(my.std()))
+
+
 def fit_chunked(config: EncoderConfig | None = None, *,
-                chunk_rows: int = 1024, **overrides) -> Stage:
+                chunk_rows: int = 1024, standardize: bool | None = None,
+                **overrides) -> Stage:
     """Out-of-core fit stage: stream the training rows in ``chunk_rows``
     batches through ``BrainEncoder.fit_chunks``.
 
-    Exercises the fold-statistics accumulator end to end (each batch is
-    folded into the ``(k, p, p+t)`` sufficient statistics and discarded);
-    callers whose ``X`` genuinely exceeds device memory should call
-    ``fit_chunks`` directly with a generator that loads batches lazily.
+    Sources, in priority order: ``state.store`` (a ``RunStore`` — rows are
+    memory-mapped and streamed, ``(n, p)`` is NEVER materialised) or the
+    in-memory ``state.X``/``state.Y`` (sliced lazily; useful for parity
+    tests of the chunked path, and standardize-free by default so it
+    matches a plain ``fit()`` on the same rows).
+
+    ``standardize`` defaults to True for a store source and False for the
+    in-memory source.  When on, the stage makes two streaming passes: one
+    ``ColumnMoments`` pass for the per-column μ/σ of X and Y on the rows
+    it will train on, then the fold-statistics pass over the standardized
+    chunks — the streaming equivalent of the ``standardize() → fit()``
+    stage pair, at one extra read of the rows and O(p + t) extra
+    residency.
     """
     def stage(s: PipelineState) -> PipelineState:
-        n = s.X.shape[0]
-        chunks = ((s.X[lo:lo + chunk_rows], s.Y[lo:lo + chunk_rows])
-                  for lo in range(0, n, chunk_rows))
-        s.encoder = BrainEncoder(config, **overrides).fit_chunks(
-            chunks, n_total=n)
+        import numpy as np
+        encoder = BrainEncoder(config, **overrides)
+        if s.store is not None:
+            encoder._check_store_folds(s.store)
+            n = s.store.shape[0]
+            make_chunks = lambda: s.store.iter_chunks(chunk_rows)  # noqa: E731
+        else:
+            if s.X is None:
+                raise ValueError("fit_chunked needs state.store or state.X")
+            n = s.X.shape[0]
+            make_chunks = lambda: (                                # noqa: E731
+                (s.X[lo:lo + chunk_rows], s.Y[lo:lo + chunk_rows])
+                for lo in range(0, n, chunk_rows))
+        chunks = make_chunks()
+        do_std = standardize if standardize is not None \
+            else s.store is not None
+        if do_std:
+            mu_x, sd_x, mu_y, sd_y = streaming_moments(make_chunks())
+            chunks = (((np.asarray(X_c, np.float32) - mu_x) / sd_x,
+                       (np.asarray(Y_c, np.float32) - mu_y) / sd_y)
+                      for X_c, Y_c in chunks)
+        s.encoder = encoder.fit_chunks(chunks, n_total=n)
         s.report = s.encoder.report_
         return s
     return stage
@@ -157,3 +210,17 @@ def run(X: jax.Array, Y: jax.Array, config: EncoderConfig | None = None,
         **kwargs) -> PipelineState:
     """One-call pipeline: ``run(X, Y, EncoderConfig(...))``."""
     return run_stages(X, Y, default_stages(config, **kwargs))
+
+
+def run_store(store, config: EncoderConfig | None = None, *,
+              chunk_rows: int = 8192, standardize: bool = True,
+              **overrides) -> PipelineState:
+    """One-call out-of-core pipeline: stream a ``RunStore`` through the
+    two-pass standardize + fold-statistics fit without materialising rows.
+
+    Held-out evaluation needs rows that fit in memory — evaluate against a
+    separate (small) test store/array with ``state.encoder.evaluate``.
+    """
+    state = PipelineState(X=None, Y=None, store=store)
+    return fit_chunked(config, chunk_rows=chunk_rows,
+                       standardize=standardize, **overrides)(state)

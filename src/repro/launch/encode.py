@@ -14,6 +14,51 @@ from __future__ import annotations
 import argparse
 
 
+def _run_store_mode(args) -> None:
+    """Out-of-core path: materialise a synthetic subject once, stream it.
+
+    ``--store DIR`` either opens an existing ``RunStore`` or writes one
+    (CNeuroMod-shaped synthetic runs via ``materialize_synthetic``), then
+    fits through ``BrainEncoder.fit(store=...)`` under ``--budget-mb`` —
+    dispatch pins the streamed fold-statistics path whenever the resident
+    estimate exceeds the budget, sharding the accumulation over the local
+    devices.
+    """
+    import os
+
+    import jax
+    from repro.data import fmri
+    from repro.data.store import MANIFEST_NAME, RunStore
+    from repro.encoding import BrainEncoder, EncoderConfig
+    from repro.encoding.dispatch import estimated_resident_bytes
+
+    if os.path.exists(os.path.join(args.store, MANIFEST_NAME)):
+        store = RunStore.open(args.store)
+        print(f"opened store {args.store}: shape {store.shape}")
+    else:
+        spec = fmri.SubjectSpec(n=args.n, p=128, t=args.targets)
+        store = RunStore.create(args.store)
+        store.materialize_synthetic(
+            spec, rows_per_run=max(1, min(spec.n, 4 * args.chunk_rows)))
+        store = RunStore.open(args.store)
+        print(f"materialised synthetic subject into {args.store}: "
+              f"shape {store.shape}")
+
+    n, p, t = store.shape
+    budget = int(args.budget_mb * 2**20)
+    enc = BrainEncoder(EncoderConfig(device_memory_budget=budget,
+                                     chunk_rows=args.chunk_rows))
+    enc.fit(store=store)
+    d = enc.report_.decision
+    resident = estimated_resident_bytes(n, p, t, jax.device_count())
+    print(f"resident estimate {resident / 2**20:.1f} MB vs budget "
+          f"{args.budget_mb:.1f} MB on {jax.device_count()} device(s)")
+    print(f"dispatch: solver={d.solver} method={d.method} "
+          f"data_shards={d.data_shards} ({d.rationale})")
+    print(f"{enc.report_.solver_label} fit: λ = {enc.report_.best_lambda}, "
+          f"CV scores {enc.report_.cv_scores.round(4)}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--backbone", default="vgg16",
@@ -25,7 +70,18 @@ def main() -> None:
                     help="auto|ridge|mor|bmor|bmor_dual|banded")
     ap.add_argument("--target-shards", type=int, default=None,
                     help="pin the target-batch shard count (default: dispatch)")
+    ap.add_argument("--store", default=None,
+                    help="out-of-core mode: RunStore directory (materialised "
+                         "with synthetic runs on first use, then streamed)")
+    ap.add_argument("--chunk-rows", type=int, default=8192,
+                    help="row-batch size of the streaming accumulation")
+    ap.add_argument("--budget-mb", type=float, default=64.0,
+                    help="device-memory budget (MB) for --store dispatch")
     args = ap.parse_args()
+
+    if args.store is not None:
+        _run_store_mode(args)
+        return
 
     import jax
     import jax.numpy as jnp

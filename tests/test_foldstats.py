@@ -118,7 +118,7 @@ def test_accumulator_rejects_bad_row_counts():
     X, Y = _make_problem(jax.random.PRNGKey(5), 10, 4, 2)
     with pytest.raises(ValueError, match="overruns"):
         acc.update(X[:6], Y[:6]), acc.update(X, Y)
-    with pytest.raises(ValueError, match="expected n_total"):
+    with pytest.raises(ValueError, match="expected the full window"):
         foldstats.FoldStatsAccumulator(10, 2).finalize()
 
 

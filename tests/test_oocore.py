@@ -1,0 +1,404 @@
+"""Out-of-core subsystem: chunk-invariance harness, store I/O, dispatch.
+
+The lockdown contract of the streaming path: the ``FoldStats`` produced by
+``compute_chunked`` / ``compute_sharded_chunked`` are INVARIANT (to f32
+tolerance, against a float64 oracle) under chunk size, chunk-boundary
+placement, and shard count — including 1-row chunks, chunks that straddle
+fold boundaries, ragged final chunks, and shard windows that cut folds.
+Property-based (hypothesis) where available, with fixed-seed parametrised
+fallbacks that always run.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import foldstats, ridge
+from repro.core.ridge import RidgeCVConfig
+from repro.data.store import RunStore, StoreError
+from repro.encoding import BrainEncoder, EncoderConfig, pipeline, resolve
+from repro.encoding.dispatch import estimated_resident_bytes
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                # fixed-seed fallback only
+    HAVE_HYPOTHESIS = False
+
+
+def _make_problem(seed, n, p, t, noise=0.05, y_offset=0.0,
+                  dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, p)).astype(np.float32)
+    W = rng.normal(size=(p, t)).astype(np.float32) / np.sqrt(p)
+    Y = (X @ W + noise * rng.normal(size=(n, t)) + y_offset).astype(
+        np.float32)
+    return X.astype(dtype), Y.astype(dtype)
+
+
+def _oracle_stats(X, Y, n_folds):
+    """Float64 per-fold statistics, computed directly."""
+    X64, Y64 = np.asarray(X, np.float64), np.asarray(Y, np.float64)
+    out = {}
+    for f, (lo, hi) in enumerate(foldstats.fold_bounds(len(X64), n_folds)):
+        Xf, Yf = X64[lo:hi], Y64[lo:hi]
+        out[f] = dict(G=Xf.T @ Xf, C=Xf.T @ Yf, xsum=Xf.sum(0),
+                      ysum=Yf.sum(0),
+                      ysq=((Yf - Yf.mean(0)) ** 2).sum(0),
+                      count=float(hi - lo))
+    return out
+
+
+def _chunk_stream(X, Y, lo, hi, chunk):
+    pos = lo
+    while pos < hi:
+        end = min(pos + chunk, hi)
+        yield X[pos:end], Y[pos:end]
+        pos = end
+
+
+def _check_invariance(n, n_folds, chunk, n_shards, seed, y_offset=0.0,
+                      rtol=2e-5, atol=2e-4):
+    """Core harness: chunked+sharded stats match the f64 oracle."""
+    X, Y = _make_problem(seed, n, 6, 4, y_offset=y_offset)
+    ranges = foldstats.shard_row_ranges(n, n_shards)
+    streams = [_chunk_stream(X, Y, lo, hi, chunk) for lo, hi in ranges]
+    got = foldstats.compute_sharded_chunked(streams, n, n_folds)
+    oracle = _oracle_stats(X, Y, n_folds)
+    for f in range(n_folds):
+        for name in ("G", "C", "xsum", "ysum", "ysq", "count"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(got, name)[f]), oracle[f][name],
+                rtol=rtol, atol=atol,
+                err_msg=f"{name} fold {f} (chunk={chunk}, "
+                        f"shards={n_shards})")
+
+
+# ---------------------------------------------------------------------------
+# Chunk-invariance: fixed-seed lockdown grid (always runs)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [1, 2, 8])
+@pytest.mark.parametrize("chunk", [1, 7, 13, 64])
+def test_chunk_and_shard_invariance_fixed(chunk, n_shards):
+    """n=97, k=5: folds of 20/20/19/19/19 — chunk sizes {1 row,
+    fold-misaligned, ragged tail} × shard counts {1, 2, 8}."""
+    _check_invariance(97, 5, chunk, n_shards, seed=0)
+
+
+def test_chunk_invariance_fold_boundary_straddle():
+    """A chunk spanning three folds and shard windows cutting folds
+    mid-chunk must agree with the oracle exactly like aligned chunks."""
+    _check_invariance(30, 6, 13, 4, seed=1)       # folds of 5, chunks of 13
+    _check_invariance(30, 6, 30, 1, seed=1)       # single whole-data chunk
+
+
+def test_chunk_invariance_unstandardized_targets():
+    """Chan-combined centred moments survive a large target mean."""
+    _check_invariance(120, 5, 17, 3, seed=2, y_offset=50.0, atol=5e-3,
+                      rtol=5e-4)
+
+
+def test_sharded_equals_unsharded_bitwise_structure():
+    """Shard count changes the combine tree, not the result beyond f32
+    rounding: 1 vs 2 vs 8 shards agree pairwise."""
+    X, Y = _make_problem(3, 101, 8, 5)
+    n, k = 101, 4
+    results = []
+    for S in (1, 2, 8):
+        streams = [_chunk_stream(X, Y, lo, hi, 9)
+                   for lo, hi in foldstats.shard_row_ranges(n, S)]
+        results.append(foldstats.compute_sharded_chunked(streams, n, k))
+    for other in results[1:]:
+        for name in ("G", "C", "xsum", "ysum", "ysq", "count"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(other, name)),
+                np.asarray(getattr(results[0], name)),
+                rtol=2e-5, atol=2e-4)
+
+
+def test_accumulator_window_and_stream_validation():
+    X, Y = _make_problem(4, 40, 4, 3)
+    with pytest.raises(ValueError, match="row_start"):
+        foldstats.FoldStatsAccumulator(40, 4, row_start=10, row_stop=5)
+    acc = foldstats.FoldStatsAccumulator(40, 4, row_start=10, row_stop=30)
+    with pytest.raises(ValueError, match="overruns"):
+        acc.update(X[10:35], Y[10:35])            # 25 rows > 20-row window
+    acc.update(X[10:25], Y[10:25])
+    with pytest.raises(ValueError, match="full window"):
+        acc.finalize()                            # 5 rows short
+    with pytest.raises(ValueError, match="n_shards"):
+        foldstats.shard_row_ranges(4, 9)
+    with pytest.raises(ValueError, match="at least one"):
+        foldstats.combine([])
+
+
+# ---------------------------------------------------------------------------
+# Chunk-invariance: hypothesis property (skipped without hypothesis)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**16), n=st.integers(10, 160),
+           n_folds=st.integers(2, 7), chunk=st.integers(1, 170),
+           n_shards=st.sampled_from([1, 2, 3, 8]))
+    def test_chunk_invariance_property(seed, n, n_folds, chunk, n_shards):
+        if n_folds > n or n_shards > n:
+            return
+        _check_invariance(n, n_folds, chunk, n_shards, seed)
+
+
+# ---------------------------------------------------------------------------
+# RunStore: round-trip, chunk iteration, manifest validation
+# ---------------------------------------------------------------------------
+
+def test_store_round_trip_and_chunk_iteration(make_run_store):
+    X, Y = _make_problem(5, 57, 6, 4)
+    store = make_run_store(X, Y, n_runs=3)
+    assert store.shape == (57, 6, 4)
+    Xl, Yl = store.load()
+    np.testing.assert_array_equal(Xl, X)
+    np.testing.assert_array_equal(Yl, Y)
+    for chunk in (1, 10, 57, 100):                # incl. run-straddling
+        xs = [c for c, _ in store.iter_chunks(chunk)]
+        assert all(len(c) <= chunk for c in xs)
+        np.testing.assert_array_equal(np.concatenate(xs), X)
+    # Windowed stream (the sharded path's per-shard slice).
+    xs = [c for c, _ in store.iter_chunks(8, row_range=(13, 41))]
+    np.testing.assert_array_equal(np.concatenate(xs), X[13:41])
+
+
+def test_store_read_only_semantics(make_run_store):
+    X, Y = _make_problem(6, 30, 4, 3)
+    store = make_run_store(X, Y)
+    X_c, _ = next(store.iter_chunks(10))
+    with pytest.raises(ValueError):               # read-only memmap view
+        X_c[0, 0] = 1.0
+    with pytest.raises(StoreError, match="read-only"):
+        store.write(X, Y, "new-run")
+
+
+def test_store_bf16_round_trip(make_run_store):
+    """bf16 shards survive .npy storage (stored as u16 bit patterns)."""
+    X, Y = _make_problem(7, 24, 4, 3, dtype=jnp.bfloat16)
+    store = make_run_store(np.asarray(X), np.asarray(Y))
+    X_c, Y_c = next(store.iter_chunks(24))
+    assert jnp.asarray(X_c).dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(X_c, np.float32),
+                                  np.asarray(X, np.float32))
+
+
+def test_store_write_validation(tmp_path):
+    X, Y = _make_problem(8, 20, 4, 3)
+    store = RunStore.create(str(tmp_path / "s"))
+    store.write(X, Y, "r1")
+    with pytest.raises(StoreError, match="already written"):
+        store.write(X, Y, "r1")
+    with pytest.raises(StoreError, match="columns"):
+        store.write(X[:, :2], Y, "r2")
+    with pytest.raises(StoreError, match="matching 2-D"):
+        store.write(X[:10], Y, "r3")
+    with pytest.raises(StoreError, match="already exists"):
+        RunStore.create(str(tmp_path / "s"))
+    with pytest.raises(StoreError, match="no manifest"):
+        RunStore.open(str(tmp_path / "nowhere"))
+
+
+def test_store_manifest_validation(tmp_path, make_run_store):
+    X, Y = _make_problem(9, 30, 4, 3)
+
+    def tamper(mutate):
+        store = make_run_store(X, Y, n_runs=2)
+        path = os.path.join(store.root, "manifest.json")
+        with open(path) as f:
+            m = json.load(f)
+        mutate(m, store.root)
+        with open(path, "w") as f:
+            json.dump(m, f)
+        return store.root
+
+    # Overlapping row ranges.
+    root = tamper(lambda m, r: m["runs"][1].update(row_offset=5))
+    with pytest.raises(StoreError, match="overlaps or gaps"):
+        RunStore.open(root)
+    # Shape mismatch (manifest lies about the row count).
+    root = tamper(lambda m, r: m["runs"][0].update(n_rows=7, row_offset=0)
+                  or m["runs"][1].update(row_offset=7))
+    with pytest.raises(StoreError, match="shape"):
+        RunStore.open(root)
+    # Dtype mismatch.
+    root = tamper(lambda m, r: m.update(dtype_x="float64"))
+    with pytest.raises(StoreError, match="dtype"):
+        RunStore.open(root)
+    # Missing shard.
+    root = tamper(lambda m, r: os.remove(os.path.join(r, "run-000.X.npy")))
+    with pytest.raises(StoreError, match="missing X shard"):
+        RunStore.open(root)
+    # Unsupported manifest version.
+    root = tamper(lambda m, r: m.update(version=99))
+    with pytest.raises(StoreError, match="version"):
+        RunStore.open(root)
+
+
+def test_store_materialize_synthetic(tmp_path):
+    from repro.data import fmri
+    spec = fmri.SubjectSpec(n=100, p=8, t=6)
+    store = RunStore.create(str(tmp_path / "syn"))
+    store.materialize_synthetic(spec, rows_per_run=32)
+    store = RunStore.open(str(tmp_path / "syn"))
+    assert store.shape == (100, 8, 6)
+    assert len(store.runs) == 4                   # 32+32+32+4 rows
+    assert store.runs[-1].n_rows == 4
+
+
+# ---------------------------------------------------------------------------
+# Dispatch: memory-budgeted routing
+# ---------------------------------------------------------------------------
+
+def test_dispatch_memory_budget_pins_chunked():
+    n, p, t = 10_000, 64, 128
+    need = estimated_resident_bytes(n, p, t)
+    assert need == n * (p + t) * 4
+    d = resolve(EncoderConfig(device_memory_budget=need - 1), n, p, t, 1)
+    assert (d.solver, d.method) == ("ridge", "chunked")
+    assert "device_memory_budget" in d.rationale
+    d = resolve(EncoderConfig(device_memory_budget=need + 1), n, p, t, 1)
+    assert d.method != "chunked"
+    # No budget → never chunked.
+    d = resolve(EncoderConfig(), n, p, t, 1)
+    assert d.method != "chunked"
+    # Pinned incompatible method cannot stream.
+    with pytest.raises(ValueError, match="primal/eigh only"):
+        resolve(EncoderConfig(device_memory_budget=1, method="dual"),
+                n, p, t, 1)
+    # Pinned non-ridge solvers keep their own dispatch (budget ignored).
+    d = resolve(EncoderConfig(device_memory_budget=1, solver="mor"),
+                n, p, t, 1)
+    assert d.solver == "mor"
+
+
+def test_dispatch_budget_shards_over_devices():
+    d = resolve(EncoderConfig(device_memory_budget=1), 1000, 8, 4, 4)
+    assert d.method == "chunked" and d.data_shards == 4
+    d = resolve(EncoderConfig(device_memory_budget=1, data_shards=2),
+                1000, 8, 4, 4)
+    assert d.data_shards == 2
+
+
+# ---------------------------------------------------------------------------
+# Store-backed fits: λ bit-identical to in-memory
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("y_offset", [0.0, 3.0])
+def test_fit_store_matches_fit_in_memory(make_run_store, y_offset):
+    """Streamed fit(store=) vs materialised fit(X, Y): λ bit-identical,
+    weights to f32 tolerance — standardized and offset targets."""
+    X, Y = _make_problem(10, 310, 24, 12, y_offset=y_offset)
+    store = make_run_store(X, Y, n_runs=3, n_folds=4)
+    ref = BrainEncoder(n_folds=4).fit(jnp.asarray(X), jnp.asarray(Y))
+    enc = BrainEncoder(n_folds=4, device_memory_budget=1,
+                       chunk_rows=37).fit(store=store)
+    assert enc.report_.decision.method == "chunked"
+    assert enc.report_.best_lambda[0] == ref.report_.best_lambda[0]
+    np.testing.assert_allclose(np.asarray(enc.weights_),
+                               np.asarray(ref.weights_), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_fit_store_bf16(make_run_store):
+    X, Y = _make_problem(11, 200, 16, 8, noise=0.5)
+    Xb, Yb = (np.asarray(jnp.asarray(a, jnp.bfloat16)) for a in (X, Y))
+    store = make_run_store(Xb, Yb, n_runs=2, n_folds=3)
+    ref = BrainEncoder(n_folds=3).fit(jnp.asarray(Xb), jnp.asarray(Yb))
+    enc = BrainEncoder(n_folds=3, device_memory_budget=1,
+                       chunk_rows=64).fit(store=store)
+    assert enc.report_.best_lambda[0] == ref.report_.best_lambda[0]
+    np.testing.assert_allclose(np.asarray(enc.weights_),
+                               np.asarray(ref.weights_), rtol=5e-2,
+                               atol=5e-2)
+
+
+def test_fit_store_rejects_fold_split_mismatch(make_run_store):
+    """The manifest's fold split is a data contract: a config that
+    disagrees raises instead of silently running a different CV."""
+    X, Y = _make_problem(16, 60, 6, 4)
+    store = make_run_store(X, Y, n_folds=3)
+    with pytest.raises(ValueError, match="n_folds=3"):
+        BrainEncoder(n_folds=5, device_memory_budget=1).fit(store=store)
+    with pytest.raises(ValueError, match="n_folds=3"):
+        BrainEncoder(n_folds=5).fit_chunks(store)
+    with pytest.raises(ValueError, match="n_folds=3"):
+        pipeline.run_store(store, EncoderConfig(n_folds=5))
+
+
+def test_fit_store_transparent_when_budget_fits(make_run_store):
+    """A store that fits the budget routes through ordinary dispatch."""
+    X, Y = _make_problem(12, 120, 8, 6)
+    store = make_run_store(X, Y, n_folds=3)
+    enc = BrainEncoder(n_folds=3, device_memory_budget=10**9).fit(store=store)
+    assert enc.report_.decision.method != "chunked"
+    ref = BrainEncoder(n_folds=3).fit(jnp.asarray(X), jnp.asarray(Y))
+    np.testing.assert_allclose(np.asarray(enc.weights_),
+                               np.asarray(ref.weights_), rtol=1e-5,
+                               atol=1e-5)
+    with pytest.raises(ValueError, match="not both"):
+        BrainEncoder().fit(jnp.asarray(X), jnp.asarray(Y), store=store)
+    with pytest.raises(ValueError, match="needs n_total"):
+        BrainEncoder().fit_chunks(iter([(X, Y)]))
+
+
+# ---------------------------------------------------------------------------
+# Streaming pipeline: two-pass standardize + fit without residency
+# ---------------------------------------------------------------------------
+
+def test_pipeline_run_store_standardizes_from_moments(make_run_store):
+    """run_store ≡ standardize() → fit() on materialised rows."""
+    X, Y = _make_problem(13, 260, 12, 8, y_offset=5.0)
+    store = make_run_store(X, Y, n_runs=2, n_folds=4)
+    state = pipeline.run_store(store, EncoderConfig(n_folds=4),
+                               chunk_rows=49)
+    mu_x, sd_x = X.mean(0), X.std(0) + 1e-6
+    mu_y, sd_y = Y.mean(0), Y.std(0) + 1e-6
+    ref = BrainEncoder(n_folds=4).fit(jnp.asarray((X - mu_x) / sd_x),
+                                      jnp.asarray((Y - mu_y) / sd_y))
+    assert state.report.best_lambda[0] == ref.report_.best_lambda[0]
+    np.testing.assert_allclose(np.asarray(state.encoder.weights_),
+                               np.asarray(ref.weights_), rtol=5e-4,
+                               atol=5e-4)
+
+
+def test_pipeline_fit_chunked_requires_source():
+    with pytest.raises(ValueError, match="store or state.X"):
+        pipeline.fit_chunked()(pipeline.PipelineState(X=None, Y=None))
+
+
+def test_column_moments_matches_numpy():
+    rng = np.random.default_rng(14)
+    A = rng.normal(size=(123, 7)) * 3 + 11
+    cm = foldstats.ColumnMoments()
+    for lo in range(0, 123, 17):
+        cm.update(A[lo:lo + 17])
+    np.testing.assert_allclose(cm.mean, A.mean(0), rtol=1e-9)
+    np.testing.assert_allclose(cm.std(0.0), A.std(0), rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# ridge_cv_from_stats on sharded-chunked stats: λ parity end to end
+# ---------------------------------------------------------------------------
+
+def test_ridge_cv_from_sharded_stats_lambda_parity():
+    X, Y = _make_problem(15, 190, 20, 10)
+    cfg = RidgeCVConfig(n_folds=5)
+    ref = ridge.ridge_cv(jnp.asarray(X), jnp.asarray(Y), cfg)
+    for S, chunk in ((2, 31), (8, 1), (3, 190)):
+        streams = [_chunk_stream(X, Y, lo, hi, chunk)
+                   for lo, hi in foldstats.shard_row_ranges(190, S)]
+        stats = foldstats.compute_sharded_chunked(streams, 190, 5)
+        res = ridge.ridge_cv_from_stats(stats, cfg)
+        assert float(res.best_lambda) == float(ref.best_lambda), (S, chunk)
+        np.testing.assert_allclose(np.asarray(res.weights),
+                                   np.asarray(ref.weights), rtol=1e-4,
+                                   atol=1e-4)
