@@ -1,0 +1,199 @@
+"""Serving-path benchmark: wave-batched encoder prediction latency.
+
+Builds a small fleet of ``EncoderBundle``\\ s (fit once), registers them in
+an ``EncoderRegistry``, and drives an ``EncoderService`` with synthetic
+request traffic:
+
+* **Wave sweep** — for each wave size, serve batches of ragged concurrent
+  requests across all registry entries and record per-``serve()`` p50/p99
+  latency, waves/s, and rows/s.  The first call per wave size is the cold
+  (compiling) call, reported separately.
+* **Registry timing** — cold bundle load (disk → device) vs warm LRU hit,
+  and an eviction demo under a budget sized for 2 of the entries.
+* **Compile-count assertion** — after the sweep the service must have
+  traced its predict EXACTLY once per distinct wave shape (all bundles
+  share ``(p, t)``, so model count must NOT multiply compilations).  The
+  bench exits non-zero otherwise; the CI serving lane runs ``--smoke``.
+
+Writes ``BENCH_serving.json``::
+
+    {"meta": {...}, "wave_sweep": [{"wave_rows", "cold_ms", "p50_ms",
+      "p99_ms", "waves_per_s", "rows_per_s", "pad_fraction"}, ...],
+     "registry": {"entries", "resident_mb", "cold_load_ms", "warm_hit_ms",
+      "eviction_demo": {...}},
+     "compile_count": K, "distinct_wave_shapes": K}
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+
+def sweep_wave(service, models: list[str], p: int, wave_rows: int,
+               batches: int, reqs_per_batch: int, seed: int) -> dict:
+    import numpy as np
+    from repro.serving_encoders.traffic import ragged_requests
+
+    rng = np.random.default_rng(seed)
+
+    def make_batch():
+        return ragged_requests(rng, models, p, wave_rows, reqs_per_batch)
+
+    t0 = time.perf_counter()
+    service.serve(make_batch(), wave_rows=wave_rows)      # cold: compiles
+    cold_ms = (time.perf_counter() - t0) * 1e3
+
+    walls = []
+    waves0, rows0 = service.stats.waves, service.stats.rows
+    pad0 = service.stats.pad_rows
+    t_all = time.perf_counter()
+    for _ in range(batches):
+        batch = make_batch()
+        t0 = time.perf_counter()
+        service.serve(batch, wave_rows=wave_rows)
+        walls.append((time.perf_counter() - t0) * 1e3)
+    span = time.perf_counter() - t_all
+    waves = service.stats.waves - waves0
+    rows = service.stats.rows - rows0
+    pad = service.stats.pad_rows - pad0
+    return {
+        "wave_rows": wave_rows,
+        "batches": batches,
+        "requests_per_batch": reqs_per_batch,
+        "cold_ms": round(cold_ms, 3),
+        "p50_ms": round(float(np.percentile(walls, 50)), 3),
+        "p99_ms": round(float(np.percentile(walls, 99)), 3),
+        "waves": waves,
+        "waves_per_s": round(waves / span, 1),
+        "rows_per_s": round(rows / span, 1),
+        "pad_fraction": round(pad / max(rows + pad, 1), 4),
+    }
+
+
+def time_registry(paths: list[str], wave_rows: int) -> dict:
+    from repro.serving_encoders import EncoderRegistry
+    from repro.serving_encoders.registry import bundle_resident_bytes
+    from repro.serving_encoders.bundle import EncoderBundle
+
+    reg = EncoderRegistry(wave_rows=wave_rows)
+    cold, warm = [], []
+    for i, path in enumerate(paths):
+        name = f"m{i}"
+        reg.add(name, path)
+        t0 = time.perf_counter()
+        reg.get(name)
+        cold.append((time.perf_counter() - t0) * 1e3)
+        t0 = time.perf_counter()
+        reg.get(name)
+        warm.append((time.perf_counter() - t0) * 1e3)
+    # Eviction demo: budget for exactly 2 of the (identically sized)
+    # bundles → cycling through all of them must evict.
+    need = bundle_resident_bytes(EncoderBundle.open(paths[0]), wave_rows)
+    reg2 = EncoderRegistry(device_memory_budget=int(2.5 * need),
+                           wave_rows=wave_rows)
+    for i, path in enumerate(paths):
+        reg2.add(f"m{i}", path)
+    for i in range(len(paths)):
+        reg2.get(f"m{i}")
+    assert reg2.evictions >= len(paths) - 2, reg2.stats()
+    assert len(reg2.loaded_names) <= 2, reg2.loaded_names
+    return {
+        "entries": len(paths),
+        "resident_mb": round(reg.resident_bytes / 2**20, 3),
+        "cold_load_ms": [round(c, 3) for c in cold],
+        "warm_hit_ms": [round(w, 4) for w in warm],
+        "eviction_demo": {"budget_entries": 2, **reg2.stats()},
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes + fewer batches (CI serving lane)")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default: BENCH_serving.json at the "
+                         "repo root; --smoke defaults to workdir)")
+    ap.add_argument("--workdir", default=None,
+                    help="bundle fleet directory (default: a tempdir)")
+    ap.add_argument("--models", type=int, default=3,
+                    help="registry entries (acceptance floor: 3)")
+    args = ap.parse_args()
+
+    if args.smoke:
+        n, p, t = 256, 64, 96
+        wave_sizes = (16, 32)
+        batches, reqs = 5, 4
+    else:
+        n, p, t = 2048, 128, 512
+        wave_sizes = (32, 64, 128)
+        batches, reqs = 30, 8
+    workdir = args.workdir or tempfile.mkdtemp(prefix="serving_bench_")
+    os.makedirs(workdir, exist_ok=True)
+    out = args.out or (os.path.join(workdir, "BENCH_serving.json")
+                       if args.smoke
+                       else os.path.join(REPO, "BENCH_serving.json"))
+
+    import jax
+    from repro.serving_encoders import EncoderRegistry, EncoderService
+    from repro.serving_encoders.traffic import build_synthetic_fleet
+
+    t0 = time.perf_counter()
+    fleet = build_synthetic_fleet(workdir, args.models, n=n, p=p, t=t,
+                                  provenance={"bench": "serving"})
+    paths = [path for _, path in fleet]
+    fit_s = time.perf_counter() - t0
+    print(f"fleet of {len(paths)} bundles ready in {fit_s:.1f}s "
+          f"({workdir})")
+
+    registry = EncoderRegistry(wave_rows=max(wave_sizes))
+    models = []
+    for name, path in fleet:
+        registry.add(name, path)
+        models.append(name)
+    service = EncoderService(registry, wave_rows=wave_sizes[0])
+
+    sweep = []
+    for w in wave_sizes:
+        row = sweep_wave(service, models, p, w, batches, reqs, seed=w)
+        sweep.append(row)
+        print(f"wave_rows={w:4d}: cold {row['cold_ms']:.1f} ms, "
+              f"p50 {row['p50_ms']:.2f} ms, p99 {row['p99_ms']:.2f} ms, "
+              f"{row['waves_per_s']:.0f} waves/s, "
+              f"{row['rows_per_s']:.0f} rows/s")
+
+    # THE acceptance assertion: one compiled predict per distinct wave
+    # shape — model count and request traffic must not multiply traces.
+    distinct = len(wave_sizes)
+    if service.compile_count != distinct:
+        print(f"FAIL: compile_count={service.compile_count} != "
+              f"{distinct} distinct wave shapes")
+        raise SystemExit(1)
+    print(f"compiled predicts: {service.compile_count} "
+          f"== {distinct} distinct wave shapes ✓")
+
+    reg_stats = time_registry(paths, max(wave_sizes))
+    payload = {
+        "meta": {"n_fit": n, "p": p, "t": t, "models": len(paths),
+                 "device": jax.devices()[0].platform,
+                 "device_count": jax.device_count(),
+                 "smoke": bool(args.smoke), "fit_seconds": round(fit_s, 2)},
+        "wave_sweep": sweep,
+        "registry": reg_stats,
+        "compile_count": service.compile_count,
+        "distinct_wave_shapes": distinct,
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

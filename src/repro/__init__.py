@@ -21,9 +21,13 @@ _LAZY = {
     "EncoderConfig": ("repro.encoding.config", "EncoderConfig"),
     "EncodingReport": ("repro.encoding.estimator", "EncodingReport"),
     "EvaluationReport": ("repro.encoding.estimator", "EvaluationReport"),
+    "EncoderBundle": ("repro.serving_encoders.bundle", "EncoderBundle"),
+    "EncoderRegistry": ("repro.serving_encoders.registry", "EncoderRegistry"),
+    "EncoderService": ("repro.serving_encoders.service", "EncoderService"),
     "RunStore": ("repro.data.store", "RunStore"),
     "ShardingPlan": ("repro.encoding.sharding", "ShardingPlan"),
     "encoding": ("repro.encoding", None),
+    "serving_encoders": ("repro.serving_encoders", None),
     "core": ("repro.core", None),
     "configs": ("repro.configs", None),
     "data": ("repro.data", None),

@@ -1,1 +1,3 @@
-from repro.checkpoint.io import latest_step, restore, save  # noqa: F401
+from repro.checkpoint.io import (  # noqa: F401
+    CheckpointError, latest_step, load, restore, save,
+)

@@ -5,6 +5,12 @@ flattened key path, '/'-joined) plus ``manifest.json`` recording the tree
 structure and dtypes.  Atomic via write-to-tmp + rename.  bfloat16 leaves
 are stored as uint16 views with the true dtype in the manifest (npy has no
 native bf16).
+
+Errors are typed: a missing/corrupt manifest, a leaf recorded in the
+manifest whose ``.npy`` is gone, or a requested leaf the manifest never
+recorded all raise ``CheckpointError`` (a ``ValueError``), never a bare
+``KeyError`` — consumers like ``serving_encoders.bundle`` turn these into
+their own eager-validation failures.
 """
 from __future__ import annotations
 
@@ -17,6 +23,11 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class CheckpointError(ValueError):
+    """Checkpoint inconsistency: missing/corrupt manifest, missing leaf
+    file, a leaf absent from the manifest, or a shape mismatch on restore."""
 
 
 def _flatten(tree: Any) -> dict[str, Any]:
@@ -34,6 +45,34 @@ def _path_str(p) -> str:
     if hasattr(p, "idx"):
         return str(p.idx)
     return str(p)
+
+
+def atomic_replace_dir(tmp: str, target: str) -> None:
+    """Crash-safely swap a fully-written ``tmp`` directory into ``target``.
+
+    If ``target`` exists it is renamed aside first and deleted only after
+    the swap, so a failure at any point leaves one complete directory:
+    either the old content (restored on exception) or the new.  On
+    failure ``tmp`` is cleaned up and the exception re-raised.
+    """
+    parent = os.path.dirname(os.path.abspath(target)) or "."
+    old = None
+    try:
+        if os.path.exists(target):
+            old = tempfile.mkdtemp(dir=parent, prefix=".old_")
+            os.rename(target, os.path.join(old, "d"))
+        os.rename(tmp, target)
+        if old is not None:
+            shutil.rmtree(old, ignore_errors=True)
+    except BaseException:
+        if old is not None:
+            moved = os.path.join(old, "d")
+            if not os.path.exists(target) and os.path.exists(moved):
+                os.rename(moved, target)                 # restore old
+            if not os.path.exists(moved):                # payload safe →
+                shutil.rmtree(old, ignore_errors=True)   # drop aside dir
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
 
 
 def save(ckpt_dir: str, step: int, tree: Any) -> str:
@@ -54,26 +93,69 @@ def save(ckpt_dir: str, step: int, tree: Any) -> str:
         manifest["leaves"][key] = {"file": fname, "dtype": dtype_name}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
-    if os.path.exists(target):
-        shutil.rmtree(target)
-    os.rename(tmp, target)
+    atomic_replace_dir(tmp, target)
     return target
+
+
+def _read_manifest(src: str) -> dict:
+    path = os.path.join(src, "manifest.json")
+    if not os.path.exists(path):
+        raise CheckpointError(f"no manifest.json under {src}")
+    try:
+        with open(path) as f:
+            manifest = json.load(f)
+    except json.JSONDecodeError as e:
+        raise CheckpointError(f"corrupt manifest.json under {src}: {e}")
+    if not isinstance(manifest.get("leaves"), dict):
+        raise CheckpointError(f"manifest.json under {src} has no 'leaves'")
+    return manifest
+
+
+def _load_leaf(src: str, key: str, meta: dict) -> np.ndarray:
+    path = os.path.join(src, meta["file"])
+    if not os.path.exists(path):
+        raise CheckpointError(
+            f"leaf {key!r}: manifest records {meta['file']} but the file "
+            f"is missing under {src}")
+    arr = np.load(path)
+    if meta["dtype"] == "bfloat16":
+        arr = arr.view(jnp.bfloat16)
+    return arr
+
+
+def load(ckpt_dir: str, step: int) -> dict[str, np.ndarray]:
+    """Load every leaf of a checkpoint as a flat ``{path: array}`` dict.
+
+    No ``like`` tree needed: the manifest alone drives the read, so callers
+    that persist their own structure description (``serving_encoders``
+    bundles) can restore without pre-building a template pytree.  bfloat16
+    leaves come back viewed as bf16 (the uint16 storage is transparent).
+    """
+    src = os.path.join(ckpt_dir, f"step_{step}")
+    manifest = _read_manifest(src)
+    return {key: _load_leaf(src, key, meta)
+            for key, meta in manifest["leaves"].items()}
 
 
 def restore(ckpt_dir: str, step: int, like: Any) -> Any:
     """Restore into the structure of ``like`` (shapes/dtypes validated)."""
     src = os.path.join(ckpt_dir, f"step_{step}")
-    with open(os.path.join(src, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest = _read_manifest(src)
     flat_like = _flatten(like)
+    missing = sorted(set(flat_like) - set(manifest["leaves"]))
+    if missing:
+        raise CheckpointError(
+            f"checkpoint {src} is missing {len(missing)} leave(s) that the "
+            f"restore template requires: {missing[:5]}"
+            + (" ..." if len(missing) > 5 else ""))
     restored = {}
     for key, ref in flat_like.items():
-        meta = manifest["leaves"][key]
-        arr = np.load(os.path.join(src, meta["file"]))
-        if meta["dtype"] == "bfloat16":
-            arr = arr.view(jnp.bfloat16)
+        arr = _load_leaf(src, key, manifest["leaves"][key])
         want_shape = tuple(ref.shape)
-        assert tuple(arr.shape) == want_shape, (key, arr.shape, want_shape)
+        if tuple(arr.shape) != want_shape:
+            raise CheckpointError(
+                f"leaf {key!r}: stored shape {tuple(arr.shape)} != template "
+                f"shape {want_shape}")
         restored[key] = jnp.asarray(arr)
     # Rebuild in like's structure.
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)

@@ -62,6 +62,39 @@ the streamed path is bit-identical to the in-memory fit (the chunk
 -invariance harness in ``tests/test_oocore.py`` and the memory-capped CI
 lane lock this down; ``BENCH_oocore.json`` tracks wall time / peak RSS).
 
+Fit once, serve many
+--------------------
+A fitted encoder no longer dies with the process: ``save`` persists an
+``EncoderBundle`` (sharded weights with bf16-as-u16 storage, the
+pipeline's fitted μ/σ, selected λ per target, config + dispatch
+provenance; atomic write, eagerly validated ``open``) and ``load``
+rebuilds a predicting encoder bit-identically — no refit::
+
+    enc = BrainEncoder().fit(X_train, Y_train)
+    enc.save("bundles/sub-01_L12")
+    enc2 = BrainEncoder.load("bundles/sub-01_L12")      # predicts ==
+    enc_sh = BrainEncoder.load("bundles/sub-01_L12",    # serving layout:
+                               target_shards=8)         # column-sharded W
+
+Serving traffic against a fleet of bundles goes through
+``repro.serving_encoders``: an ``EncoderRegistry`` lazy-loads bundles
+under a ``device_memory_budget`` (LRU eviction), and an
+``EncoderService`` micro-batches concurrent requests into fixed-shape
+padded waves — one compiled ``standardize → X @ W → de-standardize``
+program per wave shape, reused forever::
+
+    from repro.serving_encoders import (EncoderRegistry, EncoderService,
+                                        PredictRequest)
+    reg = EncoderRegistry(device_memory_budget=512 * 2**20)
+    reg.add("sub-01/L12", "bundles/sub-01_L12")
+    service = EncoderService(reg, wave_rows=128)
+    out = service.serve([PredictRequest("sub-01/L12", X_new,
+                                        targets=Y_new)])   # + Pearson r
+
+``python -m repro.launch.serve --encoders 3`` runs the whole loop
+(materialise → fit → save → serve); ``BENCH_serving.json`` tracks
+latency/throughput vs wave size.
+
 Modules:
   config    — ``EncoderConfig``: one config subsuming ridge/banded/sharding
   dispatch  — complexity-driven solver + mesh-layout resolution

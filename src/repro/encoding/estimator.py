@@ -47,6 +47,51 @@ class EncodingReport:
     def solver_label(self) -> str:
         return _SOLVER_LABELS[self.decision.solver]
 
+    # -- machine-readable provenance ----------------------------------------
+    def to_dict(self) -> dict:
+        """Everything but the weight matrix, JSON-serialisable.
+
+        The weights belong in an encoder *bundle* (they can be GBs); the
+        report dict is the run provenance that rides next to it — solver
+        decision, selected λ, CV curve, swept grid, weight shape/dtype.
+        """
+        return {
+            "decision": dataclasses.asdict(self.decision),
+            "best_lambda": np.asarray(self.best_lambda).tolist(),
+            "cv_scores": np.asarray(self.cv_scores).tolist(),
+            "lambdas": list(self.lambdas),
+            "band_lambdas": (None if self.band_lambdas is None
+                             else np.asarray(self.band_lambdas).tolist()),
+            # None for a provenance-only report rebuilt via from_json.
+            "weights_shape": (None if self.weights is None
+                              else list(np.shape(self.weights))),
+            "weights_dtype": (None if self.weights is None
+                              else str(jnp.asarray(self.weights).dtype)),
+            "solver_label": self.solver_label,
+        }
+
+    def to_json(self) -> str:
+        import json
+        return json.dumps(self.to_dict(), indent=2) + "\n"
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "EncodingReport":
+        """Rebuild the provenance half of a report (``weights`` is ``None``
+        — load the bundle for the matrix itself)."""
+        band = d.get("band_lambdas")
+        return cls(
+            weights=None,
+            best_lambda=np.asarray(d["best_lambda"], np.float64),
+            cv_scores=np.asarray(d["cv_scores"], np.float64),
+            lambdas=tuple(d["lambdas"]),
+            decision=DispatchDecision(**d["decision"]),
+            band_lambdas=None if band is None else np.asarray(band))
+
+    @classmethod
+    def from_json(cls, s: str) -> "EncodingReport":
+        import json
+        return cls.from_dict(json.loads(s))
+
 
 @dataclasses.dataclass
 class EvaluationReport:
@@ -86,6 +131,10 @@ class BrainEncoder:
         self.config = (dataclasses.replace(base, **overrides)
                        if overrides else base)
         self.report_: EncodingReport | None = None
+        # Set by pipeline.standardize/fit (or by load()): the fitted
+        # per-column μ/σ transform, persisted with save() so serving can
+        # replay it on raw features.
+        self.standardizer_ = None
 
     # -- sklearn-ish surface -------------------------------------------------
     def fit(self, X: jax.Array | None = None, Y: jax.Array | None = None,
@@ -227,6 +276,41 @@ class BrainEncoder:
     def weights_(self) -> jax.Array:
         assert self.report_ is not None, "call fit() first"
         return self.report_.weights
+
+    # -- persistence (fit once, serve many) ----------------------------------
+    def save(self, bundle_dir: str, *, overwrite: bool = False,
+             weight_shards: int | None = None,
+             weight_dtype: str | None = None,
+             provenance: dict | None = None) -> str:
+        """Persist the fitted encoder as an ``EncoderBundle`` directory.
+
+        Everything needed to ``predict`` without refitting lands on disk:
+        the weight matrix (column-sharded ``.npy`` leaves, bf16 stored as
+        u16 bit patterns), the selected λ / CV provenance, the
+        ``EncoderConfig``, the dispatch decision, and the fitted
+        ``Standardizer`` when the pipeline attached one.  The write is
+        atomic (tmp dir + rename).  Round-trip contract:
+        ``BrainEncoder.load(d).predict(X)`` is bit-identical to
+        ``self.predict(X)``.
+        """
+        from repro.serving_encoders import bundle as _bundle
+        return _bundle.save_bundle(bundle_dir, self, overwrite=overwrite,
+                                   weight_shards=weight_shards,
+                                   weight_dtype=weight_dtype,
+                                   provenance=provenance)
+
+    @classmethod
+    def load(cls, bundle_dir: str, *,
+             target_shards: int | None = None) -> "BrainEncoder":
+        """Rebuild a fitted encoder from a saved bundle (no refit).
+
+        ``target_shards`` > 1 places the weight matrix column-sharded over
+        a fresh ``(1, target_shards)`` mesh at load time (the serving
+        layout); default is a single replicated device array.
+        """
+        from repro.serving_encoders import bundle as _bundle
+        return _bundle.EncoderBundle.open(bundle_dir).load_encoder(
+            target_shards=target_shards)
 
     def predict(self, X: jax.Array) -> jax.Array:
         return ridge.predict(X, self.weights_)

@@ -22,6 +22,36 @@ from repro.encoding.estimator import (BrainEncoder, EncodingReport,
 
 
 @dataclasses.dataclass
+class Standardizer:
+    """Fitted per-column standardization (μ/σ of the *training* rows).
+
+    The ``standardize`` stage records one of these so the transform it
+    applied during fitting survives the process: ``BrainEncoder.save``
+    persists it inside the encoder bundle, and the serving subsystem
+    (``repro.serving_encoders``) replays the same affine maps —
+    ``apply_x`` on incoming raw features, ``unapply_y`` on predictions —
+    fused into its compiled wave (with identity μ/σ filled in for absent
+    halves, so every bundle shares one program signature).  ``None``
+    halves mean that side was never standardized (identity transform).
+    """
+
+    mu_x: np.ndarray | None = None          # (p,)
+    sd_x: np.ndarray | None = None          # (p,)
+    mu_y: np.ndarray | None = None          # (t,)
+    sd_y: np.ndarray | None = None          # (t,)
+
+    def apply_x(self, X):
+        return X if self.mu_x is None else (X - self.mu_x) / self.sd_x
+
+    def apply_y(self, Y):
+        return Y if self.mu_y is None else (Y - self.mu_y) / self.sd_y
+
+    def unapply_y(self, Y_pred):
+        """Map standardized-space predictions back to raw target units."""
+        return Y_pred if self.mu_y is None else Y_pred * self.sd_y + self.mu_y
+
+
+@dataclasses.dataclass
 class PipelineState:
     """Everything flowing between stages.
 
@@ -35,6 +65,7 @@ class PipelineState:
     X_test: jax.Array | None = None
     Y_test: jax.Array | None = None
     store: "object | None" = None           # RunStore-shaped source
+    standardizer: Standardizer | None = None
     encoder: BrainEncoder | None = None
     report: EncodingReport | None = None
     evaluation: EvaluationReport | None = None
@@ -60,16 +91,22 @@ def standardize(features: bool = True, targets: bool = True) -> Stage:
     statistics leak into the fit or the evaluation.
     """
     def stage(s: PipelineState) -> PipelineState:
+        import numpy as np
+
+        std = Standardizer()
         if features:
             mu, sd = s.X.mean(0), s.X.std(0) + 1e-6
-            s.X = (s.X - mu) / sd
+            std.mu_x, std.sd_x = np.asarray(mu), np.asarray(sd)
+            s.X = std.apply_x(s.X)
             if s.X_test is not None:
-                s.X_test = (s.X_test - mu) / sd
+                s.X_test = std.apply_x(s.X_test)
         if targets:
             mu, sd = s.Y.mean(0), s.Y.std(0) + 1e-6
-            s.Y = (s.Y - mu) / sd
+            std.mu_y, std.sd_y = np.asarray(mu), np.asarray(sd)
+            s.Y = std.apply_y(s.Y)
             if s.Y_test is not None:
-                s.Y_test = (s.Y_test - mu) / sd
+                s.Y_test = std.apply_y(s.Y_test)
+        s.standardizer = std
         return s
     return stage
 
@@ -89,6 +126,7 @@ def fit(config: EncoderConfig | None = None, **overrides) -> Stage:
     """Fit a ``BrainEncoder`` on the (training) X/Y in the state."""
     def stage(s: PipelineState) -> PipelineState:
         s.encoder = BrainEncoder(config, **overrides).fit(s.X, s.Y)
+        s.encoder.standardizer_ = s.standardizer
         s.report = s.encoder.report_
         return s
     return stage
@@ -156,7 +194,10 @@ def fit_chunked(config: EncoderConfig | None = None, *,
             chunks = (((np.asarray(X_c, np.float32) - mu_x) / sd_x,
                        (np.asarray(Y_c, np.float32) - mu_y) / sd_y)
                       for X_c, Y_c in chunks)
+            s.standardizer = Standardizer(mu_x=mu_x, sd_x=sd_x,
+                                          mu_y=mu_y, sd_y=sd_y)
         s.encoder = encoder.fit_chunks(chunks, n_total=n)
+        s.encoder.standardizer_ = s.standardizer
         s.report = s.encoder.report_
         return s
     return stage

@@ -57,6 +57,27 @@ def _run_store_mode(args) -> None:
           f"data_shards={d.data_shards} ({d.rationale})")
     print(f"{enc.report_.solver_label} fit: λ = {enc.report_.best_lambda}, "
           f"CV scores {enc.report_.cv_scores.round(4)}")
+    if args.save_bundle:
+        _save_bundle_with_report(enc, args.save_bundle,
+                                 provenance={"source": "run_store",
+                                             "store": args.store,
+                                             "shape": list(store.shape)})
+
+
+def _save_bundle_with_report(encoder, bundle_dir: str,
+                             provenance: dict | None = None) -> None:
+    """Persist the fitted encoder + machine-readable run provenance.
+
+    The bundle directory gets the ``EncoderBundle`` payload; ``report.json``
+    (``EncodingReport.to_json``) rides next to it so downstream tooling can
+    read solver/λ/CV provenance without touching the arrays.
+    """
+    import os
+
+    path = encoder.save(bundle_dir, overwrite=True, provenance=provenance)
+    with open(os.path.join(path, "report.json"), "w") as f:
+        f.write(encoder.report_.to_json())
+    print(f"bundle saved → {path} (report.json alongside)")
 
 
 def main() -> None:
@@ -77,6 +98,10 @@ def main() -> None:
                     help="row-batch size of the streaming accumulation")
     ap.add_argument("--budget-mb", type=float, default=64.0,
                     help="device-memory budget (MB) for --store dispatch")
+    ap.add_argument("--save-bundle", default=None,
+                    help="persist the fitted encoder as an EncoderBundle "
+                         "directory (+ report.json run provenance) for the "
+                         "serving subsystem")
     args = ap.parse_args()
 
     if args.store is not None:
@@ -134,6 +159,12 @@ def main() -> None:
     print(f"dispatch: solver={d.solver} mesh={d.data_shards}x"
           f"{d.target_shards} ({d.rationale})")
     print(f"{report.solver_label} fit: per-batch λ = {report.best_lambda}")
+
+    if args.save_bundle:
+        _save_bundle_with_report(
+            state.encoder, args.save_bundle,
+            provenance={"source": "pipeline", "backbone": args.backbone,
+                        "n": args.n, "targets": args.targets})
 
     r_np = ev.pearson_r
     m = np.asarray(mask)

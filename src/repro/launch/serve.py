@@ -1,7 +1,19 @@
-"""Serving driver: batched prefill + greedy decode loop.
+"""Serving driver: batched LLM decode, or the brain-encoder serving loop.
 
-``python -m repro.launch.serve --arch <id> --smoke --batch 2 --prompt-len 16
---gen 16``
+LLM mode (prefill + greedy decode)::
+
+    python -m repro.launch.serve --arch <id> --smoke --batch 2 \
+        --prompt-len 16 --gen 16
+
+Encoder mode (materialise → fit → save → serve loop)::
+
+    python -m repro.launch.serve --encoders 3 --bundle-dir /tmp/bundles \
+        --serve-steps 5 --wave-rows 64
+
+fits one ``BrainEncoder`` per synthetic subject, persists each as an
+``EncoderBundle``, then serves wave-batched prediction traffic against the
+bundle fleet through ``EncoderRegistry`` + ``EncoderService`` — the
+"fit once, serve many" workflow end to end.
 """
 from __future__ import annotations
 
@@ -9,14 +21,73 @@ import argparse
 import time
 
 
+def _run_encoder_mode(args) -> None:
+    import numpy as np
+    from repro.serving_encoders import EncoderRegistry, EncoderService
+    from repro.serving_encoders.traffic import (build_synthetic_fleet,
+                                                ragged_requests)
+
+    p = 128
+    fleet = build_synthetic_fleet(args.bundle_dir, args.encoders,
+                                  n=args.n, p=p, t=args.targets)
+
+    registry = EncoderRegistry(
+        device_memory_budget=int(args.budget_mb * 2**20),
+        wave_rows=args.wave_rows)
+    for name, path in fleet:
+        registry.add(name, path)
+    service = EncoderService(registry, wave_rows=args.wave_rows)
+
+    names = [name for name, _ in fleet]
+    rng = np.random.default_rng(0)
+    step_ms = []
+    for step in range(args.serve_steps):
+        reqs = ragged_requests(rng, names, p, args.wave_rows,
+                               args.requests_per_step)
+        t0 = time.perf_counter()
+        service.serve(reqs)
+        step_ms.append((time.perf_counter() - t0) * 1e3)
+    warm = step_ms[1:] or step_ms              # first step pays the compile
+    print(f"served {args.serve_steps} steps × {args.requests_per_step} "
+          f"requests: p50={np.percentile(warm, 50):.1f} ms "
+          f"p99={np.percentile(warm, 99):.1f} ms per step "
+          f"(first/cold {step_ms[0]:.1f} ms)")
+    s = service.stats
+    print(f"waves={s.waves} rows={s.rows} pad_rows={s.pad_rows} "
+          f"compiled_predicts={service.compile_count} (1 per wave shape)")
+    print(f"registry: {registry.stats()}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="LLM mode: model architecture id")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
+    # -- encoder serving mode ------------------------------------------------
+    ap.add_argument("--encoders", type=int, default=None,
+                    help="encoder mode: number of synthetic subjects to "
+                         "materialise → fit → save → serve")
+    ap.add_argument("--bundle-dir", default="encoder_bundles",
+                    help="where EncoderBundles are saved/reused")
+    ap.add_argument("--n", type=int, default=512,
+                    help="encoder mode: time samples per subject")
+    ap.add_argument("--targets", type=int, default=256)
+    ap.add_argument("--wave-rows", type=int, default=64,
+                    help="fixed wave shape (rows) of the compiled predict")
+    ap.add_argument("--serve-steps", type=int, default=5)
+    ap.add_argument("--requests-per-step", type=int, default=8)
+    ap.add_argument("--budget-mb", type=float, default=256.0,
+                    help="registry device-memory budget (LRU eviction)")
     args = ap.parse_args()
+
+    if args.encoders is not None:
+        _run_encoder_mode(args)
+        return
+    if args.arch is None:
+        ap.error("--arch is required in LLM mode (or pass --encoders N)")
 
     import jax
     import jax.numpy as jnp

@@ -35,10 +35,10 @@ class ServeResult:
 class ServeEngine:
     def __init__(self, model, params, cfg: ModelConfig, *, wave_size: int = 4,
                  prompt_len: int = 16,
-                 sampler: SamplerConfig = SamplerConfig(), seed: int = 0):
+                 sampler: SamplerConfig | None = None, seed: int = 0):
         self.model, self.params, self.cfg = model, params, cfg
         self.wave_size, self.prompt_len = wave_size, prompt_len
-        self.sampler = sampler
+        self.sampler = sampler if sampler is not None else SamplerConfig()
         self._key = jax.random.PRNGKey(seed)
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step)

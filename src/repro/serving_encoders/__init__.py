@@ -1,0 +1,34 @@
+"""repro.serving_encoders — fitted-encoder artifacts + prediction serving.
+
+The first subsystem on the *inference* side of the fit/predict divide:
+
+* ``bundle``   — ``EncoderBundle``: atomic on-disk persistence of a fitted
+  ``BrainEncoder`` (sharded W with bf16-as-u16 storage, μ/σ, selected λ,
+  config + dispatch provenance) with eager ``open()`` validation.
+  ``BrainEncoder.save(dir)`` / ``BrainEncoder.load(dir)`` round-trip
+  through it bit-identically.
+* ``registry`` — ``EncoderRegistry``: many bundles, lazy device residency
+  under a ``device_memory_budget`` with LRU eviction.
+* ``service``  — ``EncoderService``: wave-batched compiled prediction
+  (fixed-shape padded waves, one compilation per wave shape, micro-batched
+  concurrent requests, optional Pearson-r scoring).
+
+Fit once, serve many::
+
+    enc = BrainEncoder().fit(X_train, Y_train)
+    enc.save("bundles/sub-01_L12")
+
+    reg = EncoderRegistry(device_memory_budget=512 * 2**20)
+    reg.add("sub-01/L12", "bundles/sub-01_L12")
+    service = EncoderService(reg, wave_rows=128)
+    out = service.serve([PredictRequest("sub-01/L12", X_new)])
+"""
+from repro.serving_encoders.bundle import (  # noqa: F401
+    BundleError, EncoderBundle, save_bundle,
+)
+from repro.serving_encoders.registry import (  # noqa: F401
+    EncoderRegistry, LoadedEncoder, RegistryError, bundle_resident_bytes,
+)
+from repro.serving_encoders.service import (  # noqa: F401
+    EncoderService, PredictRequest, PredictResult, ServiceError,
+)

@@ -1,0 +1,381 @@
+"""EncoderBundle — the on-disk contract for a fitted ``BrainEncoder``.
+
+The paper's end product is one fitted ridge encoder per (subject, band,
+backbone layer): Friends seasons 1–6 train once, season 3 / held-out
+episodes predict forever after.  A bundle persists *everything needed to
+predict without refitting*:
+
+* the weight matrix ``W`` — column-sharded ``.npy`` leaves through
+  ``checkpoint.io`` (bfloat16 stored as uint16 bit patterns, exactly like
+  ``data.store.RunStore`` shards);
+* the fitted per-column μ/σ ``Standardizer`` from the pipeline (when one
+  was attached), so serving can replay the training-time transform on raw
+  features;
+* the selected λ per target batch (plus the per-target expansion), the CV
+  curve, and the swept grid;
+* the full ``EncoderConfig`` and the ``DispatchDecision`` that fitted it —
+  the fold split (``n_folds``) and solver provenance ride in the manifest.
+
+Layout on disk::
+
+    <dir>/bundle.json        # manifest: shapes, dtypes, config, decision,
+                             #   per-leaf shape/dtype table, provenance
+    <dir>/step_0/            # checkpoint.io leaf directory (atomic)
+
+Design points mirror ``RunStore``:
+
+* **Atomic write.**  The whole bundle is staged in a tmp dir and renamed
+  into place; a crashed save never leaves a half-valid bundle visible.
+* **Eager validation.**  ``open()`` cross-checks every leaf's ``.npy``
+  header shape/dtype against the bundle manifest before any prediction —
+  a missing shard, a shape/dtype mismatch, or a manifest/checkpoint
+  disagreement raises ``BundleError`` (a ``ValueError``), mirroring
+  ``StoreError`` semantics.
+* **Round-trip parity.**  ``load_encoder().predict(X)`` is bit-identical
+  to the fitted encoder's ``predict(X)`` (f32 and bf16, sharded and
+  unsharded) — locked down by ``tests/helpers/encoder_checks.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+
+import numpy as np
+
+from repro.checkpoint import io as ckpt_io
+from repro.data.store import (  # shared npy-header / dtype helpers
+    _dtype_from_name, _read_npy_header, _storage_dtype,
+)
+from repro.encoding.config import EncoderConfig
+from repro.encoding.dispatch import DispatchDecision
+
+BUNDLE_MANIFEST = "bundle.json"
+_BUNDLE_VERSION = 1
+_TUPLE_FIELDS = ("lambdas", "bands", "band_log_lambda_range")
+
+
+class BundleError(ValueError):
+    """Bundle inconsistency: missing/corrupt manifest, missing or
+    mismatched leaf, unsupported version, or an unfit encoder."""
+
+
+def config_to_dict(cfg: EncoderConfig) -> dict:
+    return dataclasses.asdict(cfg)
+
+
+def config_from_dict(d: dict) -> EncoderConfig:
+    kw = dict(d)
+    for f in _TUPLE_FIELDS:
+        if kw.get(f) is not None:
+            kw[f] = tuple(kw[f])
+    known = {f.name for f in dataclasses.fields(EncoderConfig)}
+    unknown = set(kw) - known
+    if unknown:
+        raise BundleError(f"bundle config has unknown EncoderConfig "
+                          f"field(s) {sorted(unknown)}")
+    return EncoderConfig(**kw)
+
+
+def _shard_key(i: int) -> str:
+    return f"{i:03d}"
+
+
+def _weight_shard_bounds(t: int, n_shards: int) -> list[tuple[int, int]]:
+    """Contiguous column blocks, as even as possible."""
+    return [(t * i // n_shards, t * (i + 1) // n_shards)
+            for i in range(n_shards)]
+
+
+def _lambda_by_target(best_lambda: np.ndarray, t: int) -> np.ndarray | None:
+    """Expand the per-batch λ to a (t,) per-target vector.
+
+    Batches are contiguous equal column blocks of the (padded) target axis
+    (Alg. 1 line 13 — one λ per target batch); MOR/banded reports carry an
+    empty ``best_lambda`` and get no expansion.
+    """
+    b = np.asarray(best_lambda).ravel()
+    if b.size == 0:
+        return None
+    per = -(-t // b.size)                      # ceil — padding-aware
+    return np.repeat(b, per)[:t].astype(np.float64)
+
+
+def save_bundle(bundle_dir: str, encoder, *, overwrite: bool = False,
+                weight_shards: int | None = None,
+                weight_dtype: str | np.dtype | None = None,
+                provenance: dict | None = None) -> str:
+    """Write a fitted ``BrainEncoder`` as an atomic bundle directory.
+
+    ``weight_dtype`` casts ``W`` before writing (e.g. ``"bfloat16"`` to
+    halve a whole-brain bundle).  Predict parity is then defined against
+    the *cast* weights — a lossy storage choice the caller opts into.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    report = encoder.report_
+    if report is None:
+        raise BundleError("encoder is not fitted (report_ is None) — "
+                          "call fit() before save()")
+    # Refuse BEFORE staging: serializing a whole-brain W costs GBs of I/O
+    # that a pre-existing bundle would throw away (re-checked before the
+    # final swap in case the directory appears mid-save).
+    if os.path.exists(bundle_dir) and not overwrite:
+        raise BundleError(f"bundle already exists at {bundle_dir}; "
+                          f"pass overwrite=True to replace it")
+    W = np.asarray(jax.device_get(report.weights))
+    if weight_dtype is not None:
+        W = np.asarray(jnp.asarray(W).astype(
+            jnp.bfloat16 if str(weight_dtype) == "bfloat16"
+            else np.dtype(weight_dtype)))
+    p, t = W.shape
+    n_shards = max(1, min(weight_shards or
+                          max(1, report.decision.target_shards), t))
+    bounds = _weight_shard_bounds(t, n_shards)
+
+    tree: dict = {"W": {_shard_key(i): W[:, lo:hi]
+                        for i, (lo, hi) in enumerate(bounds)}}
+    tree["best_lambda"] = np.asarray(report.best_lambda, np.float64)
+    tree["cv_scores"] = np.asarray(report.cv_scores, np.float64)
+    lam_t = _lambda_by_target(report.best_lambda, t)
+    if lam_t is not None:
+        tree["lambda_by_target"] = lam_t
+    if report.band_lambdas is not None:
+        tree["band_lambdas"] = np.asarray(report.band_lambdas, np.float64)
+    std = getattr(encoder, "standardizer_", None)
+    std_flags = {"x": False, "y": False}
+    if std is not None:
+        if std.mu_x is not None:
+            std_flags["x"] = True
+            tree["mu_x"] = np.asarray(std.mu_x, np.float32)
+            tree["sd_x"] = np.asarray(std.sd_x, np.float32)
+        if std.mu_y is not None:
+            std_flags["y"] = True
+            tree["mu_y"] = np.asarray(std.mu_y, np.float32)
+            tree["sd_y"] = np.asarray(std.sd_y, np.float32)
+
+    # Key derivation MUST match checkpoint.io's flattening — reuse it so
+    # the manifest's arrays table and the saved leaves can never drift.
+    flat = ckpt_io._flatten(tree)
+
+    parent = os.path.dirname(os.path.abspath(bundle_dir)) or "."
+    os.makedirs(parent, exist_ok=True)
+    tmp = tempfile.mkdtemp(dir=parent, prefix=".tmpbundle_")
+    try:
+        ckpt_io.save(tmp, 0, tree)
+        manifest = {
+            "version": _BUNDLE_VERSION,
+            "kind": "encoder_bundle",
+            "p": int(p),
+            "t": int(t),
+            "weight_dtype": ("bfloat16" if W.dtype.name == "bfloat16"
+                             else W.dtype.name),
+            "weight_shards": n_shards,
+            "weight_shard_bounds": [[int(lo), int(hi)] for lo, hi in bounds],
+            "standardizer": std_flags,
+            "config": config_to_dict(encoder.config),
+            # The dispatch decision lives ONCE, inside the report dict —
+            # a second top-level copy would be a drift hazard.
+            "report": report.to_dict(),
+            "arrays": {key: {"shape": list(arr.shape),
+                             "dtype": ("bfloat16"
+                                       if arr.dtype.name == "bfloat16"
+                                       else arr.dtype.name)}
+                       for key, arr in flat.items()},
+            "provenance": provenance or {},
+        }
+        with open(os.path.join(tmp, BUNDLE_MANIFEST), "w") as f:
+            json.dump(manifest, f, indent=2)
+            f.write("\n")
+        if os.path.exists(bundle_dir) and not overwrite:
+            raise BundleError(f"bundle already exists at {bundle_dir}; "
+                              f"pass overwrite=True to replace it")
+        # Crash-safe swap shared with checkpoint.io: the old bundle is
+        # renamed aside and restored on failure, so a crashed save never
+        # leaves fewer than one complete bundle on disk.
+        ckpt_io.atomic_replace_dir(tmp, bundle_dir)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return bundle_dir
+
+
+class EncoderBundle:
+    """A validated, *unloaded* bundle: manifest in memory, arrays on disk.
+
+    ``open()`` is cheap (headers only) so a registry can hold many bundles
+    and materialise device arrays lazily through ``load_encoder``.
+    """
+
+    def __init__(self, root: str, manifest: dict):
+        self.root = root
+        self.manifest = manifest
+
+    # -- cheap metadata ------------------------------------------------------
+    @property
+    def shape(self) -> tuple[int, int]:
+        """(p, t) of the weight matrix."""
+        return self.manifest["p"], self.manifest["t"]
+
+    @property
+    def weight_dtype(self) -> np.dtype:
+        return _dtype_from_name(self.manifest["weight_dtype"])
+
+    @property
+    def has_standardizer(self) -> bool:
+        f = self.manifest["standardizer"]
+        return bool(f.get("x") or f.get("y"))
+
+    def config(self) -> EncoderConfig:
+        return config_from_dict(self.manifest["config"])
+
+    def decision(self) -> DispatchDecision:
+        return DispatchDecision(**self.manifest["report"]["decision"])
+
+    def weight_nbytes(self) -> int:
+        p, t = self.shape
+        return p * t * self.weight_dtype.itemsize
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def open(cls, root: str) -> "EncoderBundle":
+        """Open and eagerly validate (headers only, no array data)."""
+        path = os.path.join(root, BUNDLE_MANIFEST)
+        if not os.path.exists(path):
+            raise BundleError(f"no {BUNDLE_MANIFEST} under {root}")
+        try:
+            with open(path) as f:
+                m = json.load(f)
+        except json.JSONDecodeError as e:
+            raise BundleError(f"corrupt {BUNDLE_MANIFEST} under {root}: {e}")
+        if m.get("kind") != "encoder_bundle":
+            raise BundleError(f"{root} is not an encoder bundle "
+                              f"(kind={m.get('kind')!r})")
+        if m.get("version") != _BUNDLE_VERSION:
+            raise BundleError(f"unsupported bundle version {m.get('version')}")
+        bundle = cls(root, m)
+        bundle._validate()
+        return bundle
+
+    def _validate(self) -> None:
+        m = self.manifest
+        try:
+            ckpt_manifest = ckpt_io._read_manifest(
+                os.path.join(self.root, "step_0"))
+        except ckpt_io.CheckpointError as e:
+            raise BundleError(f"bundle {self.root}: {e}")
+        leaves = ckpt_manifest["leaves"]
+        bounds = m["weight_shard_bounds"]
+        if len(bounds) != m["weight_shards"]:
+            raise BundleError(f"bundle {self.root}: weight_shard_bounds has "
+                              f"{len(bounds)} entries != weight_shards="
+                              f"{m['weight_shards']}")
+        pos = 0
+        for lo, hi in bounds:
+            if lo != pos or hi < lo:
+                raise BundleError(f"bundle {self.root}: weight shard bounds "
+                                  f"{bounds} overlap or gap the target axis")
+            pos = hi
+        if pos != m["t"]:
+            raise BundleError(f"bundle {self.root}: weight shards cover "
+                              f"{pos} target columns, manifest says {m['t']}")
+        for i in range(m["weight_shards"]):
+            key = f"W/{_shard_key(i)}"
+            if key not in m["arrays"]:
+                raise BundleError(f"bundle {self.root}: weight shard {key} "
+                                  f"missing from the arrays table")
+        for key, meta in m["arrays"].items():
+            if key not in leaves:
+                raise BundleError(
+                    f"bundle {self.root}: leaf {key!r} in {BUNDLE_MANIFEST} "
+                    f"but absent from the checkpoint manifest")
+            npy = os.path.join(self.root, "step_0", leaves[key]["file"])
+            if not os.path.exists(npy):
+                raise BundleError(f"bundle {self.root}: leaf {key!r} shard "
+                                  f"{os.path.basename(npy)} is missing")
+            shape, dtype = _read_npy_header(npy)
+            want_shape = tuple(meta["shape"])
+            want_store = _storage_dtype(_dtype_from_name(meta["dtype"]))
+            if shape != want_shape:
+                raise BundleError(
+                    f"bundle {self.root}: leaf {key!r} shape {shape} != "
+                    f"manifest {want_shape}")
+            if dtype != want_store:
+                raise BundleError(
+                    f"bundle {self.root}: leaf {key!r} dtype {dtype} != "
+                    f"manifest storage dtype {want_store}")
+
+    # -- materialisation -----------------------------------------------------
+    def load_arrays(self) -> dict[str, np.ndarray]:
+        return ckpt_io.load(self.root, 0)
+
+    def load_standardizer(self, arrays: dict[str, np.ndarray]):
+        from repro.encoding.pipeline import Standardizer
+
+        if not self.has_standardizer:
+            return None
+        flags = self.manifest["standardizer"]
+        std = Standardizer()
+        if flags.get("x"):
+            std.mu_x, std.sd_x = arrays["mu_x"], arrays["sd_x"]
+        if flags.get("y"):
+            std.mu_y, std.sd_y = arrays["mu_y"], arrays["sd_y"]
+        return std
+
+    def load_encoder(self, *, target_shards: int | None = None):
+        """Materialise a fitted ``BrainEncoder`` (no refit).
+
+        ``target_shards`` > 1 places ``W`` column-sharded over a fresh
+        ``(1, target_shards)`` mesh — the serving layout.  ``t`` must
+        divide evenly and enough local devices must exist.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        from repro.encoding.estimator import BrainEncoder, EncodingReport
+
+        m = self.manifest
+        arrays = self.load_arrays()
+        blocks = [arrays[f"W/{_shard_key(i)}"]
+                  for i in range(m["weight_shards"])]
+        W = blocks[0] if len(blocks) == 1 else np.concatenate(blocks, axis=1)
+        Wj = jnp.asarray(W)
+        cfg = self.config()
+        if target_shards is not None and target_shards > 1:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            from repro.encoding.sharding import ShardingPlan
+
+            p, t = self.shape
+            if t % target_shards:
+                raise BundleError(
+                    f"t={t} targets do not divide over target_shards="
+                    f"{target_shards} for sharded load")
+            if target_shards > jax.device_count():
+                raise BundleError(
+                    f"sharded load wants {target_shards} devices, have "
+                    f"{jax.device_count()}")
+            plan = ShardingPlan(data_shards=1, target_shards=target_shards,
+                                data_axis=cfg.data_axis,
+                                target_axis=cfg.target_axis)
+            mesh = plan.build_mesh()
+            Wj = jax.device_put(
+                Wj, NamedSharding(mesh, P(None, plan.target_axis)))
+        enc = BrainEncoder(cfg)
+        band = arrays.get("band_lambdas")
+        enc.report_ = EncodingReport(
+            weights=Wj,
+            best_lambda=np.asarray(arrays["best_lambda"]),
+            cv_scores=np.asarray(arrays["cv_scores"]),
+            lambdas=tuple(m["report"]["lambdas"]),
+            decision=self.decision(),
+            band_lambdas=None if band is None else np.asarray(band))
+        enc.standardizer_ = self.load_standardizer(arrays)
+        return enc
+
+
+__all__ = ["BundleError", "EncoderBundle", "save_bundle", "BUNDLE_MANIFEST",
+           "config_to_dict", "config_from_dict"]

@@ -1,0 +1,257 @@
+"""EncoderRegistry — many bundles, bounded device memory, LRU residency.
+
+The production picture is a fleet of persisted per-(subject, band,
+backbone-layer) encoders far larger than any one accelerator's memory.
+The registry holds every bundle's *manifest* (cheap: ``EncoderBundle.open``
+reads headers only) and materialises device arrays lazily on ``get``,
+evicting least-recently-used entries whenever the resident-bytes account
+would exceed ``device_memory_budget``.
+
+Accounting reuses ``encoding.dispatch.estimated_resident_bytes`` for the
+activation term: serving a wave of ``wave_rows`` rows holds
+``wave_rows·(p + t_shard)`` floats resident next to the ``p·t`` weight
+matrix, which is exactly the dispatch estimator evaluated at
+``n = wave_rows``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+
+from repro.encoding.dispatch import estimated_resident_bytes
+from repro.serving_encoders.bundle import EncoderBundle
+
+
+class RegistryError(ValueError):
+    """Unknown model name, duplicate registration, or a bundle whose
+    resident estimate alone exceeds the registry's memory budget."""
+
+
+def bundle_resident_bytes(bundle: EncoderBundle, wave_rows: int,
+                          target_shards: int | None = None) -> int:
+    """Device bytes one loaded bundle pins while serving ``wave_rows`` waves:
+    the weight matrix + μ/σ vectors + the per-wave activation working set
+    (``dispatch.estimated_resident_bytes`` at ``n = wave_rows``).
+
+    The μ/σ term is charged unconditionally: ``_serving_arrays`` fills in
+    identity vectors for standardizer-less bundles (one compiled signature
+    for all), so the four ``(p,)``/``(t,)`` arrays are always resident.
+    """
+    p, t = bundle.shape
+    std = 2 * (p + t) * 4
+    act = estimated_resident_bytes(wave_rows, p, t,
+                                   target_shards=target_shards or 1)
+    return bundle.weight_nbytes() + std + act
+
+
+@dataclasses.dataclass
+class LoadedEncoder:
+    """A resident registry entry: the encoder plus serving-ready device
+    arrays (identity μ/σ when the bundle has no standardizer, so the
+    compiled predict has ONE signature across standardized and raw
+    bundles)."""
+
+    name: str
+    bundle: EncoderBundle
+    encoder: "object"
+    resident_bytes: int
+    charged_wave_rows: int  # wave size the resident_bytes account assumed
+    mu_x: "object"          # (p,) device array
+    sd_x: "object"
+    mu_y: "object"          # (t,) device array
+    sd_y: "object"
+    load_seconds: float
+
+    @property
+    def weights(self):
+        return self.encoder.weights_
+
+
+def _serving_arrays(encoder, p: int, t: int):
+    import jax.numpy as jnp
+
+    std = encoder.standardizer_
+    mu_x = jnp.zeros((p,), jnp.float32)
+    sd_x = jnp.ones((p,), jnp.float32)
+    mu_y = jnp.zeros((t,), jnp.float32)
+    sd_y = jnp.ones((t,), jnp.float32)
+    if std is not None:
+        if std.mu_x is not None:
+            mu_x = jnp.asarray(std.mu_x, jnp.float32)
+            sd_x = jnp.asarray(std.sd_x, jnp.float32)
+        if std.mu_y is not None:
+            mu_y = jnp.asarray(std.mu_y, jnp.float32)
+            sd_y = jnp.asarray(std.sd_y, jnp.float32)
+    return mu_x, sd_x, mu_y, sd_y
+
+
+class EncoderRegistry:
+    """Lazy-loading, budget-bounded collection of encoder bundles.
+
+    >>> reg = EncoderRegistry(device_memory_budget=256 * 2**20)
+    >>> reg.add("sub-01/L12", "/bundles/sub-01_L12")
+    >>> entry = reg.get("sub-01/L12")     # loads; LRU-evicts if over budget
+    >>> entry.encoder.predict(X)
+
+    ``get`` on a resident entry is a hit (moves it to most-recently-used);
+    a miss loads the bundle, first evicting LRU entries until the new
+    resident total fits the budget.  A single bundle that cannot fit at
+    all raises ``RegistryError`` instead of thrashing.
+    """
+
+    def __init__(self, *, device_memory_budget: int | None = None,
+                 wave_rows: int = 128, target_shards: int | None = None):
+        self.device_memory_budget = device_memory_budget
+        self.wave_rows = wave_rows
+        self.target_shards = target_shards
+        self._bundles: dict[str, EncoderBundle] = {}
+        self._loaded: "OrderedDict[str, LoadedEncoder]" = OrderedDict()
+        self.hits = 0
+        self.loads = 0
+        self.evictions = 0
+
+    # -- registration --------------------------------------------------------
+    def add(self, name: str, path: str) -> EncoderBundle:
+        """Register a bundle directory (opened + validated eagerly, arrays
+        stay on disk)."""
+        if name in self._bundles:
+            raise RegistryError(f"model {name!r} already registered")
+        bundle = EncoderBundle.open(path)
+        self._bundles[name] = bundle
+        return bundle
+
+    def bundle(self, name: str) -> EncoderBundle:
+        """Manifest-only access (shapes/dtypes/config) — no array load, no
+        LRU touch.  Lets callers validate requests against a model without
+        forcing it resident."""
+        if name not in self._bundles:
+            raise RegistryError(f"unknown model {name!r}; registered: "
+                                f"{sorted(self._bundles)}")
+        return self._bundles[name]
+
+    def ensure_servable(self, name: str, wave_rows: int | None = None
+                        ) -> None:
+        """Raise ``RegistryError`` NOW if ``name`` could never be served at
+        this wave size (its lone resident estimate exceeds the budget).
+        Manifest-only — lets a server refuse a doomed batch before doing
+        any device work for the other models in it."""
+        need = bundle_resident_bytes(self.bundle(name),
+                                     max(self.wave_rows, wave_rows or 0),
+                                     self.target_shards)
+        budget = self.device_memory_budget
+        if budget is not None and need > budget:
+            raise RegistryError(
+                f"bundle {name!r} needs {need / 2**20:.1f} MB resident at "
+                f"wave size {max(self.wave_rows, wave_rows or 0)}, over "
+                f"the registry budget {budget / 2**20:.1f} MB")
+
+    def __len__(self) -> int:
+        return len(self._bundles)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._bundles
+
+    @property
+    def names(self) -> list[str]:
+        return list(self._bundles)
+
+    @property
+    def loaded_names(self) -> list[str]:
+        """LRU → MRU order."""
+        return list(self._loaded)
+
+    @property
+    def resident_bytes(self) -> int:
+        return sum(e.resident_bytes for e in self._loaded.values())
+
+    # -- residency -----------------------------------------------------------
+    def get(self, name: str, *, wave_rows: int | None = None
+            ) -> LoadedEncoder:
+        """Resident entry for ``name`` (loading + LRU-evicting as needed).
+
+        ``wave_rows`` is the wave size the CALLER is about to serve with —
+        ``EncoderService`` passes its effective per-call value so the
+        activation term in the residency account reflects the waves
+        actually flown, not just the registry's construction-time default
+        (the larger of the two is charged).
+        """
+        if name not in self._bundles:
+            raise RegistryError(f"unknown model {name!r}; registered: "
+                                f"{sorted(self._bundles)}")
+        eff_wave = max(self.wave_rows, wave_rows or 0)
+        budget = self.device_memory_budget
+        if name in self._loaded:
+            self.hits += 1
+            entry = self._loaded[name]
+            self._loaded.move_to_end(name)
+            if eff_wave > entry.charged_wave_rows:
+                # Bigger waves against a resident entry pin a bigger
+                # activation set — re-charge the account and make room.
+                # An unservable wave size refuses up front WITHOUT
+                # flushing the other residents.
+                new_need = bundle_resident_bytes(entry.bundle, eff_wave,
+                                                 self.target_shards)
+                if budget is not None and new_need > budget:
+                    raise RegistryError(
+                        f"bundle {name!r} needs {new_need / 2**20:.1f} MB "
+                        f"resident at wave size {eff_wave}, over the "
+                        f"registry budget {budget / 2**20:.1f} MB")
+                entry.resident_bytes = new_need
+                entry.charged_wave_rows = eff_wave
+                self._evict_until_fits(extra_need=0, keep=name)
+            return entry
+        bundle = self._bundles[name]
+        need = bundle_resident_bytes(bundle, eff_wave, self.target_shards)
+        if budget is not None and need > budget:
+            raise RegistryError(
+                f"bundle {name!r} needs {need / 2**20:.1f} MB resident, "
+                f"over the registry budget {budget / 2**20:.1f} MB — raise "
+                f"the budget or shard the targets")
+        # Evict BEFORE loading so the peak never exceeds budget.
+        self._evict_until_fits(extra_need=need)
+        t0 = time.perf_counter()
+        encoder = bundle.load_encoder(target_shards=self.target_shards)
+        p, t = bundle.shape
+        mu_x, sd_x, mu_y, sd_y = _serving_arrays(encoder, p, t)
+        entry = LoadedEncoder(
+            name=name, bundle=bundle, encoder=encoder, resident_bytes=need,
+            charged_wave_rows=eff_wave,
+            mu_x=mu_x, sd_x=sd_x, mu_y=mu_y, sd_y=sd_y,
+            load_seconds=time.perf_counter() - t0)
+        self._loaded[name] = entry
+        self.loads += 1
+        return entry
+
+    def _evict_until_fits(self, extra_need: int, keep: str | None = None
+                          ) -> None:
+        """Evict LRU-first (sparing ``keep``) until ``extra_need`` more
+        bytes fit the budget.  Callers pre-check that the kept/incoming
+        entry alone fits, so the loop always terminates within budget."""
+        budget = self.device_memory_budget
+        while budget is not None \
+                and self.resident_bytes + extra_need > budget:
+            victim = next((n for n in self._loaded if n != keep), None)
+            if victim is None:
+                return
+            del self._loaded[victim]
+            self.evictions += 1
+
+    def evict(self, name: str) -> bool:
+        """Drop a resident entry (device arrays become collectable)."""
+        if name in self._loaded:
+            del self._loaded[name]
+            self.evictions += 1
+            return True
+        return False
+
+    def stats(self) -> dict:
+        return {"registered": len(self._bundles),
+                "loaded": len(self._loaded),
+                "resident_bytes": self.resident_bytes,
+                "hits": self.hits, "loads": self.loads,
+                "evictions": self.evictions}
+
+
+__all__ = ["EncoderRegistry", "RegistryError", "LoadedEncoder",
+           "bundle_resident_bytes"]

@@ -1,0 +1,189 @@
+"""EncoderService — wave-batched prediction serving over a registry.
+
+The LLM side of this repo serves decode traffic in fixed-shape *waves*
+(``serving.engine.ServeEngine``: pad/stack → one compiled program reused
+across waves).  This module is the same deployment pattern adapted to
+encoding: concurrent ``PredictRequest``\\ s are micro-batched per model,
+their rows concatenated and cut into fixed ``wave_rows``-row waves (the
+ragged tail zero-padded), and each wave runs ONE compiled program —
+standardize → ``X @ W`` → de-standardize — whose compilation is keyed by
+the wave shape (plus the weight shape/dtype/sharding).  Fixed shapes mean
+one compilation per distinct wave shape, reused forever after: the
+``compile_count`` attribute counts actual traces and the serving CI lane
+asserts it equals the number of distinct shapes served.
+
+Scoring rides along: a request that carries ``targets`` gets its per-target
+Pearson r (the paper's §4.1 metric) computed on the unpadded rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.serving_encoders.registry import EncoderRegistry
+
+
+class ServiceError(ValueError):
+    """Malformed request: unknown model handled by the registry; this is
+    for empty/shape-mismatched feature blocks."""
+
+
+@dataclasses.dataclass
+class PredictRequest:
+    """One client request: raw (un-standardized) stimulus features for one
+    model, optionally with measured targets to score against."""
+
+    model: str
+    features: np.ndarray                 # (rows, p) raw features
+    targets: np.ndarray | None = None    # (rows, t) → score with Pearson r
+
+
+@dataclasses.dataclass
+class PredictResult:
+    model: str
+    predictions: np.ndarray | None       # (rows, t) raw-unit predictions
+    pearson_r: np.ndarray | None = None  # (t,) when targets were given
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    waves: int = 0
+    rows: int = 0                        # real (unpadded) rows served
+    pad_rows: int = 0                    # zero rows added to fill waves
+    requests: int = 0
+
+
+class EncoderService:
+    """Micro-batching wave server over an ``EncoderRegistry``.
+
+    >>> service = EncoderService(registry, wave_rows=128)
+    >>> results = service.serve([PredictRequest("sub-01", X1),
+    ...                          PredictRequest("sub-02", X2, targets=Y2)])
+
+    Requests for the same model are packed together (their rows
+    concatenated before waving), so many small concurrent requests cost
+    the same compiled program as one large one.  ``serve(...,
+    wave_rows=...)`` overrides the wave shape per call — each distinct
+    shape compiles exactly once per service lifetime.
+    """
+
+    def __init__(self, registry: EncoderRegistry, *, wave_rows: int = 128,
+                 return_predictions: bool = True):
+        import jax
+        import jax.numpy as jnp
+
+        self.registry = registry
+        self.wave_rows = wave_rows
+        self.return_predictions = return_predictions
+        self.compile_count = 0
+        self.stats = ServiceStats()
+
+        def _predict(X, W, mu_x, sd_x, mu_y, sd_y):
+            # Python side effect at TRACE time: runs once per distinct
+            # (wave shape, weight shape/dtype/sharding) signature — the
+            # compile counter the serving bench/CI lane asserts on.
+            self.compile_count += 1
+            Xs = (X - mu_x) / sd_x
+            P = jnp.matmul(Xs, W, preferred_element_type=jnp.float32)
+            return P * sd_y + mu_y
+
+        self._predict = jax.jit(_predict)
+
+    # -- serving -------------------------------------------------------------
+    def serve(self, requests: Sequence[PredictRequest], *,
+              wave_rows: int | None = None) -> list[PredictResult]:
+        import jax.numpy as jnp
+
+        from repro.core import scoring
+
+        if wave_rows is None:
+            wave_rows = self.wave_rows
+        if wave_rows < 1:
+            raise ServiceError(f"wave_rows must be >= 1, got {wave_rows}")
+        # Micro-batch: group request indices per model, preserving arrival
+        # order within each model's queue.
+        groups: dict[str, list[int]] = {}
+        for i, req in enumerate(requests):
+            groups.setdefault(req.model, []).append(i)
+
+        # Pass 1 — validate EVERY request (features and targets) against
+        # its bundle's MANIFEST before any device work, so one malformed
+        # request cannot discard another model's completed predictions.
+        # Manifest-only access keeps nothing resident: a batch spanning
+        # more models than the registry budget fits must not pin them all
+        # at once, so loading waits for pass 2 (one model at a time).
+        prepared: dict[str, list] = {}
+        for model, idxs in groups.items():
+            p, t = self.registry.bundle(model).shape
+            # A model whose bundle could never fit the budget at this wave
+            # size dooms the batch — refuse before ANY model's compute.
+            self.registry.ensure_servable(model, wave_rows=wave_rows)
+            blocks = []
+            for i in idxs:
+                feats = np.asarray(requests[i].features, np.float32)
+                if feats.ndim != 2 or feats.shape[1] != p or not feats.size:
+                    raise ServiceError(
+                        f"request for {model!r}: features {feats.shape} "
+                        f"incompatible with the bundle's p={p}")
+                if requests[i].targets is not None and \
+                        np.shape(requests[i].targets) != (feats.shape[0], t):
+                    raise ServiceError(
+                        f"request for {model!r}: targets "
+                        f"{np.shape(requests[i].targets)} != expected "
+                        f"({feats.shape[0]}, {t})")
+                blocks.append(feats)
+            prepared[model] = blocks
+
+        # Pass 2 — load (LRU touch, residency charged at the wave size
+        # actually flown), wave, and serve each model's packed rows.
+        results: list[PredictResult | None] = [None] * len(requests)
+        for model, idxs in groups.items():
+            blocks = prepared[model]
+            entry = self.registry.get(model, wave_rows=wave_rows)
+            p, t = entry.bundle.shape
+            rows = np.concatenate(blocks) if len(blocks) > 1 else blocks[0]
+            n_real = rows.shape[0]
+
+            # Enqueue every wave before pulling any result to host: JAX's
+            # async dispatch overlaps the compiled predicts with the
+            # host-side padding of subsequent chunks.
+            parts, counts = [], []
+            for lo in range(0, n_real, wave_rows):
+                chunk = rows[lo:lo + wave_rows]
+                pad = wave_rows - chunk.shape[0]
+                if pad:                                # fixed-shape wave
+                    chunk = np.concatenate(
+                        [chunk, np.zeros((pad, p), np.float32)])
+                    self.stats.pad_rows += pad
+                parts.append(self._predict(jnp.asarray(chunk),
+                                           entry.weights,
+                                           entry.mu_x, entry.sd_x,
+                                           entry.mu_y, entry.sd_y))
+                counts.append(wave_rows - pad)
+                self.stats.waves += 1
+            host = [np.asarray(o)[:c] for o, c in zip(parts, counts)]
+            preds = np.concatenate(host) if len(host) > 1 else host[0]
+            self.stats.rows += n_real
+            self.stats.requests += len(idxs)
+
+            pos = 0
+            for i, block in zip(idxs, blocks):
+                req = requests[i]
+                pred_i = preds[pos:pos + block.shape[0]]
+                pos += block.shape[0]
+                r = None
+                if req.targets is not None:
+                    Yt = np.asarray(req.targets, np.float32)
+                    r = np.asarray(scoring.pearson_r(jnp.asarray(Yt),
+                                                     jnp.asarray(pred_i)))
+                results[i] = PredictResult(
+                    model=model,
+                    predictions=pred_i if self.return_predictions else None,
+                    pearson_r=r)
+        return results                                 # arrival order
+
+
+__all__ = ["EncoderService", "PredictRequest", "PredictResult",
+           "ServiceError", "ServiceStats"]

@@ -1,0 +1,68 @@
+"""Synthetic fleet building + request traffic, shared by the serve CLI
+(``launch/serve.py --encoders``) and ``benchmarks/serving_bench.py`` so the
+materialise → fit → save loop and the request-size distribution cannot
+drift between the two drivers."""
+from __future__ import annotations
+
+import os
+
+
+def build_synthetic_fleet(workdir: str, n_models: int, *, n: int, p: int,
+                          t: int, provenance: dict | None = None
+                          ) -> list[tuple[str, str]]:
+    """Fit + save one pipeline-standardized bundle per synthetic subject.
+
+    Existing bundles under ``workdir`` are reused (refits are the expensive
+    half of "fit once, serve many").  Returns ``[(name, path), ...]``.
+    """
+    import jax
+    from repro.data import fmri
+    from repro.encoding import EncoderConfig, pipeline
+    from repro.serving_encoders.bundle import BUNDLE_MANIFEST, EncoderBundle
+
+    fleet = []
+    for i in range(n_models):
+        name = f"sub-{i + 1:02d}"
+        path = os.path.join(workdir, name)
+        if os.path.exists(os.path.join(path, BUNDLE_MANIFEST)):
+            found = EncoderBundle.open(path).shape
+            if found != (p, t):
+                raise ValueError(
+                    f"existing bundle {path} has shape (p, t)={found}, "
+                    f"but (p={p}, t={t}) was requested — point at a fresh "
+                    f"directory or delete the stale fleet")
+            print(f"reusing bundle {path}")
+        else:
+            X, Y, _ = fmri.generate(jax.random.PRNGKey(i),
+                                    fmri.SubjectSpec(n=n, p=p, t=t))
+            state = pipeline.run_stages(X, Y, [
+                pipeline.split(seed=i), pipeline.standardize(),
+                pipeline.fit(EncoderConfig(solver="ridge"))])
+            state.encoder.save(
+                path, overwrite=True,
+                provenance={"subject": name, "n": n, "synthetic": True,
+                            **(provenance or {})})
+            lam = state.report.best_lambda
+            print(f"fitted {name} (λ={lam}) → saved bundle {path}")
+        fleet.append((name, path))
+    return fleet
+
+
+def ragged_requests(rng, models: list[str], p: int, wave_rows: int,
+                    count: int) -> list:
+    """``count`` concurrent requests with ragged row sizes in
+    ``[8, max(9, 2·wave_rows))`` spread randomly over ``models`` — the
+    mixed traffic both drivers serve."""
+    import numpy as np
+
+    from repro.serving_encoders.service import PredictRequest
+
+    lo, hi = 8, max(9, 2 * wave_rows)          # guard hi > lo
+    return [PredictRequest(
+                model=models[int(rng.integers(len(models)))],
+                features=rng.standard_normal(
+                    (int(rng.integers(lo, hi)), p)).astype(np.float32))
+            for _ in range(count)]
+
+
+__all__ = ["build_synthetic_fleet", "ragged_requests"]

@@ -129,6 +129,54 @@ def check_store_streamed_parity():
     print("store_streamed_parity OK")
 
 
+def check_bundle_predict_parity():
+    """ISSUE acceptance criterion: ``load(save(fit(...))).predict(X)`` is
+    bit-identical to the in-memory encoder — f32 and bf16 weight storage,
+    single-device (replicated) and 8-device column-sharded loads."""
+    import tempfile
+
+    from repro.serving_encoders import EncoderBundle
+
+    assert jax.device_count() == 8, jax.device_count()
+    X, Y = make_problem(jax.random.PRNGKey(5), 256, 24, 64)
+    enc = BrainEncoder(n_folds=4, solver="ridge", method="eigh").fit(X, Y)
+    X_new = jax.random.normal(jax.random.PRNGKey(6), (96, 24), jnp.float32)
+
+    # f32 storage: parity vs the fitted weights.
+    root = tempfile.mkdtemp(prefix="bundle_f32_") + "/b"
+    enc.save(root, weight_shards=8)
+    ref = np.asarray(enc.predict(X_new))
+    for shards in (None, 8):
+        enc2 = BrainEncoder.load(root, target_shards=shards)
+        got = np.asarray(enc2.predict(X_new))
+        assert np.array_equal(ref, got), (
+            "f32", shards, np.abs(ref - got).max())
+    enc_sh = BrainEncoder.load(root, target_shards=8)
+    assert "model" in str(enc_sh.weights_.sharding.spec), \
+        enc_sh.weights_.sharding
+
+    # bf16 storage (u16 bit patterns on disk): parity vs the CAST weights.
+    root_bf = tempfile.mkdtemp(prefix="bundle_bf16_") + "/b"
+    enc.save(root_bf, weight_dtype="bfloat16", weight_shards=8)
+    assert EncoderBundle.open(root_bf).weight_dtype.name == "bfloat16"
+    ref_bf = np.asarray(jnp.matmul(X_new,
+                                   enc.weights_.astype(jnp.bfloat16),
+                                   preferred_element_type=jnp.float32))
+    for shards in (None, 8):
+        enc2 = BrainEncoder.load(root_bf, target_shards=shards)
+        assert enc2.weights_.dtype == jnp.bfloat16
+        got = np.asarray(enc2.predict(X_new))
+        assert np.array_equal(ref_bf, got), (
+            "bf16", shards, np.abs(ref_bf - got).max())
+
+    # λ / CV provenance survives the round trip exactly.
+    enc3 = BrainEncoder.load(root)
+    assert enc3.report_.best_lambda == enc.report_.best_lambda
+    np.testing.assert_array_equal(enc3.report_.cv_scores,
+                                  enc.report_.cv_scores)
+    print("bundle_predict_parity OK")
+
+
 def check_dispatch_cost_sanity():
     """The §3 model ranks the auto layout no worse than every alternative
     divisor layout it rejected (on the modelled cost)."""
@@ -149,5 +197,6 @@ if __name__ == "__main__":
     check_explicit_layout_and_padding()
     check_row_rounding()
     check_store_streamed_parity()
+    check_bundle_predict_parity()
     check_dispatch_cost_sanity()
     print("ALL_OK")

@@ -42,11 +42,34 @@ def test_serve_driver_smoke():
 
 
 @pytest.mark.timeout(600)
-def test_encode_driver_backbone():
+def test_serve_driver_encoder_mode(tmp_path):
+    """materialise → fit → save → serve loop: bundles land on disk, the
+    service reports exactly one compiled predict for the single wave
+    shape, and a second run reuses the saved bundles."""
+    bundles = str(tmp_path / "bundles")
+    argv = ["repro.launch.serve", "--encoders", "2", "--bundle-dir", bundles,
+            "--n", "192", "--targets", "32", "--serve-steps", "3",
+            "--wave-rows", "32", "--requests-per-step", "4"]
+    p = _run(argv)
+    assert p.returncode == 0, p.stdout + p.stderr
+    assert "saved bundle" in p.stdout
+    assert "compiled_predicts=1 (1 per wave shape)" in p.stdout
+    assert sorted(os.listdir(bundles)) == ["sub-01", "sub-02"]
+    p2 = _run(argv)
+    assert p2.returncode == 0, p2.stdout + p2.stderr
+    assert "reusing bundle" in p2.stdout
+
+
+@pytest.mark.timeout(600)
+def test_encode_driver_backbone(tmp_path):
+    bundle = str(tmp_path / "bundle")
     p = _run(["repro.launch.encode", "--backbone", "vgg16", "--n", "400",
-              "--targets", "64"],
+              "--targets", "64", "--save-bundle", bundle],
              env_extra={"XLA_FLAGS":
                         "--xla_force_host_platform_device_count=4"})
     assert p.returncode == 0, p.stdout + p.stderr
     assert "B-MOR fit" in p.stdout
+    # --save-bundle drops the EncoderBundle + report.json provenance.
+    assert os.path.exists(os.path.join(bundle, "bundle.json"))
+    assert os.path.exists(os.path.join(bundle, "report.json"))
     assert "significant" in p.stdout

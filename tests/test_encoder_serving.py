@@ -1,0 +1,432 @@
+"""The serving subsystem: EncoderBundle round-trip + validation,
+EncoderRegistry LRU residency, EncoderService wave batching, and the
+EncodingReport JSON provenance."""
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.encoding import BrainEncoder, EncodingReport, pipeline
+from repro.serving_encoders import (
+    BundleError, EncoderBundle, EncoderRegistry, EncoderService,
+    PredictRequest, RegistryError, ServiceError,
+)
+from repro.serving_encoders.bundle import BUNDLE_MANIFEST, _lambda_by_target
+from repro.serving_encoders.registry import bundle_resident_bytes
+
+
+def _problem(seed=0, n=160, p=20, t=12, noise=0.1):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    X = jax.random.normal(k1, (n, p), jnp.float32)
+    W = jax.random.normal(k2, (p, t), jnp.float32) / np.sqrt(p)
+    Y = X @ W + noise * jax.random.normal(k3, (n, t), jnp.float32)
+    return X, Y
+
+
+@pytest.fixture
+def fitted():
+    X, Y = _problem()
+    return BrainEncoder(n_folds=4).fit(X, Y), X, Y
+
+
+# -- bundle round trip -------------------------------------------------------
+
+def test_round_trip_f32_bit_identical(fitted, tmp_path):
+    enc, X, _ = fitted
+    enc.save(str(tmp_path / "b"))
+    enc2 = BrainEncoder.load(str(tmp_path / "b"))
+    assert np.array_equal(np.asarray(enc.predict(X)),
+                          np.asarray(enc2.predict(X)))
+    assert enc2.report_.best_lambda == enc.report_.best_lambda
+    np.testing.assert_array_equal(enc2.report_.cv_scores,
+                                  enc.report_.cv_scores)
+    assert enc2.report_.decision == enc.report_.decision
+    assert enc2.config == enc.config
+
+
+def test_round_trip_bf16_inputs_bit_identical(tmp_path):
+    X, Y = _problem(seed=1)
+    enc = BrainEncoder(n_folds=4).fit(X.astype(jnp.bfloat16),
+                                      Y.astype(jnp.bfloat16))
+    enc.save(str(tmp_path / "b"))
+    enc2 = BrainEncoder.load(str(tmp_path / "b"))
+    assert np.array_equal(np.asarray(enc.predict(X)),
+                          np.asarray(enc2.predict(X)))
+
+
+def test_round_trip_bf16_storage(fitted, tmp_path):
+    """weight_dtype="bfloat16" stores W as u16 bit patterns; the loaded
+    encoder predicts bit-identically to the CAST in-memory weights."""
+    enc, X, _ = fitted
+    enc.save(str(tmp_path / "b"), weight_dtype="bfloat16", weight_shards=3)
+    bundle = EncoderBundle.open(str(tmp_path / "b"))
+    assert bundle.manifest["weight_dtype"] == "bfloat16"
+    # On-disk shard is genuinely uint16 (npy has no bf16).
+    raw = np.load(tmp_path / "b" / "step_0" / "W__000.npy")
+    assert raw.dtype == np.uint16
+    enc2 = bundle.load_encoder()
+    assert enc2.weights_.dtype == jnp.bfloat16
+    W_cast = enc.weights_.astype(jnp.bfloat16)
+    ref = jnp.matmul(X, W_cast, preferred_element_type=jnp.float32)
+    assert np.array_equal(np.asarray(ref), np.asarray(enc2.predict(X)))
+
+
+def test_weight_sharding_on_disk(fitted, tmp_path):
+    enc, X, _ = fitted
+    enc.save(str(tmp_path / "b"), weight_shards=5)
+    bundle = EncoderBundle.open(str(tmp_path / "b"))
+    m = bundle.manifest
+    assert m["weight_shards"] == 5
+    bounds = m["weight_shard_bounds"]
+    assert bounds[0][0] == 0 and bounds[-1][1] == m["t"]
+    files = os.listdir(tmp_path / "b" / "step_0")
+    assert sum(f.startswith("W__") for f in files) == 5
+    assert np.array_equal(np.asarray(enc.predict(X)),
+                          np.asarray(bundle.load_encoder().predict(X)))
+
+
+def test_save_refuses_overwrite_and_is_atomic(fitted, tmp_path):
+    enc, _, _ = fitted
+    target = str(tmp_path / "b")
+    enc.save(target)
+    with pytest.raises(BundleError, match="already exists"):
+        enc.save(target)
+    enc.save(target, overwrite=True)
+    leftovers = [d for d in os.listdir(tmp_path)
+                 if d.startswith(".tmpbundle")]
+    assert leftovers == []
+
+
+def test_save_unfit_raises(tmp_path):
+    with pytest.raises(BundleError, match="not fitted"):
+        BrainEncoder().save(str(tmp_path / "b"))
+
+
+# -- eager open() validation -------------------------------------------------
+
+def test_open_missing_manifest(tmp_path):
+    with pytest.raises(BundleError, match=BUNDLE_MANIFEST):
+        EncoderBundle.open(str(tmp_path))
+
+
+def test_open_corrupt_manifest(fitted, tmp_path):
+    enc, _, _ = fitted
+    enc.save(str(tmp_path / "b"))
+    (tmp_path / "b" / BUNDLE_MANIFEST).write_text("{broken")
+    with pytest.raises(BundleError, match="corrupt"):
+        EncoderBundle.open(str(tmp_path / "b"))
+
+
+def test_open_unsupported_version(fitted, tmp_path):
+    enc, _, _ = fitted
+    enc.save(str(tmp_path / "b"))
+    p = tmp_path / "b" / BUNDLE_MANIFEST
+    m = json.loads(p.read_text())
+    m["version"] = 99
+    p.write_text(json.dumps(m))
+    with pytest.raises(BundleError, match="version"):
+        EncoderBundle.open(str(tmp_path / "b"))
+
+
+def test_open_missing_weight_shard(fitted, tmp_path):
+    enc, _, _ = fitted
+    enc.save(str(tmp_path / "b"), weight_shards=2)
+    os.remove(tmp_path / "b" / "step_0" / "W__001.npy")
+    with pytest.raises(BundleError, match="missing"):
+        EncoderBundle.open(str(tmp_path / "b"))
+
+
+def test_open_shape_mismatch(fitted, tmp_path):
+    enc, _, _ = fitted
+    enc.save(str(tmp_path / "b"))
+    np.save(tmp_path / "b" / "step_0" / "best_lambda.npy",
+            np.zeros((7, 7)))
+    with pytest.raises(BundleError, match="shape"):
+        EncoderBundle.open(str(tmp_path / "b"))
+
+
+def test_open_dtype_mismatch(fitted, tmp_path):
+    enc, _, _ = fitted
+    enc.save(str(tmp_path / "b"))
+    path = tmp_path / "b" / "step_0" / "W__000.npy"
+    np.save(path, np.load(path).astype(np.float64))
+    with pytest.raises(BundleError, match="dtype"):
+        EncoderBundle.open(str(tmp_path / "b"))
+
+
+def test_open_checkpoint_manifest_disagreement(fitted, tmp_path):
+    """A leaf in bundle.json that the checkpoint manifest lost is caught
+    before any load."""
+    enc, _, _ = fitted
+    enc.save(str(tmp_path / "b"))
+    p = tmp_path / "b" / "step_0" / "manifest.json"
+    m = json.loads(p.read_text())
+    del m["leaves"]["cv_scores"]
+    p.write_text(json.dumps(m))
+    with pytest.raises(BundleError, match="cv_scores"):
+        EncoderBundle.open(str(tmp_path / "b"))
+
+
+def test_sharded_load_requires_divisibility(fitted, tmp_path):
+    enc, _, _ = fitted                    # t=12
+    enc.save(str(tmp_path / "b"))
+    with pytest.raises(BundleError, match="divide"):
+        BrainEncoder.load(str(tmp_path / "b"), target_shards=5)
+
+
+# -- per-target λ ------------------------------------------------------------
+
+def test_lambda_by_target_expansion():
+    lam = _lambda_by_target(np.asarray([1.0, 10.0]), t=5)
+    np.testing.assert_array_equal(lam, [1.0, 1.0, 1.0, 10.0, 10.0])
+    assert _lambda_by_target(np.empty((0,)), t=5) is None
+
+
+def test_bundle_stores_lambda_by_target(fitted, tmp_path):
+    enc, _, _ = fitted
+    enc.save(str(tmp_path / "b"))
+    arrays = EncoderBundle.open(str(tmp_path / "b")).load_arrays()
+    t = enc.weights_.shape[1]
+    np.testing.assert_array_equal(
+        arrays["lambda_by_target"],
+        np.full((t,), float(enc.report_.best_lambda[0])))
+
+
+# -- registry ----------------------------------------------------------------
+
+def _save_fleet(tmp_path, k=3, **fit_kw):
+    paths = []
+    for i in range(k):
+        X, Y = _problem(seed=10 + i)
+        enc = BrainEncoder(n_folds=3, **fit_kw).fit(X, Y)
+        path = str(tmp_path / f"m{i}")
+        enc.save(path)
+        paths.append(path)
+    return paths
+
+
+def test_registry_lazy_then_lru_eviction(tmp_path):
+    paths = _save_fleet(tmp_path, 3)
+    need = bundle_resident_bytes(EncoderBundle.open(paths[0]), 64)
+    reg = EncoderRegistry(device_memory_budget=int(2.5 * need),
+                          wave_rows=64)
+    for i, p in enumerate(paths):
+        reg.add(f"m{i}", p)
+    assert reg.loaded_names == []                 # lazy: nothing resident
+    reg.get("m0"); reg.get("m1")
+    reg.get("m0")                                 # hit → MRU
+    assert reg.loaded_names == ["m1", "m0"]
+    reg.get("m2")                                 # evicts LRU (m1)
+    assert reg.loaded_names == ["m0", "m2"]
+    assert reg.evictions == 1 and reg.hits == 1 and reg.loads == 3
+    assert reg.resident_bytes <= int(2.5 * need)
+
+
+def test_registry_unknown_and_duplicate(tmp_path):
+    paths = _save_fleet(tmp_path, 1)
+    reg = EncoderRegistry()
+    reg.add("m0", paths[0])
+    with pytest.raises(RegistryError, match="already registered"):
+        reg.add("m0", paths[0])
+    with pytest.raises(RegistryError, match="unknown"):
+        reg.get("nope")
+
+
+def test_registry_recharges_resident_entry_on_bigger_waves(tmp_path):
+    """A hit served with a bigger wave size re-charges the activation term
+    of the residency account (and evicts to make room) — the budget bounds
+    the waves actually flown, not the construction-time default."""
+    paths = _save_fleet(tmp_path, 2)
+    b = EncoderBundle.open(paths[0])
+    small = bundle_resident_bytes(b, 16)
+    big = bundle_resident_bytes(b, 4096)
+    reg = EncoderRegistry(device_memory_budget=small + big - 1,
+                          wave_rows=16)
+    reg.add("a", paths[0]); reg.add("b", paths[1])
+    reg.get("a"); reg.get("b")
+    assert len(reg.loaded_names) == 2
+    entry = reg.get("b", wave_rows=4096)      # hit, but bigger waves
+    assert entry.resident_bytes == big
+    assert reg.loaded_names == ["b"]          # "a" evicted to make room
+    assert reg.evictions == 1
+    # A wave size the budget can never support refuses up front without
+    # flushing the resident entries.
+    with pytest.raises(RegistryError, match="wave size"):
+        reg.get("b", wave_rows=10**7)
+    assert reg.loaded_names == ["b"]
+
+
+def test_registry_bundle_over_budget_raises(tmp_path):
+    paths = _save_fleet(tmp_path, 1)
+    reg = EncoderRegistry(device_memory_budget=16, wave_rows=64)
+    reg.add("m0", paths[0])
+    with pytest.raises(RegistryError, match="over the registry budget"):
+        reg.get("m0")
+
+
+# -- service -----------------------------------------------------------------
+
+def test_service_micro_batches_and_matches_predict(fitted, tmp_path):
+    enc, X, Y = fitted
+    enc.save(str(tmp_path / "b"))
+    reg = EncoderRegistry()
+    reg.add("m", str(tmp_path / "b"))
+    svc = EncoderService(reg, wave_rows=64)
+    Xn = np.asarray(X)
+    # Three ragged requests for one model → concatenated into fixed waves.
+    out = svc.serve([PredictRequest("m", Xn[:37]),
+                     PredictRequest("m", Xn[37:90],
+                                    targets=np.asarray(Y)[37:90]),
+                     PredictRequest("m", Xn[90:160])])
+    got = np.concatenate([r.predictions for r in out])
+    assert np.array_equal(got, np.asarray(enc.predict(X)))
+    # 160 rows → 3 waves of 64 with 32 pad rows.
+    assert svc.stats.waves == 3 and svc.stats.pad_rows == 32
+    assert svc.compile_count == 1
+    # Scoring rides along on the unpadded rows (paper §4.1 metric).
+    from repro.core import scoring
+    ref_r = np.asarray(scoring.pearson_r(Y[37:90],
+                                         enc.predict(X[37:90])))
+    np.testing.assert_allclose(out[1].pearson_r, ref_r, rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_service_one_compile_per_wave_shape(tmp_path):
+    paths = _save_fleet(tmp_path, 2)
+    reg = EncoderRegistry()
+    reg.add("a", paths[0]); reg.add("b", paths[1])
+    svc = EncoderService(reg, wave_rows=32)
+    X = np.asarray(_problem(seed=99)[0])
+    svc.serve([PredictRequest("a", X[:50]), PredictRequest("b", X[:20])])
+    # Two models, same (wave, p, t) shape → ONE compiled predict.
+    assert svc.compile_count == 1
+    svc.serve([PredictRequest("a", X[:10])])
+    assert svc.compile_count == 1                 # reused across calls
+    svc.serve([PredictRequest("b", X[:10])], wave_rows=16)
+    assert svc.compile_count == 2                 # new shape → one more
+
+
+def test_service_applies_pipeline_standardizer(tmp_path):
+    """A bundle saved from the pipeline carries μ/σ; the service replays
+    the exact standardize → predict → de-standardize composition."""
+    X, Y = _problem(seed=7, noise=0.3)
+    X = X * 3.0 + 1.5                             # un-standardized features
+    Y = Y * 2.0 - 4.0
+    state = pipeline.run_stages(X, Y, [pipeline.split(seed=0),
+                                       pipeline.standardize(),
+                                       pipeline.fit(n_folds=3)])
+    enc = state.encoder
+    assert enc.standardizer_ is not None
+    enc.save(str(tmp_path / "b"))
+    reg = EncoderRegistry()
+    reg.add("m", str(tmp_path / "b"))
+    svc = EncoderService(reg, wave_rows=32)
+    Xr = np.asarray(X)[:32]                       # raw features, full wave
+    out = svc.serve([PredictRequest("m", Xr)])[0]
+    std = enc.standardizer_
+    entry = reg.get("m")
+
+    @jax.jit                  # same program as the service's compiled wave
+    def ref_fn(X, W, mu_x, sd_x, mu_y, sd_y):
+        P = jnp.matmul((X - mu_x) / sd_x, W,
+                       preferred_element_type=jnp.float32)
+        return P * sd_y + mu_y
+
+    ref = ref_fn(jnp.asarray(Xr), entry.weights, entry.mu_x, entry.sd_x,
+                 entry.mu_y, entry.sd_y)
+    assert np.array_equal(out.predictions, np.asarray(ref))
+    # μ/σ round-tripped exactly through the bundle
+    loaded_std = BrainEncoder.load(str(tmp_path / "b")).standardizer_
+    np.testing.assert_array_equal(loaded_std.mu_x, np.asarray(std.mu_x))
+    np.testing.assert_array_equal(loaded_std.sd_y, np.asarray(std.sd_y))
+
+
+def test_service_batch_spanning_models_respects_budget(tmp_path):
+    """One serve() batch touching more models than the budget fits must
+    load them one at a time (pass-2 just-in-time), never pinning the whole
+    fleet resident at once."""
+    paths = _save_fleet(tmp_path, 3)
+    need = bundle_resident_bytes(EncoderBundle.open(paths[0]), 32)
+    budget = int(2.5 * need)
+    reg = EncoderRegistry(device_memory_budget=budget, wave_rows=32)
+    for i, p_ in enumerate(paths):
+        reg.add(f"m{i}", p_)
+    svc = EncoderService(reg, wave_rows=32)
+    X = np.asarray(_problem(seed=50)[0])[:20]
+    out = svc.serve([PredictRequest(f"m{i}", X) for i in range(3)])
+    assert all(r.predictions is not None for r in out)
+    assert reg.resident_bytes <= budget
+    assert len(reg.loaded_names) <= 2 and reg.evictions >= 1
+
+
+def test_service_validates_all_models_before_any_compute(tmp_path):
+    """A malformed request for model B refuses the batch BEFORE model A
+    does any device work (or any bundle is even loaded)."""
+    paths = _save_fleet(tmp_path, 2)
+    reg = EncoderRegistry()
+    reg.add("a", paths[0]); reg.add("b", paths[1])
+    svc = EncoderService(reg, wave_rows=32)
+    X = np.asarray(_problem(seed=51)[0])[:16]
+    with pytest.raises(ServiceError, match="incompatible"):
+        svc.serve([PredictRequest("a", X),
+                   PredictRequest("b", np.zeros((4, 99), np.float32))])
+    assert svc.stats.waves == 0 and reg.loaded_names == []
+    # Same up-front refusal for a model that could never fit the budget.
+    reg2 = EncoderRegistry(device_memory_budget=16, wave_rows=32)
+    reg2.add("a", paths[0]); reg2.add("b", paths[1])
+    svc2 = EncoderService(reg2, wave_rows=32)
+    with pytest.raises(RegistryError, match="over the registry budget"):
+        svc2.serve([PredictRequest("a", X), PredictRequest("b", X)])
+    assert svc2.stats.waves == 0 and reg2.loaded_names == []
+
+
+def test_standardizer_apply_unapply_round_trip():
+    std = pipeline.Standardizer(
+        mu_x=np.asarray([1.0, -2.0], np.float32),
+        sd_x=np.asarray([2.0, 0.5], np.float32),
+        mu_y=np.asarray([3.0], np.float32),
+        sd_y=np.asarray([4.0], np.float32))
+    X = np.asarray([[3.0, -2.5], [1.0, -1.5]], np.float32)
+    np.testing.assert_array_equal(std.apply_x(X), [[1.0, -1.0], [0.0, 1.0]])
+    Y = np.asarray([[0.5], [-0.25]], np.float32)
+    np.testing.assert_allclose(std.unapply_y(std.apply_y(Y)), Y, rtol=1e-6)
+    ident = pipeline.Standardizer()
+    assert ident.apply_x(X) is X and ident.unapply_y(Y) is Y
+
+
+def test_service_rejects_bad_features(fitted, tmp_path):
+    enc, X, _ = fitted
+    enc.save(str(tmp_path / "b"))
+    reg = EncoderRegistry()
+    reg.add("m", str(tmp_path / "b"))
+    svc = EncoderService(reg)
+    with pytest.raises(ServiceError, match="incompatible"):
+        svc.serve([PredictRequest("m", np.zeros((4, 99), np.float32))])
+    with pytest.raises(ServiceError, match="targets"):
+        svc.serve([PredictRequest("m", np.asarray(X)[:4],
+                                  targets=np.zeros((4, 99), np.float32))])
+
+
+# -- report provenance -------------------------------------------------------
+
+def test_report_json_round_trip(fitted):
+    enc, _, _ = fitted
+    r = enc.report_
+    back = EncodingReport.from_json(r.to_json())
+    assert back.weights is None                   # arrays live in the bundle
+    np.testing.assert_array_equal(back.best_lambda,
+                                  np.asarray(r.best_lambda))
+    np.testing.assert_allclose(back.cv_scores, np.asarray(r.cv_scores),
+                               rtol=1e-12)
+    assert back.lambdas == r.lambdas
+    assert back.decision == r.decision
+    assert back.solver_label == r.solver_label
+    d = json.loads(r.to_json())
+    assert d["weights_shape"] == list(r.weights.shape)
+    # A provenance-only report (weights=None) re-serializes cleanly.
+    d2 = json.loads(back.to_json())
+    assert d2["weights_shape"] is None and d2["weights_dtype"] is None
+    assert d2["best_lambda"] == d["best_lambda"]
