@@ -8,17 +8,25 @@ request traffic:
   requests across all registry entries and record per-``serve()`` p50/p99
   latency, waves/s, and rows/s.  The first call per wave size is the cold
   (compiling) call, reported separately.
+* **Bucketed sweep** — the same traffic through a ``wave_buckets``
+  service (2–3 ladder shapes picked per wave by rows remaining): records
+  waves/rows/pad-fraction PER BUCKET plus the total pad fraction, the
+  observable win over padding everything to one shape.
 * **Registry timing** — cold bundle load (disk → device) vs warm LRU hit,
   and an eviction demo under a budget sized for 2 of the entries.
-* **Compile-count assertion** — after the sweep the service must have
+* **Compile-count assertion** — after the sweeps each service must have
   traced its predict EXACTLY once per distinct wave shape (all bundles
-  share ``(p, t)``, so model count must NOT multiply compilations).  The
-  bench exits non-zero otherwise; the CI serving lane runs ``--smoke``.
+  share ``(p, t)``, so model count must NOT multiply compilations; the
+  bucketed service once per bucket used).  The bench exits non-zero
+  otherwise; the CI serving lane runs ``--smoke``.
 
 Writes ``BENCH_serving.json``::
 
     {"meta": {...}, "wave_sweep": [{"wave_rows", "cold_ms", "p50_ms",
       "p99_ms", "waves_per_s", "rows_per_s", "pad_fraction"}, ...],
+     "bucketed": {"buckets", "per_bucket": {w: {"waves", "rows",
+      "pad_rows", "pad_fraction"}}, "pad_fraction", "p50_ms",
+      "rows_per_s", "compile_count"},
      "registry": {"entries", "resident_mb", "cold_load_ms", "warm_hit_ms",
       "eviction_demo": {...}},
      "compile_count": K, "distinct_wave_shapes": K}
@@ -77,6 +85,56 @@ def sweep_wave(service, models: list[str], p: int, wave_rows: int,
     }
 
 
+def sweep_bucketed(registry, models: list[str], p: int,
+                   buckets: tuple[int, ...], batches: int,
+                   reqs_per_batch: int, seed: int) -> dict:
+    """The mixed ragged traffic through a bucketed service: per-bucket
+    wave/pad accounting + one-compile-per-bucket assertion."""
+    import numpy as np
+    from repro.serving_encoders import EncoderService
+    from repro.serving_encoders.traffic import ragged_requests
+
+    service = EncoderService(registry, wave_buckets=buckets)
+    rng = np.random.default_rng(seed)
+    service.serve(ragged_requests(rng, models, p, buckets[-1],
+                                  reqs_per_batch))       # cold: compiles
+    # Delta accounting around the timed loop (like sweep_wave): the cold
+    # warm-up batch must not leak into the recorded pad economics.
+    walls = []
+    rows0, pad0 = service.stats.rows, service.stats.pad_rows
+    bucket0 = {w: dict(b) for w, b in service.stats.per_bucket.items()}
+    t_all = time.perf_counter()
+    for _ in range(batches):
+        batch = ragged_requests(rng, models, p, buckets[-1],
+                                reqs_per_batch)
+        t0 = time.perf_counter()
+        service.serve(batch)
+        walls.append((time.perf_counter() - t0) * 1e3)
+    span = time.perf_counter() - t_all
+    per_bucket = {}
+    for w, b in sorted(service.stats.per_bucket.items()):
+        base = bucket0.get(w, {"waves": 0, "rows": 0, "pad_rows": 0})
+        d = {k: b[k] - base[k] for k in ("waves", "rows", "pad_rows")}
+        per_bucket[str(w)] = {
+            **d, "pad_fraction": round(
+                d["pad_rows"] / max(d["rows"] + d["pad_rows"], 1), 4)}
+    used = len(service.stats.per_bucket)
+    if service.compile_count != used:
+        print(f"FAIL: bucketed compile_count={service.compile_count} != "
+              f"{used} buckets used")
+        raise SystemExit(1)
+    rows = service.stats.rows - rows0
+    pad = service.stats.pad_rows - pad0
+    return {
+        "buckets": list(buckets),
+        "per_bucket": per_bucket,
+        "pad_fraction": round(pad / max(rows + pad, 1), 4),
+        "p50_ms": round(float(np.percentile(walls, 50)), 3),
+        "rows_per_s": round(rows / span, 1),
+        "compile_count": service.compile_count,
+    }
+
+
 def time_registry(paths: list[str], wave_rows: int) -> dict:
     from repro.serving_encoders import EncoderRegistry
     from repro.serving_encoders.registry import bundle_resident_bytes
@@ -129,10 +187,12 @@ def main() -> None:
     if args.smoke:
         n, p, t = 256, 64, 96
         wave_sizes = (16, 32)
+        buckets = (8, 32)
         batches, reqs = 5, 4
     else:
         n, p, t = 2048, 128, 512
         wave_sizes = (32, 64, 128)
+        buckets = (32, 128)
         batches, reqs = 30, 8
     workdir = args.workdir or tempfile.mkdtemp(prefix="serving_bench_")
     os.makedirs(workdir, exist_ok=True)
@@ -178,6 +238,14 @@ def main() -> None:
     print(f"compiled predicts: {service.compile_count} "
           f"== {distinct} distinct wave shapes ✓")
 
+    bucketed = sweep_bucketed(registry, models, p, buckets, batches, reqs,
+                              seed=1234)
+    print(f"bucketed {buckets}: pad fraction {bucketed['pad_fraction']} "
+          f"(per bucket: "
+          + ", ".join(f"{w}→{b['pad_fraction']}"
+                      for w, b in bucketed["per_bucket"].items())
+          + f"), {bucketed['compile_count']} compiles ✓")
+
     reg_stats = time_registry(paths, max(wave_sizes))
     payload = {
         "meta": {"n_fit": n, "p": p, "t": t, "models": len(paths),
@@ -185,6 +253,7 @@ def main() -> None:
                  "device_count": jax.device_count(),
                  "smoke": bool(args.smoke), "fit_seconds": round(fit_s, 2)},
         "wave_sweep": sweep,
+        "bucketed": bucketed,
         "registry": reg_stats,
         "compile_count": service.compile_count,
         "distinct_wave_shapes": distinct,

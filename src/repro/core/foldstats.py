@@ -180,14 +180,111 @@ def partial_fold_stats(X: jax.Array, Y: jax.Array, fold_ids: jax.Array,
             jnp.stack([c for _, c in per_fold]))
 
 
+class _FixedShapeUpdate:
+    """The ONE compiled program of the streaming accumulation.
+
+    Every chunk — fold-aligned or not, full or ragged — is presented to
+    this update as the SAME fixed shape: ``(chunk_rows, p)`` rows plus a
+    per-row slot one-hot (``(chunk_rows, s_max)``; zero rows are padding)
+    and the traced fold index of each slot.  The ``(k, p, p+t)`` partial
+    update is then a single masked einsum + scatter-add, so the whole
+    stream traces exactly once per ``(chunk_rows, p, t, k, s_max, dtype)``
+    signature instead of once per distinct fold-segment length (the
+    eager per-segment path recompiled at every fold boundary, ragged
+    tail, and chunk/fold misalignment — a compile storm the oocore bench
+    measured at >10 traces per stream).
+
+    A chunk of ``chunk_rows`` contiguous rows intersects at most
+    ``s_max = (chunk_rows − 2) // min_fold + 2`` folds, so the masked
+    work is a small constant multiple (2 for ``chunk_rows ≤ min_fold``)
+    of the unmasked matmul — paid once, unlike a recompile.  Unused
+    slots carry an all-zero mask and contribute exact zeros through the
+    scatter-``add``, so duplicate slot→fold indices are harmless.
+    """
+
+    def __init__(self) -> None:
+        self.compile_count = 0
+        self._fn = jax.jit(self._update)
+
+    def __call__(self, stats: FoldStats, X, Y, onehot, slot_fold
+                 ) -> FoldStats:
+        return self._fn(stats, X, Y, onehot, slot_fold)
+
+    def _update(self, stats: FoldStats, X: jax.Array, Y: jax.Array,
+                onehot: jax.Array, slot_fold: jax.Array) -> FoldStats:
+        # Python side effect at TRACE time only: counts actual program
+        # builds, the O(1)-compiles contract tests and the oocore bench
+        # assert on.
+        self.compile_count += 1
+        p = X.shape[1]
+        dt = jnp.promote_types(X.dtype, Y.dtype)
+        # One fused Xᵀ[X | Y] per slot — a single batched GEMM per chunk.
+        Z = jnp.concatenate([X.astype(dt), Y.astype(dt)], axis=1)
+        w = onehot                                          # (m, s) f32 0/1
+        Xw = X.astype(dt)[None] * jnp.swapaxes(w, 0, 1)[:, :, None].astype(dt)
+        GC = jnp.einsum("smp,mq->spq", Xw, Z,
+                        preferred_element_type=jnp.float32)  # (s, p, p+t)
+        Xf, Yf = X.astype(jnp.float32), Y.astype(jnp.float32)
+        cnt = jnp.sum(w, axis=0)                             # (s,)
+        xsum = jnp.einsum("ms,mp->sp", w, Xf,
+                          preferred_element_type=jnp.float32)
+        ysum = jnp.einsum("ms,mt->st", w, Yf,
+                          preferred_element_type=jnp.float32)
+        # Chan et al. pairwise combination of the centred second moment:
+        # M2_{a∪b} = M2_a + M2_b + (μ_a − μ_b)²·n_a n_b/(n_a+n_b) — exact,
+        # and free of the Σy² − mȳ² cancellation.  Per-slot quantities are
+        # gathered from / scattered back to each slot's fold; an empty
+        # slot has cnt = 0 so every one of its additions is exactly 0.
+        mu_b = ysum / jnp.maximum(cnt, 1.0)[:, None]
+        d = Yf[None, :, :] - mu_b[:, None, :]                # (s, m, t)
+        m2 = jnp.einsum("ms,smt->st", w, d * d,
+                        preferred_element_type=jnp.float32)
+        n_a = stats.count[slot_fold]                         # (s,)
+        mu_a = stats.ysum[slot_fold] / jnp.maximum(n_a, 1.0)[:, None]
+        both = ((n_a > 0) & (cnt > 0))[:, None]
+        delta2 = jnp.where(both, (mu_a - mu_b) ** 2, 0.0)
+        ysq_add = m2 + delta2 * (n_a * cnt
+                                 / jnp.maximum(n_a + cnt, 1.0))[:, None]
+        return FoldStats(
+            G=stats.G.at[slot_fold].add(GC[:, :, :p]),
+            C=stats.C.at[slot_fold].add(GC[:, :, p:]),
+            xsum=stats.xsum.at[slot_fold].add(xsum),
+            ysum=stats.ysum.at[slot_fold].add(ysum),
+            ysq=stats.ysq.at[slot_fold].add(ysq_add),
+            count=stats.count.at[slot_fold].add(cnt))
+
+
+# Module-level singleton: shards and repeated streams share one jit cache,
+# so e.g. 8 shard accumulators with identical chunk shapes cost ONE trace.
+_FIXED_UPDATE = _FixedShapeUpdate()
+
+
+def chunk_update_compile_count() -> int:
+    """Trace count of the fixed-shape chunk update (monotonic, process-wide).
+
+    Take a delta around a stream to measure its compiles; the contract is
+    ``delta == 1`` for a fresh ``(chunk_rows, p, t, k)`` signature and
+    ``0`` for a repeat, regardless of fold alignment or ragged tails.
+    """
+    return _FIXED_UPDATE.compile_count
+
+
 class FoldStatsAccumulator:
     """Streaming builder of ``FoldStats`` from ordered row chunks.
 
     The out-of-core entry point (``BrainEncoder.fit_chunks``): rows arrive
-    as host-sized batches, each batch is split at the (static) fold
-    boundaries it spans, and every segment updates its fold's accumulators
-    in place.  Rows must arrive in global row order; ``finalize`` checks
-    that exactly the owned row window was seen.
+    as host-sized batches; each batch is padded to one fixed chunk shape
+    and applied through the single jitted masked update
+    (``_FixedShapeUpdate``) — fold boundaries, ragged tails, and
+    chunk/fold misalignment change only the mask contents, never the
+    compiled program.  Rows must arrive in global row order; ``finalize``
+    checks that exactly the owned row window was seen.
+
+    ``chunk_rows`` pins the fixed shape up front (what the store-streaming
+    callers do, so every shard shares one program signature); when omitted
+    it is inferred from the first chunk.  Oversized batches are split,
+    undersized ones zero-padded — the pad rows carry an all-zero mask, so
+    they contribute exact zeros to every statistic.
 
     ``row_start``/``row_stop`` restrict the accumulator to a contiguous
     window of the global rows — the sharded out-of-core path gives each
@@ -200,7 +297,8 @@ class FoldStatsAccumulator:
     """
 
     def __init__(self, n_total: int, n_folds: int, *, row_start: int = 0,
-                 row_stop: int | None = None):
+                 row_stop: int | None = None,
+                 chunk_rows: int | None = None):
         self.n_total = n_total
         self.bounds = fold_bounds(n_total, n_folds)
         self.row_start = row_start
@@ -209,8 +307,14 @@ class FoldStatsAccumulator:
             raise ValueError(
                 f"need 0 <= row_start < row_stop <= n_total, got "
                 f"[{row_start}, {row_stop}) with n_total={n_total}")
+        if chunk_rows is not None and chunk_rows < 1:
+            raise ValueError(f"chunk_rows must be >= 1, got {chunk_rows}")
         self._offset = self.row_start
         self._stats: FoldStats | None = None
+        # Fixed shape of the compiled update: pin to the caller's chunk
+        # size (never more than the data) or infer from the first chunk.
+        self._fixed_rows = (None if chunk_rows is None
+                            else min(chunk_rows, n_total))
 
     def _init_stats(self, p: int, t: int) -> FoldStats:
         k = len(self.bounds)
@@ -222,7 +326,34 @@ class FoldStatsAccumulator:
                          ysq=z((k, t), jnp.float32),
                          count=z((k,), jnp.float32))
 
+    def _max_slots(self) -> int:
+        """Folds a ``_fixed_rows`` window can intersect: it fully contains
+        every fold but its two ends, each of size ≥ ``min_fold``."""
+        min_fold = min(hi - lo for lo, hi in self.bounds)
+        return min(len(self.bounds),
+                   max(1, (self._fixed_rows - 2) // min_fold + 2))
+
+    def _slot_mask(self, m: int) -> tuple:
+        """(onehot (fixed, s_max) f32, slot_fold (s_max,) i32) for the
+        ``m`` valid rows at the current offset (pad rows all-zero)."""
+        import numpy as np
+        s_max = self._max_slots()
+        onehot = np.zeros((self._fixed_rows, s_max), np.float32)
+        slot_fold = np.zeros((s_max,), np.int32)
+        s = 0
+        for f, (lo, hi) in enumerate(self.bounds):
+            seg_lo = max(lo, self._offset) - self._offset
+            seg_hi = min(hi, self._offset + m) - self._offset
+            if seg_lo >= seg_hi:
+                continue
+            assert s < s_max, "slot bound violated (fold split bug)"
+            onehot[seg_lo:seg_hi, s] = 1.0
+            slot_fold[s] = f
+            s += 1
+        return onehot, slot_fold
+
     def update(self, X_chunk: jax.Array, Y_chunk: jax.Array) -> None:
+        import numpy as np
         m = X_chunk.shape[0]
         if self._offset + m > self.row_stop:
             raise ValueError(
@@ -231,39 +362,32 @@ class FoldStatsAccumulator:
         if self._stats is None:
             self._stats = self._init_stats(X_chunk.shape[1],
                                            Y_chunk.shape[1])
-        # One host→device conversion per chunk; the per-segment work below
-        # then slices device-resident arrays (streamed chunks arrive as
-        # read-only numpy memmap views).
-        X_chunk = jnp.asarray(X_chunk)
-        Y_chunk = jnp.asarray(Y_chunk)
-        s = self._stats
-        for f, (lo, hi) in enumerate(self.bounds):
-            # Static intersection of [offset, offset+m) with this fold.
-            seg_lo = max(lo, self._offset) - self._offset
-            seg_hi = min(hi, self._offset + m) - self._offset
-            if seg_lo >= seg_hi:
-                continue
-            Xs = X_chunk[seg_lo:seg_hi]
-            Ys = Y_chunk[seg_lo:seg_hi]
-            Xs32, Ys32 = Xs.astype(jnp.float32), Ys.astype(jnp.float32)
-            # Chan et al. pairwise combination of the centred second moment:
-            # M2_{a∪b} = M2_a + M2_b + (μ_a − μ_b)²·n_a n_b/(n_a+n_b) —
-            # exact, and free of the Σy² − mȳ² cancellation.
-            n_a, n_b = s.count[f], float(seg_hi - seg_lo)
-            mu_b = jnp.mean(Ys32, axis=0)
-            m2_b = jnp.sum((Ys32 - mu_b) ** 2, axis=0)
-            mu_a = s.ysum[f] / jnp.maximum(n_a, 1.0)
-            delta2 = jnp.where(n_a > 0, (mu_a - mu_b) ** 2, 0.0)
-            m2_add = m2_b + delta2 * n_a * n_b / (n_a + n_b)
-            s = FoldStats(
-                G=s.G.at[f].add(_xty(Xs, Xs)),
-                C=s.C.at[f].add(_xty(Xs, Ys)),
-                xsum=s.xsum.at[f].add(jnp.sum(Xs32, axis=0)),
-                ysum=s.ysum.at[f].add(jnp.sum(Ys32, axis=0)),
-                ysq=s.ysq.at[f].add(m2_add),
-                count=s.count.at[f].add(n_b))
-        self._stats = s
-        self._offset += m
+        if self._fixed_rows is None:
+            self._fixed_rows = m
+        fixed = self._fixed_rows
+        lo = 0
+        while lo < m:                       # oversized batches: split
+            hi = min(lo + fixed, m)
+            Xs, Ys = X_chunk[lo:hi], Y_chunk[lo:hi]
+            if hi - lo < fixed:             # ragged: zero-pad to the shape
+                Xp = np.zeros((fixed, Xs.shape[1]), np.asarray(Xs).dtype)
+                Yp = np.zeros((fixed, Ys.shape[1]), np.asarray(Ys).dtype)
+                Xp[:hi - lo], Yp[:hi - lo] = Xs, Ys
+                Xs, Ys = Xp, Yp
+            onehot, slot_fold = self._slot_mask(hi - lo)
+            self._stats = _FIXED_UPDATE(self._stats, jnp.asarray(Xs),
+                                        jnp.asarray(Ys), onehot, slot_fold)
+            self._offset += hi - lo
+            lo = hi
+        # Synchronize before returning: jnp.asarray's host→device transfer
+        # is ASYNC, and a prefetched source recycles its staging buffer as
+        # soon as the next chunk is requested — returning with the copy
+        # still in flight would let the reader overwrite rows the update
+        # has not yet consumed.  Blocking on the (tiny) count output fences
+        # the whole executable; chunk updates are sequentially dependent,
+        # so no cross-chunk pipelining is lost, and the reader thread still
+        # overlaps the next read with this compute.
+        jax.block_until_ready(self._stats.count)
 
     def finalize(self) -> FoldStats:
         if self._stats is None or self._offset != self.row_stop:
@@ -274,11 +398,22 @@ class FoldStatsAccumulator:
 
 
 def compute_chunked(chunks: Iterable[tuple[jax.Array, jax.Array]],
-                    n_total: int, n_folds: int) -> FoldStats:
-    """One-call streaming accumulation over ``(X_chunk, Y_chunk)`` batches."""
-    acc = FoldStatsAccumulator(n_total, n_folds)
-    for X_chunk, Y_chunk in chunks:
-        acc.update(X_chunk, Y_chunk)
+                    n_total: int, n_folds: int, *,
+                    chunk_rows: int | None = None) -> FoldStats:
+    """One-call streaming accumulation over ``(X_chunk, Y_chunk)`` batches.
+
+    ``chunk_rows`` pins the fixed shape of the compiled masked update up
+    front (one trace for the whole stream); omitted, it is inferred from
+    the first chunk.  Iterators with a ``close`` method (the prefetching
+    store reader) are closed on every exit path.
+    """
+    acc = FoldStatsAccumulator(n_total, n_folds, chunk_rows=chunk_rows)
+    try:
+        for X_chunk, Y_chunk in chunks:
+            acc.update(X_chunk, Y_chunk)
+    finally:
+        if hasattr(chunks, "close"):
+            chunks.close()
     return acc.finalize()
 
 
@@ -338,7 +473,8 @@ def shard_row_ranges(n_total: int, n_shards: int) -> list[tuple[int, int]]:
 def compute_sharded_chunked(
         shard_streams: Sequence[Iterable[tuple[jax.Array, jax.Array]]],
         n_total: int, n_folds: int, *, mesh=None,
-        data_axis: str = "data") -> FoldStats:
+        data_axis: str = "data",
+        chunk_rows: int | None = None) -> FoldStats:
     """Sharded out-of-core accumulation along ``data_axis``.
 
     ``shard_streams[s]`` yields shard ``s``'s row chunks, covering exactly
@@ -354,14 +490,24 @@ def compute_sharded_chunked(
       stacked layout), or a host-side tree reduction otherwise;
     * the small centred moment statistics merge with the Chan pairwise
       update (``combine``), which a plain ``psum`` cannot express.
+
+    ``chunk_rows`` pins the fixed shape of the compiled masked update so
+    EVERY shard's stream shares one program signature (one trace total,
+    however the shard windows cut the folds).  Streams are consumed
+    sequentially and closed (prefetching readers stop their thread and
+    release their staging buffers as soon as their shard is done).
     """
     ranges = shard_row_ranges(n_total, len(shard_streams))
     parts: list[FoldStats] = []
     for (lo, hi), stream in zip(ranges, shard_streams):
         acc = FoldStatsAccumulator(n_total, n_folds, row_start=lo,
-                                   row_stop=hi)
-        for X_chunk, Y_chunk in stream:
-            acc.update(X_chunk, Y_chunk)
+                                   row_stop=hi, chunk_rows=chunk_rows)
+        try:
+            for X_chunk, Y_chunk in stream:
+                acc.update(X_chunk, Y_chunk)
+        finally:
+            if hasattr(stream, "close"):
+                stream.close()
         parts.append(acc.finalize())
     if mesh is None or len(parts) == 1:
         return combine(parts)
@@ -491,8 +637,8 @@ def validation_scores_from_stats(
 
 
 __all__: Sequence[str] = (
-    "ColumnMoments", "FoldStats", "FoldStatsAccumulator", "combine",
-    "compute", "compute_chunked", "compute_sharded_chunked", "fold_bounds",
-    "fold_of_rows", "partial_fold_stats", "shard_row_ranges",
-    "validation_scores_from_stats",
+    "ColumnMoments", "FoldStats", "FoldStatsAccumulator",
+    "chunk_update_compile_count", "combine", "compute", "compute_chunked",
+    "compute_sharded_chunked", "fold_bounds", "fold_of_rows",
+    "partial_fold_stats", "shard_row_ranges", "validation_scores_from_stats",
 )

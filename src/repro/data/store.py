@@ -39,6 +39,9 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import queue
+import threading
+import time
 from typing import Iterator
 
 import numpy as np
@@ -93,6 +96,174 @@ class RunEntry:
 def _shard_paths(root: str, run_id: str) -> tuple[str, str]:
     return (os.path.join(root, f"{run_id}.X.npy"),
             os.path.join(root, f"{run_id}.Y.npy"))
+
+
+def _normalize_dtype(dtype) -> np.dtype | None:
+    if dtype is None:
+        return None
+    return _dtype_from_name(dtype) if isinstance(dtype, str) \
+        else np.dtype(dtype)
+
+
+@dataclasses.dataclass
+class PrefetchStats:
+    """Where a prefetched stream spent its waiting time.
+
+    ``read_stall_s`` is consumer time blocked on an empty queue (the disk
+    reader was the bottleneck); ``compute_stall_s`` is reader time blocked
+    on a full queue (compute was the bottleneck — the overlap is working).
+    A well-overlapped stream has one of the two ≈ the pipeline imbalance
+    and the other ≈ 0; both ≈ 0 means the stream finished before either
+    side ever waited.
+    """
+
+    chunks: int = 0
+    bytes_staged: int = 0
+    read_stall_s: float = 0.0
+    compute_stall_s: float = 0.0
+
+
+class ChunkPrefetcher:
+    """Double-buffered background reader over ``RunStore.iter_chunks``.
+
+    A daemon thread walks the ordinary (synchronous) chunk iterator and
+    *stages* each chunk — memmap page-in plus any dtype conversion — into
+    one of ``depth + 2`` reusable pre-allocated host buffers (the CPU
+    analogue of pinned staging memory), then hands it over through a
+    bounded queue of ``depth``.  While the consumer runs the device
+    accumulation on chunk *i*, the reader is already faulting in chunk
+    *i+1*: the stream runs at the speed of the slower side, not their sum.
+
+    Contracts:
+
+    * **Bit-identical**: staging is a straight copy, so chunk order,
+      shapes, and values are exactly the synchronous iterator's.
+    * **Bounded residency**: ``depth + 2`` buffers of ``chunk_rows`` rows,
+      allocated lazily on first iteration and released when the stream is
+      exhausted or closed.  ``depth`` queued + 1 held by the consumer + 1
+      being staged never exceeds the pool, so a yielded view is valid
+      until the NEXT ``next()`` call — consumers that keep chunks must
+      copy (every in-repo consumer converts or reduces immediately).
+    * **Exceptions propagate**: a reader-thread failure re-raises in the
+      consumer at the point of ``next()``.
+    * **Early shutdown**: ``close()`` (also called on ``__del__`` and by
+      the streaming consumers' ``finally``) stops the reader thread and
+      frees the buffers even mid-stream — an aborted fit leaks nothing.
+
+    Yielded arrays are read-only views into the staging buffers, matching
+    the read-only memmap semantics of the synchronous path.
+    """
+
+    _SENTINEL = object()
+
+    def __init__(self, store: "RunStore", chunk_rows: int, *,
+                 dtype: np.dtype | None, row_range: tuple[int, int] | None,
+                 depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"prefetch depth must be >= 1, got {depth}")
+        self._store = store
+        self._chunk_rows = chunk_rows
+        self._dtype = dtype
+        self._row_range = row_range
+        self._depth = depth
+        self.stats = PrefetchStats()
+        self._queue: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._bufs: list[tuple[np.ndarray, np.ndarray]] | None = None
+        self._done = False
+
+    # -- iterator protocol ---------------------------------------------------
+    def __iter__(self) -> "ChunkPrefetcher":
+        return self
+
+    def _start(self) -> None:
+        dt_x = self._dtype or self._store.dtype_x
+        dt_y = self._dtype or self._store.dtype_y
+        n_buf = self._depth + 2
+        self._bufs = [
+            (np.empty((self._chunk_rows, self._store.p), dt_x),
+             np.empty((self._chunk_rows, self._store.t), dt_y))
+            for _ in range(n_buf)]
+        self._thread = threading.Thread(
+            target=self._reader, name="runstore-prefetch", daemon=True)
+        self._thread.start()
+
+    def _put(self, item) -> bool:
+        """Stop-aware bounded put; returns False when closed mid-stream.
+        Time spent blocked here is compute-stall (queue full = the device
+        side is behind)."""
+        t0 = time.perf_counter()
+        waited = False
+        while not self._stop.is_set():
+            try:
+                self._queue.put(item, timeout=0.05)
+                if waited:
+                    self.stats.compute_stall_s += time.perf_counter() - t0
+                return True
+            except queue.Full:
+                waited = True
+        return False
+
+    def _reader(self) -> None:
+        try:
+            seq = 0
+            for X_c, Y_c in self._store.iter_chunks(
+                    self._chunk_rows, dtype=self._dtype,
+                    row_range=self._row_range):
+                if self._stop.is_set():
+                    return
+                bx, by = self._bufs[seq % len(self._bufs)]
+                m = X_c.shape[0]
+                np.copyto(bx[:m], X_c)
+                np.copyto(by[:m], Y_c)
+                vx, vy = bx[:m].view(), by[:m].view()
+                vx.flags.writeable = False
+                vy.flags.writeable = False
+                self.stats.bytes_staged += bx[:m].nbytes + by[:m].nbytes
+                if not self._put((vx, vy)):
+                    return
+                seq += 1
+            self._put(self._SENTINEL)
+        except BaseException as exc:                 # noqa: BLE001
+            self._put(exc)
+
+    def __next__(self):
+        if self._done:
+            raise StopIteration
+        if self._thread is None:
+            self._start()
+        t0 = time.perf_counter()
+        item = self._queue.get()
+        self.stats.read_stall_s += time.perf_counter() - t0
+        if item is self._SENTINEL:
+            self.close()
+            raise StopIteration
+        if isinstance(item, BaseException):
+            self.close()
+            raise item
+        self.stats.chunks += 1
+        return item
+
+    def close(self) -> None:
+        """Stop the reader, drain the queue, release the staging buffers."""
+        self._done = True
+        self._stop.set()
+        while True:                     # unblock a reader stuck on put()
+            try:
+                self._queue.get_nowait()
+            except queue.Empty:
+                break
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+        self._bufs = None
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:               # interpreter teardown
+            pass
 
 
 def _read_npy_header(path: str) -> tuple[tuple[int, ...], np.dtype]:
@@ -290,16 +461,28 @@ class RunStore:
                 np.load(y_path, mmap_mode="r").view(self.dtype_y))
 
     def iter_chunks(self, chunk_rows: int, *, dtype: np.dtype | str | None
-                    = None, row_range: tuple[int, int] | None = None
+                    = None, row_range: tuple[int, int] | None = None,
+                    prefetch: bool = False, prefetch_depth: int = 2
                     ) -> Iterator[tuple[np.ndarray, np.ndarray]]:
         """Yield ``(X_chunk, Y_chunk)`` row batches in global row order.
 
-        Batches are views into the read-only memmaps (zero-copy) unless
-        ``dtype`` requests a cast or a chunk spans a run boundary (then the
+        Batches are views into the read-only memmaps (ZERO host copies —
+        including when ``dtype`` names the stored dtype) unless ``dtype``
+        requests a real cast or a chunk spans a run boundary (then the
         spanning rows are concatenated into a fresh array of ``chunk_rows``
         rows at most — still O(chunk), never O(n)).  ``row_range=(lo, hi)``
         restricts the stream to a global row window — the hook the sharded
         accumulation uses to give each shard its own contiguous slice.
+
+        ``prefetch=True`` returns a ``ChunkPrefetcher`` instead: a
+        background reader stages the NEXT chunk into a reusable host
+        buffer (bounded queue of ``prefetch_depth``) while the caller
+        processes the current one — same chunks, same order, same values,
+        overlapped with compute.  The prefetcher exposes ``stats``
+        (reader-stall vs compute-stall time) and ``close()`` for early
+        shutdown; its reader thread starts lazily on first iteration, so
+        building many shard streams up front costs nothing until each is
+        consumed.
         """
         if chunk_rows < 1:
             raise ValueError(f"chunk_rows must be >= 1, got {chunk_rows}")
@@ -307,12 +490,25 @@ class RunStore:
         if not 0 <= lo <= hi <= self.n_total:
             raise ValueError(f"row_range {row_range} outside "
                              f"[0, {self.n_total}]")
+        dtype = _normalize_dtype(dtype)
+        if prefetch:
+            return ChunkPrefetcher(self, chunk_rows, dtype=dtype,
+                                   row_range=(lo, hi), depth=prefetch_depth)
+        return self._iter_chunks_sync(chunk_rows, dtype, lo, hi)
+
+    def _iter_chunks_sync(self, chunk_rows: int, dtype: np.dtype | None,
+                          lo: int, hi: int
+                          ) -> Iterator[tuple[np.ndarray, np.ndarray]]:
         pending_x: list[np.ndarray] = []
         pending_y: list[np.ndarray] = []
         pending = 0
 
         def cast(a: np.ndarray) -> np.ndarray:
-            return a if dtype is None else a.astype(dtype, copy=False)
+            # Aligned-dtype fast path: hand back the memmap view itself —
+            # no host copy for the common store-dtype == compute-dtype case.
+            if dtype is None or a.dtype == dtype:
+                return a
+            return a.astype(dtype)
 
         for r in self.runs:
             if r.row_end <= lo or r.row_offset >= hi:
@@ -360,4 +556,5 @@ class RunStore:
         return X, Y
 
 
-__all__ = ["RunStore", "RunEntry", "StoreError", "MANIFEST_NAME"]
+__all__ = ["ChunkPrefetcher", "PrefetchStats", "RunStore", "RunEntry",
+           "StoreError", "MANIFEST_NAME"]

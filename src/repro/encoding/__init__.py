@@ -62,6 +62,27 @@ the streamed path is bit-identical to the in-memory fit (the chunk
 -invariance harness in ``tests/test_oocore.py`` and the memory-capped CI
 lane lock this down; ``BENCH_oocore.json`` tracks wall time / peak RSS).
 
+The streaming tier is *overlapped*: by default (``EncoderConfig.prefetch``)
+a background reader stages the NEXT chunk into a reusable host buffer —
+bounded queue of ``prefetch_depth``, ``depth + 2`` staging buffers — while
+the device accumulates the current one, so the disk→host→device→accumulate
+pipeline runs at the speed of the slower side, not their sum.  Two
+invariants make that free of semantic cost:
+
+* **Prefetch is bit-identical.**  Staging is a straight copy; prefetch
+  on/off select the same λ and produce the same weights bit for bit
+  (``--no-prefetch`` on ``launch/encode.py`` is purely a wall-time A/B).
+* **Fixed-shape masked updates compile ONCE.**  Every chunk — whatever
+  its fold alignment, shard window, or ragged tail — is padded to
+  ``chunk_rows`` and applied through one jitted masked einsum (fold
+  membership is a per-row one-hot, pad rows an all-zero mask), so the
+  accumulation's trace-time compile count is 1 instead of one per
+  distinct fold-segment length.  ``foldstats.chunk_update_compile_count``
+  exposes the counter; tests and the oocore bench gate on it.
+
+After a streamed fit, ``enc.stream_stats_`` reports the overlap telemetry
+(reader-stall vs compute-stall seconds, chunks, bytes staged, compiles).
+
 Fit once, serve many
 --------------------
 A fitted encoder no longer dies with the process: ``save`` persists an

@@ -66,6 +66,16 @@ class EncoderConfig:
     device_memory_budget: int | None = None
     # Row-batch size of the streaming accumulation (per shard).
     chunk_rows: int = 8192
+    # Overlapped streaming: a background reader stages the NEXT chunk into
+    # a reusable host buffer while the device accumulates the current one
+    # (RunStore.iter_chunks(prefetch=True)).  Results are bit-identical to
+    # the non-prefetched stream — both present every chunk to the same
+    # fixed-shape compiled update — so this is purely a wall-time knob;
+    # turn it off to A/B the overlap (launch/encode.py --no-prefetch).
+    prefetch: bool = True
+    # Bounded hand-over queue depth; the reader owns depth + 2 staging
+    # buffers of chunk_rows rows each.
+    prefetch_depth: int = 2
 
     # --- determinism -------------------------------------------------------
     seed: int = 0

@@ -108,6 +108,9 @@ def _chunked_decision(cfg: EncoderConfig, w: RidgeWorkload, resident: int,
     c_d = cfg.data_shards or device_count
     cost = (complexity.t_w(w) +
             complexity.t_m(w) + complexity.t_w_folded(w) / max(c_d, 1))
+    overlap = (f"double-buffered chunk prefetch (depth "
+               f"{cfg.prefetch_depth})" if cfg.prefetch
+               else "prefetch off (serial read→accumulate)")
     return DispatchDecision(
         solver="ridge", method="chunked", data_shards=c_d, target_shards=1,
         predicted_cost=cost,
@@ -115,8 +118,9 @@ def _chunked_decision(cfg: EncoderConfig, w: RidgeWorkload, resident: int,
                   f"exceeds device_memory_budget = "
                   f"{cfg.device_memory_budget / 2**20:.1f} MB → streamed "
                   f"fold-statistics accumulation over {c_d} row shard(s), "
-                  f"chunk_rows={cfg.chunk_rows} (only the (k, p, p+t) "
-                  f"sufficient statistics stay resident)")
+                  f"chunk_rows={cfg.chunk_rows}, {overlap} (only the "
+                  f"(k, p, p+t) sufficient statistics and the staging "
+                  f"buffers stay resident)")
 
 
 def resolve(cfg: EncoderConfig, n: int, p: int, t: int,

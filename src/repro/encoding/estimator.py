@@ -135,6 +135,10 @@ class BrainEncoder:
         # per-column μ/σ transform, persisted with save() so serving can
         # replay it on raw features.
         self.standardizer_ = None
+        # Set by the streamed fit paths: overlap telemetry of the chunk
+        # pipeline (reader-stall vs compute-stall seconds, chunks, bytes
+        # staged, accumulation compile count).  None for in-memory fits.
+        self.stream_stats_: dict | None = None
 
     # -- sklearn-ish surface -------------------------------------------------
     def fit(self, X: jax.Array | None = None, Y: jax.Array | None = None,
@@ -170,32 +174,45 @@ class BrainEncoder:
         self.report_ = fitter(X, Y, decision)
         return self
 
-    def fit_chunks(self, chunks, n_total: int | None = None
-                   ) -> "BrainEncoder":
+    def fit_chunks(self, chunks, n_total: int | None = None,
+                   chunk_rows: int | None = None) -> "BrainEncoder":
         """Out-of-core fit from ordered ``(X_chunk, Y_chunk)`` row batches.
 
         The chunks are streamed through a ``foldstats.FoldStatsAccumulator``
         — only the ``(k, p, p+t)`` sufficient statistics ever live on the
         device, so ``X`` may be arbitrarily taller than device memory — and
         the CV'd solve runs entirely on the accumulated statistics
-        (``ridge.ridge_cv_from_stats``).  Primal/eigh single-shard only:
+        (``ridge.ridge_cv_from_stats``).  Every chunk goes through ONE
+        fixed-shape compiled masked update (padded to the chunk size, fold
+        membership as a mask), so the whole stream costs a single trace
+        regardless of fold alignment.  Primal/eigh single-shard only:
         the streaming regime is tall-``n``, exactly where the Gram form
         (p×p) is the small object.  Chunks must arrive in global row order;
         the fold split matches ``fit`` on the concatenated rows.
 
         ``chunks`` may also be a ``repro.data.store.RunStore`` — it is
-        streamed with ``config.chunk_rows`` and ``n_total`` is taken from
-        its manifest.
+        streamed with ``config.chunk_rows`` (background-prefetched when
+        ``config.prefetch``) and ``n_total`` is taken from its manifest.
         """
         self._check_chunkable()
+        # A source that exposes PrefetchStats (a ChunkPrefetcher handed in
+        # directly) contributes its overlap telemetry to stream_stats_.
+        stream = chunks if hasattr(chunks, "stats") else None
         if hasattr(chunks, "iter_chunks"):            # RunStore duck-type
             self._check_store_folds(chunks)
             n_total = chunks.shape[0]
-            chunks = chunks.iter_chunks(self.config.chunk_rows)
+            chunk_rows = chunk_rows or self.config.chunk_rows
+            chunks = stream = chunks.iter_chunks(
+                chunk_rows, prefetch=self.config.prefetch,
+                prefetch_depth=self.config.prefetch_depth)
         if n_total is None:
             raise ValueError("fit_chunks needs n_total for iterator sources")
+        compiles0 = foldstats.chunk_update_compile_count()
         stats = foldstats.compute_chunked(chunks, n_total,
-                                          self.config.n_folds)
+                                          self.config.n_folds,
+                                          chunk_rows=chunk_rows)
+        self._record_stream_stats([stream] if stream is not None else [],
+                                  compiles0)
         return self._fit_from_stats(stats, n_total)
 
     def _check_store_folds(self, store) -> None:
@@ -254,7 +271,16 @@ class BrainEncoder:
     def _fit_store_chunked(self, store, decision: DispatchDecision,
                            chunk_rows: int | None) -> "BrainEncoder":
         """Streamed fit: shard the row windows over the local devices, each
-        shard accumulating its own chunks; one psum combines the stacks."""
+        shard accumulating its own chunks; one psum combines the stacks.
+
+        Each shard's stream is background-prefetched (``config.prefetch``;
+        reader threads and staging buffers start lazily, so the sequential
+        shard consumption only ever holds one prefetcher's buffers), and
+        all shards share the one fixed-shape compiled update.  After the
+        fit, ``stream_stats_`` records the overlap telemetry: reader-stall
+        vs compute-stall seconds, chunks, bytes staged, and the trace-time
+        compile count of the accumulation.
+        """
         self._check_chunkable()
         n_total = store.shape[0]
         chunk_rows = chunk_rows or self.config.chunk_rows
@@ -265,12 +291,33 @@ class BrainEncoder:
             from repro.core.compat import make_mesh
             mesh = make_mesh((n_shards,), (self.config.data_axis,))
         streams = [
-            store.iter_chunks(chunk_rows, row_range=(lo, hi))
+            store.iter_chunks(chunk_rows, row_range=(lo, hi),
+                              prefetch=self.config.prefetch,
+                              prefetch_depth=self.config.prefetch_depth)
             for lo, hi in foldstats.shard_row_ranges(n_total, n_shards)]
+        compiles0 = foldstats.chunk_update_compile_count()
         stats = foldstats.compute_sharded_chunked(
             streams, n_total, self.config.n_folds, mesh=mesh,
-            data_axis=self.config.data_axis)
+            data_axis=self.config.data_axis, chunk_rows=chunk_rows)
+        self._record_stream_stats(streams, compiles0)
         return self._fit_from_stats(stats, n_total, decision)
+
+    def _record_stream_stats(self, streams, compiles_before: int) -> None:
+        """Aggregate per-stream prefetch telemetry into ``stream_stats_``."""
+        agg = {"prefetch": bool(self.config.prefetch), "chunks": 0,
+               "bytes_staged": 0, "read_stall_s": 0.0,
+               "compute_stall_s": 0.0,
+               "compile_count": (foldstats.chunk_update_compile_count()
+                                 - compiles_before)}
+        for stream in streams:
+            s = getattr(stream, "stats", None)
+            if s is None:
+                continue
+            agg["chunks"] += s.chunks
+            agg["bytes_staged"] += s.bytes_staged
+            agg["read_stall_s"] += s.read_stall_s
+            agg["compute_stall_s"] += s.compute_stall_s
+        self.stream_stats_ = agg
 
     @property
     def weights_(self) -> jax.Array:

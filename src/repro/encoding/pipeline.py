@@ -170,7 +170,11 @@ def fit_chunked(config: EncoderConfig | None = None, *,
     it will train on, then the fold-statistics pass over the standardized
     chunks — the streaming equivalent of the ``standardize() → fit()``
     stage pair, at one extra read of the rows and O(p + t) extra
-    residency.
+    residency.  Both passes over a store source are background-prefetched
+    when the encoder's ``config.prefetch`` is on (the default): the reader
+    stages the next chunk while the current one is standardized and
+    accumulated, and the fold update is the single fixed-shape compiled
+    program, so fold misalignment never recompiles.
     """
     def stage(s: PipelineState) -> PipelineState:
         import numpy as np
@@ -178,7 +182,10 @@ def fit_chunked(config: EncoderConfig | None = None, *,
         if s.store is not None:
             encoder._check_store_folds(s.store)
             n = s.store.shape[0]
-            make_chunks = lambda: s.store.iter_chunks(chunk_rows)  # noqa: E731
+            cfg = encoder.config
+            make_chunks = lambda: s.store.iter_chunks(       # noqa: E731
+                chunk_rows, prefetch=cfg.prefetch,
+                prefetch_depth=cfg.prefetch_depth)
         else:
             if s.X is None:
                 raise ValueError("fit_chunked needs state.store or state.X")
@@ -186,17 +193,38 @@ def fit_chunked(config: EncoderConfig | None = None, *,
             make_chunks = lambda: (                                # noqa: E731
                 (s.X[lo:lo + chunk_rows], s.Y[lo:lo + chunk_rows])
                 for lo in range(0, n, chunk_rows))
-        chunks = make_chunks()
+        chunks = source = make_chunks()
         do_std = standardize if standardize is not None \
             else s.store is not None
         if do_std:
             mu_x, sd_x, mu_y, sd_y = streaming_moments(make_chunks())
-            chunks = (((np.asarray(X_c, np.float32) - mu_x) / sd_x,
-                       (np.asarray(Y_c, np.float32) - mu_y) / sd_y)
-                      for X_c, Y_c in chunks)
+
+            def std_chunks(src):
+                # Close a prefetching source on every exit path so an
+                # aborted fit never leaves a reader thread behind.
+                try:
+                    for X_c, Y_c in src:
+                        yield ((np.asarray(X_c, np.float32) - mu_x) / sd_x,
+                               (np.asarray(Y_c, np.float32) - mu_y) / sd_y)
+                finally:
+                    if hasattr(src, "close"):
+                        src.close()
+
+            chunks = std_chunks(chunks)
             s.standardizer = Standardizer(mu_x=mu_x, sd_x=sd_x,
                                           mu_y=mu_y, sd_y=sd_y)
-        s.encoder = encoder.fit_chunks(chunks, n_total=n)
+        s.encoder = encoder.fit_chunks(chunks, n_total=n,
+                                       chunk_rows=chunk_rows)
+        # The standardizing generator hides the prefetcher from fit_chunks;
+        # fold the fit pass's overlap telemetry back into stream_stats_ so
+        # the pipeline path reports honestly too.
+        src_stats = getattr(source, "stats", None)
+        ss = s.encoder.stream_stats_
+        if src_stats is not None and ss is not None and not ss["chunks"]:
+            ss.update(chunks=src_stats.chunks,
+                      bytes_staged=src_stats.bytes_staged,
+                      read_stall_s=src_stats.read_stall_s,
+                      compute_stall_s=src_stats.compute_stall_s)
         s.encoder.standardizer_ = s.standardizer
         s.report = s.encoder.report_
         return s

@@ -53,6 +53,16 @@ def pearson_r(y_true, y_pred, **kw):
     return _pearsonr.pearson_r(y_true, y_pred, **kw)
 
 
+def pearson_sums(y_true, y_pred):
+    """The kernel's five running sums, traceable.  (n, t) ×2 → (5, t)."""
+    return _pearsonr.pearson_sums(y_true, y_pred)
+
+
+def pearson_r_from_sums(sums, n_true):
+    """Finalise r from accumulated sums (the kernel's formula, host-safe)."""
+    return _pearsonr.pearson_r_from_sums(sums, n_true)
+
+
 def flash_attention(q, k, v, **kw):
     """Streaming attention, (BH, S, K) layout.  See kernels.flash_attention."""
     from repro.kernels import flash_attention as _fa

@@ -85,3 +85,40 @@ def pearson_r(y_true: jax.Array, y_pred: jax.Array, *,
 
 def _pad_to(v: int, m: int) -> int:
     return ((v + m - 1) // m) * m
+
+
+def pearson_sums(y_true: jax.Array, y_pred: jax.Array) -> jax.Array:
+    """The kernel's five running sums as one traceable reduction.
+
+    ``(n, t) × (n, t) → (5, t)`` float32: ``[Σy, Σŷ, Σy², Σŷ², Σyŷ]`` —
+    the same per-target accumulator rows the tiled kernel keeps in VMEM.
+    Zero-padded rows add nothing to any sum, so callers may sum over
+    fixed-shape padded blocks (the serving wave pattern) and finalise with
+    ``pearson_r_from_sums`` using the TRUE row count.
+    """
+    yt = y_true.astype(jnp.float32)
+    yp = y_pred.astype(jnp.float32)
+    return jnp.stack([jnp.sum(yt, axis=0), jnp.sum(yp, axis=0),
+                      jnp.sum(yt * yt, axis=0), jnp.sum(yp * yp, axis=0),
+                      jnp.sum(yt * yp, axis=0)])
+
+
+def pearson_r_from_sums(sums, n_true):
+    """Finalise per-target Pearson r from the five raw sums.
+
+    Exactly the kernel's ``_finalise`` formula (r = (nΣxy − ΣxΣy) /
+    √((nΣx²−(Σx)²)(nΣy²−(Σy)²)), variances clamped at 0, denominator
+    floored at 1e-12), factored out for hosts that accumulate ``sums``
+    across waves/blocks.  Dtype-generic: numpy float64 in → float64 out
+    (what the serving path uses to finalise many-wave accumulations
+    without f32 cancellation), jnp in → jnp out.
+    """
+    import numpy as np
+    xp = jnp if isinstance(sums, jax.Array) else np
+    sx, sy, sxx, syy, sxy = (sums[i] for i in range(5))
+    n = sums.dtype.type(n_true)
+    num = n * sxy - sx * sy
+    var_x = xp.maximum(n * sxx - sx * sx, 0.0)
+    var_y = xp.maximum(n * syy - sy * sy, 0.0)
+    den = xp.sqrt(var_x * var_y)
+    return num / xp.maximum(den, 1e-12)

@@ -12,8 +12,23 @@ one compilation per distinct wave shape, reused forever after: the
 ``compile_count`` attribute counts actual traces and the serving CI lane
 asserts it equals the number of distinct shapes served.
 
-Scoring rides along: a request that carries ``targets`` gets its per-target
-Pearson r (the paper's §4.1 metric) computed on the unpadded rows.
+Two serving refinements ride on the same fixed-shape contract:
+
+* **Wave-shape bucketing** — ``wave_buckets=(32, 128, 512)`` picks each
+  wave's shape from a small ladder by the rows left to serve (largest
+  bucket while full waves remain, then the smallest bucket that swallows
+  the tail) instead of padding everything to one shape.  Each bucket
+  compiles once; mixed small/large traffic stops paying the big shape's
+  pad fraction.  ``ServiceStats.per_bucket`` records waves/rows/pad per
+  shape so the pad economics are observable (``BENCH_serving.json``).
+* **Fused scoring** — a request that carries ``targets`` is served by a
+  second compiled program that emits, next to the predictions, the five
+  per-target Pearson sums of the wave (``kernels.pearsonr`` running
+  sums, masked to the valid rows).  The host accumulates the ``(5, t)``
+  sums across the request's waves in float64 and finalises r with the
+  kernel's formula (``ops.pearson_r_from_sums``) — score-heavy
+  evaluation traffic never re-reads the ``(rows, t)`` predictions on the
+  host (the paper's §4.1 metric at one extra ``O(t)`` hop).
 """
 from __future__ import annotations
 
@@ -53,29 +68,53 @@ class ServiceStats:
     rows: int = 0                        # real (unpadded) rows served
     pad_rows: int = 0                    # zero rows added to fill waves
     requests: int = 0
+    # Per wave shape actually flown: {wave_rows: {"waves", "rows",
+    # "pad_rows"}} — the observable pad economics of bucketing.
+    per_bucket: dict = dataclasses.field(default_factory=dict)
+
+    def record_wave(self, wave_rows: int, real: int) -> None:
+        b = self.per_bucket.setdefault(
+            wave_rows, {"waves": 0, "rows": 0, "pad_rows": 0})
+        b["waves"] += 1
+        b["rows"] += real
+        b["pad_rows"] += wave_rows - real
+        self.waves += 1
+        self.pad_rows += wave_rows - real
 
 
 class EncoderService:
     """Micro-batching wave server over an ``EncoderRegistry``.
 
-    >>> service = EncoderService(registry, wave_rows=128)
+    >>> service = EncoderService(registry, wave_buckets=(32, 128))
     >>> results = service.serve([PredictRequest("sub-01", X1),
     ...                          PredictRequest("sub-02", X2, targets=Y2)])
 
     Requests for the same model are packed together (their rows
     concatenated before waving), so many small concurrent requests cost
-    the same compiled program as one large one.  ``serve(...,
-    wave_rows=...)`` overrides the wave shape per call — each distinct
-    shape compiles exactly once per service lifetime.
+    the same compiled program as one large one.  Wave shapes come from
+    ``wave_buckets`` when given (2–3 ladder sizes, each compiled once,
+    picked per wave by the rows remaining) or the single ``wave_rows``
+    otherwise; ``serve(..., wave_rows=...)`` pins one shape per call.
+    Every distinct (program, wave shape) pair compiles exactly once per
+    service lifetime — ``compile_count`` counts actual traces.
     """
 
     def __init__(self, registry: EncoderRegistry, *, wave_rows: int = 128,
+                 wave_buckets: Sequence[int] | None = None,
                  return_predictions: bool = True):
         import jax
         import jax.numpy as jnp
 
         self.registry = registry
+        if wave_rows < 1:
+            raise ServiceError(f"wave_rows must be >= 1, got {wave_rows}")
         self.wave_rows = wave_rows
+        if wave_buckets is not None:
+            wave_buckets = tuple(sorted({int(b) for b in wave_buckets}))
+            if not wave_buckets or wave_buckets[0] < 1:
+                raise ServiceError(f"wave_buckets must be positive ints, "
+                                   f"got {wave_buckets}")
+        self.wave_buckets = wave_buckets
         self.return_predictions = return_predictions
         self.compile_count = 0
         self.stats = ServiceStats()
@@ -89,19 +128,71 @@ class EncoderService:
             P = jnp.matmul(Xs, W, preferred_element_type=jnp.float32)
             return P * sd_y + mu_y
 
+        def _predict_score(X, Yt, n_valid, W, mu_x, sd_x, mu_y, sd_y):
+            # The scoring wave: predictions PLUS the five Pearson running
+            # sums of the wave's valid rows, so score-heavy traffic never
+            # pays a second host-side pass over (rows, t) predictions.
+            # Pad rows must be masked — a padded feature row predicts the
+            # de-standardized zero-vector response, NOT zero — while the
+            # zero-padded targets already add nothing to any sum.
+            self.compile_count += 1
+            from repro.kernels import ops
+            Xs = (X - mu_x) / sd_x
+            P = jnp.matmul(Xs, W, preferred_element_type=jnp.float32)
+            P = P * sd_y + mu_y
+            valid = (jnp.arange(X.shape[0]) < n_valid)[:, None]
+            sums = ops.pearson_sums(Yt, jnp.where(valid, P, 0.0))
+            return P, sums
+
         self._predict = jax.jit(_predict)
+        self._predict_score = jax.jit(_predict_score)
+
+    # -- wave planning -------------------------------------------------------
+    def _plan_waves(self, n_rows: int, wave_rows: int | None) -> list[int]:
+        """Wave shapes covering ``n_rows``: the pinned single shape, or a
+        bucket-ladder plan — the largest bucket while full waves remain,
+        then the min-pad cover of the tail (a single bucket that swallows
+        it, or the greedy descending ladder when that pads less — e.g. a
+        33-row tail on (32, 128) flies 32+32, pad 31, not 128, pad 95);
+        equal pad prefers the single wave (fewer dispatches)."""
+        if wave_rows is not None or self.wave_buckets is None:
+            w = wave_rows if wave_rows is not None else self.wave_rows
+            return [w] * -(-n_rows // w)
+        big = self.wave_buckets[-1]
+        sizes = [big] * (n_rows // big)
+        tail = n_rows - big * len(sizes)
+        if not tail:
+            return sizes
+        single = [next(b for b in self.wave_buckets if b >= tail)]
+        ladder, rem = [], tail
+        for b in reversed(self.wave_buckets):
+            take = rem // b
+            ladder += [b] * take
+            rem -= b * take
+        if rem:
+            ladder.append(self.wave_buckets[0])
+        return sizes + (ladder if sum(ladder) < single[0] else single)
+
+    def _pad(self, block: np.ndarray, rows: int) -> np.ndarray:
+        pad = rows - block.shape[0]
+        if not pad:
+            return block
+        return np.concatenate(
+            [block, np.zeros((pad, block.shape[1]), np.float32)])
 
     # -- serving -------------------------------------------------------------
     def serve(self, requests: Sequence[PredictRequest], *,
               wave_rows: int | None = None) -> list[PredictResult]:
         import jax.numpy as jnp
 
-        from repro.core import scoring
+        from repro.kernels import ops
 
-        if wave_rows is None:
-            wave_rows = self.wave_rows
-        if wave_rows < 1:
+        if wave_rows is not None and wave_rows < 1:
             raise ServiceError(f"wave_rows must be >= 1, got {wave_rows}")
+        # The largest shape this call may fly — what the residency account
+        # must be charged at.
+        max_wave = wave_rows if wave_rows is not None else (
+            self.wave_buckets[-1] if self.wave_buckets else self.wave_rows)
         # Micro-batch: group request indices per model, preserving arrival
         # order within each model's queue.
         groups: dict[str, list[int]] = {}
@@ -119,7 +210,7 @@ class EncoderService:
             p, t = self.registry.bundle(model).shape
             # A model whose bundle could never fit the budget at this wave
             # size dooms the batch — refuse before ANY model's compute.
-            self.registry.ensure_servable(model, wave_rows=wave_rows)
+            self.registry.ensure_servable(model, wave_rows=max_wave)
             blocks = []
             for i in idxs:
                 feats = np.asarray(requests[i].features, np.float32)
@@ -136,52 +227,86 @@ class EncoderService:
                 blocks.append(feats)
             prepared[model] = blocks
 
-        # Pass 2 — load (LRU touch, residency charged at the wave size
+        # Pass 2 — load (LRU touch, residency charged at the largest wave
         # actually flown), wave, and serve each model's packed rows.
         results: list[PredictResult | None] = [None] * len(requests)
         for model, idxs in groups.items():
-            blocks = prepared[model]
-            entry = self.registry.get(model, wave_rows=wave_rows)
-            p, t = entry.bundle.shape
-            rows = np.concatenate(blocks) if len(blocks) > 1 else blocks[0]
-            n_real = rows.shape[0]
+            block_of = dict(zip(idxs, prepared[model]))
+            entry = self.registry.get(model, wave_rows=max_wave)
+            enc_args = (entry.weights, entry.mu_x, entry.sd_x,
+                        entry.mu_y, entry.sd_y)
+            # Scored requests fly their own waves (their (5, t) Pearson
+            # sums are per request); plain requests pack together.
+            plain = [i for i in idxs if requests[i].targets is None]
+            scored = [i for i in idxs if requests[i].targets is not None]
 
             # Enqueue every wave before pulling any result to host: JAX's
-            # async dispatch overlaps the compiled predicts with the
+            # async dispatch overlaps the compiled programs with the
             # host-side padding of subsequent chunks.
-            parts, counts = [], []
-            for lo in range(0, n_real, wave_rows):
-                chunk = rows[lo:lo + wave_rows]
-                pad = wave_rows - chunk.shape[0]
-                if pad:                                # fixed-shape wave
-                    chunk = np.concatenate(
-                        [chunk, np.zeros((pad, p), np.float32)])
-                    self.stats.pad_rows += pad
-                parts.append(self._predict(jnp.asarray(chunk),
-                                           entry.weights,
-                                           entry.mu_x, entry.sd_x,
-                                           entry.mu_y, entry.sd_y))
-                counts.append(wave_rows - pad)
-                self.stats.waves += 1
-            host = [np.asarray(o)[:c] for o, c in zip(parts, counts)]
-            preds = np.concatenate(host) if len(host) > 1 else host[0]
-            self.stats.rows += n_real
-            self.stats.requests += len(idxs)
+            plain_parts, plain_counts = [], []
+            if plain:
+                rows = (np.concatenate([block_of[i] for i in plain])
+                        if len(plain) > 1 else block_of[plain[0]])
+                lo = 0
+                for w in self._plan_waves(rows.shape[0], wave_rows):
+                    chunk = self._pad(rows[lo:lo + w], w)
+                    real = min(w, rows.shape[0] - lo)
+                    plain_parts.append(self._predict(
+                        jnp.asarray(chunk), *enc_args))
+                    plain_counts.append(real)
+                    self.stats.record_wave(w, real)
+                    lo += w
+            per_scored: dict[int, tuple[list, list, list]] = {}
+            for i in scored:
+                block = block_of[i]
+                Yt = np.asarray(requests[i].targets, np.float32)
+                parts, sums, counts = [], [], []
+                lo = 0
+                for w in self._plan_waves(block.shape[0], wave_rows):
+                    real = min(w, block.shape[0] - lo)
+                    P, S = self._predict_score(
+                        jnp.asarray(self._pad(block[lo:lo + w], w)),
+                        jnp.asarray(self._pad(Yt[lo:lo + w], w)),
+                        np.int32(real), *enc_args)
+                    parts.append(P)
+                    sums.append(S)
+                    counts.append(real)
+                    self.stats.record_wave(w, real)
+                    lo += w
+                per_scored[i] = (parts, sums, counts)
 
+            # Pull to host and reassemble in arrival order.
+            host = [np.asarray(o)[:c]
+                    for o, c in zip(plain_parts, plain_counts)]
+            preds = (np.concatenate(host) if len(host) > 1
+                     else host[0] if host else None)
             pos = 0
-            for i, block in zip(idxs, blocks):
-                req = requests[i]
-                pred_i = preds[pos:pos + block.shape[0]]
-                pos += block.shape[0]
-                r = None
-                if req.targets is not None:
-                    Yt = np.asarray(req.targets, np.float32)
-                    r = np.asarray(scoring.pearson_r(jnp.asarray(Yt),
-                                                     jnp.asarray(pred_i)))
+            for i in plain:
+                m = block_of[i].shape[0]
                 results[i] = PredictResult(
                     model=model,
-                    predictions=pred_i if self.return_predictions else None,
-                    pearson_r=r)
+                    predictions=(preds[pos:pos + m]
+                                 if self.return_predictions else None))
+                pos += m
+                self.stats.rows += m
+            for i in scored:
+                parts, sums, counts = per_scored[i]
+                n_real = sum(counts)
+                # Accumulate the five per-target sums across the request's
+                # waves in float64, then finalise with the kernel formula
+                # — one O(t) hop instead of an O(rows·t) host re-read.
+                total = np.zeros(np.shape(sums[0]), np.float64)
+                for S in sums:
+                    total += np.asarray(S, np.float64)
+                r = np.asarray(ops.pearson_r_from_sums(total, n_real))
+                pred_i = None
+                if self.return_predictions:
+                    hp = [np.asarray(o)[:c] for o, c in zip(parts, counts)]
+                    pred_i = np.concatenate(hp) if len(hp) > 1 else hp[0]
+                results[i] = PredictResult(model=model, predictions=pred_i,
+                                           pearson_r=r)
+                self.stats.rows += n_real
+            self.stats.requests += len(idxs)
         return results                                 # arrival order
 
 

@@ -285,8 +285,15 @@ def test_service_micro_batches_and_matches_predict(fitted, tmp_path):
     assert np.array_equal(got, np.asarray(enc.predict(X)))
     # 160 rows → 3 waves of 64 with 32 pad rows.
     assert svc.stats.waves == 3 and svc.stats.pad_rows == 32
-    assert svc.compile_count == 1
-    # Scoring rides along on the unpadded rows (paper §4.1 metric).
+    # One trace for the plain predict, one for the fused scoring wave —
+    # request traffic and model count must not add more.
+    assert svc.compile_count == 2
+    svc.serve([PredictRequest("m", Xn[:5]),
+               PredictRequest("m", Xn[:5], targets=np.asarray(Y)[:5])])
+    assert svc.compile_count == 2
+    # Scoring is fused into the compiled wave (five running sums per
+    # wave, finalised from the accumulated sums) and matches the
+    # host-side §4.1 metric on the unpadded rows.
     from repro.core import scoring
     ref_r = np.asarray(scoring.pearson_r(Y[37:90],
                                          enc.predict(X[37:90])))
@@ -307,6 +314,75 @@ def test_service_one_compile_per_wave_shape(tmp_path):
     assert svc.compile_count == 1                 # reused across calls
     svc.serve([PredictRequest("b", X[:10])], wave_rows=16)
     assert svc.compile_count == 2                 # new shape → one more
+
+
+def test_service_wave_bucketing_cuts_pad(tmp_path):
+    """wave_buckets picks the wave shape by the rows remaining: full
+    waves at the largest bucket, the tail at the smallest that fits —
+    each bucket compiled once, pad fraction tracked per bucket."""
+    paths = _save_fleet(tmp_path, 1)
+    reg = EncoderRegistry()
+    reg.add("m", paths[0])
+    svc = EncoderService(reg, wave_buckets=(16, 64))
+    X = np.asarray(_problem(seed=60, n=160)[0])
+    out = svc.serve([PredictRequest("m", X[:70]),
+                     PredictRequest("m", X[70:140])])
+    got = np.concatenate([r.predictions for r in out])
+    # 140 packed rows → 64 + 64 + tail 12 in a 16-wave (pad 4), instead
+    # of three 64-waves (pad 52) under a single fixed shape.
+    assert svc.stats.per_bucket[64] == {"waves": 2, "rows": 128,
+                                        "pad_rows": 0}
+    assert svc.stats.per_bucket[16] == {"waves": 1, "rows": 12,
+                                        "pad_rows": 4}
+    assert svc.stats.pad_rows == 4
+    assert svc.compile_count == 2                 # one per bucket used
+    enc = EncoderBundle.open(paths[0]).load_encoder()
+    assert np.array_equal(got, np.asarray(enc.predict(X[:140])))
+    # Same buckets again: no new traces; a small batch uses only the
+    # small bucket (no new compile either — shape already traced).
+    svc.serve([PredictRequest("m", X[:10])])
+    assert svc.compile_count == 2
+    assert svc.stats.per_bucket[16]["waves"] == 2
+    with pytest.raises(ServiceError, match="wave_buckets"):
+        EncoderService(reg, wave_buckets=(0, 8))
+    with pytest.raises(ServiceError, match="wave_rows"):
+        EncoderService(reg, wave_rows=0)
+    # Tail planning is min-pad: a 33-row tail on (32, 128) flies two
+    # 32-row waves (pad 31), not one 128-row wave (pad 95); a 12-row tail
+    # on (16, 64) prefers the single 16-row wave over ladder-descending.
+    svc2 = EncoderService(reg, wave_buckets=(32, 128))
+    assert svc2._plan_waves(161, None) == [128, 32, 32]
+    assert svc2._plan_waves(120, None) == [128]         # equal pad → fewer
+    assert svc._plan_waves(140, None) == [64, 64, 16]
+
+
+def test_service_fused_scoring_across_waves_and_buckets(tmp_path):
+    """A scored request spanning several waves accumulates the five
+    Pearson sums across its waves; the finalised r matches the host-side
+    reference — including under bucketed wave shapes."""
+    from repro.core import scoring
+
+    paths = _save_fleet(tmp_path, 1)
+    enc = EncoderBundle.open(paths[0]).load_encoder()
+    reg = EncoderRegistry()
+    reg.add("m", paths[0])
+    X, Y = _problem(seed=61, n=150)
+    preds = enc.predict(X)
+    for kw in ({"wave_rows": 32}, {"wave_buckets": (16, 64)}):
+        svc = EncoderService(reg, **kw)
+        out = svc.serve([PredictRequest("m", np.asarray(X),
+                                        targets=np.asarray(Y))])[0]
+        assert np.array_equal(out.predictions, np.asarray(preds))
+        ref_r = np.asarray(scoring.pearson_r(Y, preds))
+        np.testing.assert_allclose(out.pearson_r, ref_r, rtol=1e-5,
+                                   atol=1e-6)
+    # return_predictions=False still scores (the point of the fusion:
+    # evaluation traffic without the (rows, t) prediction pull).
+    svc = EncoderService(reg, wave_rows=32, return_predictions=False)
+    out = svc.serve([PredictRequest("m", np.asarray(X),
+                                    targets=np.asarray(Y))])[0]
+    assert out.predictions is None
+    np.testing.assert_allclose(out.pearson_r, ref_r, rtol=1e-5, atol=1e-6)
 
 
 def test_service_applies_pipeline_standardizer(tmp_path):

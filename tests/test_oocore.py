@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.core import foldstats, ridge
 from repro.core.ridge import RidgeCVConfig
-from repro.data.store import RunStore, StoreError
+from repro.data.store import ChunkPrefetcher, RunStore, StoreError
 from repro.encoding import BrainEncoder, EncoderConfig, pipeline, resolve
 from repro.encoding.dispatch import estimated_resident_bytes
 
@@ -149,6 +149,198 @@ if HAVE_HYPOTHESIS:
         if n_folds > n or n_shards > n:
             return
         _check_invariance(n, n_folds, chunk, n_shards, seed)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-shape masked update: ONE compile per stream, however the chunks cut
+# ---------------------------------------------------------------------------
+
+def test_chunk_update_compiles_once_per_stream():
+    """The whole-stream trace count is 1 for a fresh signature and 0 for a
+    repeat — independent of fold alignment: 1-row chunks, fold-misaligned
+    chunks, and ragged tails all reuse the one masked program (the eager
+    per-segment path compiled one matmul per distinct segment length)."""
+    X, Y = _make_problem(20, 53, 11, 3)
+    n, k = 53, 4
+    for chunk in (1, 7, 17):          # 1-row, fold-misaligned, ragged tail
+        before = foldstats.chunk_update_compile_count()
+        foldstats.compute_chunked(_chunk_stream(X, Y, 0, n, chunk), n, k,
+                                  chunk_rows=chunk)
+        assert foldstats.chunk_update_compile_count() - before == 1, chunk
+        before = foldstats.chunk_update_compile_count()
+        foldstats.compute_chunked(_chunk_stream(X, Y, 0, n, chunk), n, k,
+                                  chunk_rows=chunk)
+        assert foldstats.chunk_update_compile_count() - before == 0, chunk
+
+
+def test_chunk_update_compiles_once_across_shards():
+    """All 8 shard windows share one program signature when chunk_rows is
+    pinned — shard boundaries cutting folds add masks, not traces."""
+    X, Y = _make_problem(21, 53, 11, 3)
+    n, k, chunk = 53, 4, 5
+    before = foldstats.chunk_update_compile_count()
+    streams = [_chunk_stream(X, Y, lo, hi, chunk)
+               for lo, hi in foldstats.shard_row_ranges(n, 8)]
+    foldstats.compute_sharded_chunked(streams, n, k, chunk_rows=chunk)
+    assert foldstats.chunk_update_compile_count() - before == 1
+
+
+# ---------------------------------------------------------------------------
+# Prefetching reader: bit-identical, exception-safe, shuts down cleanly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [np.float32, "bfloat16"])
+def test_prefetch_stream_bit_identical(make_run_store, dtype):
+    """Prefetched chunks are the synchronous iterator's, bit for bit —
+    f32 and bf16-as-u16 storage, including run-straddling and ragged
+    chunks and windowed (sharded) streams."""
+    if dtype == "bfloat16":
+        X, Y = _make_problem(22, 87, 6, 4, dtype=jnp.bfloat16)
+        X, Y = np.asarray(X), np.asarray(Y)
+    else:
+        X, Y = _make_problem(22, 87, 6, 4)
+    store = make_run_store(X, Y, n_runs=3)
+    for chunk, rr in ((13, None), (29, (11, 70)), (87, None)):
+        sync = list(store.iter_chunks(chunk, row_range=rr))
+        pf = store.iter_chunks(chunk, row_range=rr, prefetch=True)
+        got = [(x.copy(), y.copy()) for x, y in pf]
+        assert len(got) == len(sync)
+        for (xs, ys), (xp, yp) in zip(sync, got):
+            assert xs.dtype == xp.dtype
+            np.testing.assert_array_equal(np.asarray(xs, np.float32),
+                                          np.asarray(xp, np.float32))
+            np.testing.assert_array_equal(np.asarray(ys, np.float32),
+                                          np.asarray(yp, np.float32))
+        assert pf.stats.chunks == len(sync)
+        assert pf.stats.bytes_staged > 0
+
+
+@pytest.mark.parametrize("y_offset", [0.0, 3.0])
+def test_fit_store_prefetch_bit_identical_lambda_and_weights(
+        make_run_store, y_offset):
+    """Prefetch is purely a wall-time knob: λ selection AND weights are
+    bit-identical with it on or off (both feed the same fixed-shape
+    compiled update), and the streamed fit matches the in-memory λ."""
+    X, Y = _make_problem(23, 310, 24, 12, y_offset=y_offset)
+    store = make_run_store(X, Y, n_runs=3, n_folds=4)
+    fits = {}
+    for prefetch in (True, False):
+        enc = BrainEncoder(n_folds=4, device_memory_budget=1,
+                           chunk_rows=37, prefetch=prefetch).fit(store=store)
+        assert enc.report_.decision.method == "chunked"
+        assert enc.stream_stats_["prefetch"] is prefetch
+        assert enc.stream_stats_["compile_count"] <= 1  # 0 on a warm cache
+        fits[prefetch] = enc
+    assert (fits[True].report_.best_lambda[0]
+            == fits[False].report_.best_lambda[0])
+    np.testing.assert_array_equal(np.asarray(fits[True].weights_),
+                                  np.asarray(fits[False].weights_))
+    ref = BrainEncoder(n_folds=4).fit(jnp.asarray(X), jnp.asarray(Y))
+    assert fits[True].report_.best_lambda[0] == ref.report_.best_lambda[0]
+
+
+def test_fit_store_prefetch_sharded_lambda_parity(make_run_store):
+    """Shard counts {1, 2, 8} with prefetch on or off all select the
+    identical λ: prefetch is bit-identical per shard window, and the
+    shard split only changes the (Chan) combine tree."""
+    X, Y = _make_problem(24, 290, 16, 8)
+    store = make_run_store(X, Y, n_runs=3, n_folds=4)
+    cfg = RidgeCVConfig(n_folds=4)
+    lams = set()
+    for shards in (1, 2, 8):
+        for prefetch in (True, False):
+            streams = [store.iter_chunks(41, row_range=(lo, hi),
+                                         prefetch=prefetch)
+                       for lo, hi in foldstats.shard_row_ranges(290, shards)]
+            stats = foldstats.compute_sharded_chunked(streams, 290, 4,
+                                                      chunk_rows=41)
+            lams.add(float(ridge.ridge_cv_from_stats(stats, cfg)
+                           .best_lambda))
+    assert len(lams) == 1
+
+
+def test_prefetch_reader_exception_propagates(make_run_store, monkeypatch):
+    """A reader-thread failure re-raises in the consumer and the thread
+    shuts down (no hung fit, no zombie reader)."""
+    X, Y = _make_problem(25, 60, 6, 4)
+    store = make_run_store(X, Y, n_runs=3)
+    real_mmap = store._mmap
+
+    def broken(r):
+        if r.row_offset > 0:
+            raise OSError("disk pulled mid-stream")
+        return real_mmap(r)
+
+    monkeypatch.setattr(store, "_mmap", broken)
+    pf = store.iter_chunks(10, prefetch=True)
+    with pytest.raises(OSError, match="disk pulled"):
+        for _ in pf:
+            pass
+    assert pf._thread is None                     # joined by close()
+    # The streaming fit surfaces the same error instead of hanging.
+    def always_broken(r):
+        raise OSError("gone")
+
+    monkeypatch.setattr(store, "_mmap", always_broken)
+    with pytest.raises(OSError, match="gone"):
+        BrainEncoder(n_folds=5, device_memory_budget=1).fit(store=store)
+
+
+def test_prefetch_close_on_early_abort(make_run_store):
+    """Abandoning a prefetched stream mid-fit stops the reader thread and
+    releases the staging buffers — close() is idempotent."""
+    X, Y = _make_problem(26, 80, 6, 4)
+    store = make_run_store(X, Y, n_runs=2)
+    pf = store.iter_chunks(7, prefetch=True)
+    next(pf)                                      # reader is now running
+    thread = pf._thread
+    assert thread is not None and thread.is_alive()
+    pf.close()
+    assert not thread.is_alive() and pf._thread is None
+    assert pf._bufs is None
+    pf.close()                                    # idempotent
+    with pytest.raises(StopIteration):            # closed stream is done
+        next(pf)
+    # The compute_chunked consumer closes on its own failure path too.
+    pf2 = store.iter_chunks(7, prefetch=True)
+    with pytest.raises(ValueError, match="row_stop"):
+        foldstats.compute_chunked(pf2, 40, 4)     # n_total lies: overrun
+    assert pf2._thread is None
+
+
+def test_prefetch_yields_read_only_views(make_run_store):
+    X, Y = _make_problem(27, 30, 4, 3)
+    store = make_run_store(X, Y)
+    pf = store.iter_chunks(10, prefetch=True)
+    X_c, _ = next(pf)
+    with pytest.raises(ValueError):
+        X_c[0, 0] = 1.0
+    pf.close()
+    with pytest.raises(ValueError, match="depth"):
+        store.iter_chunks(10, prefetch=True, prefetch_depth=0)
+
+
+def test_iter_chunks_aligned_dtype_returns_memmap_view(make_run_store):
+    """No host copy for the aligned-dtype case: chunks inside one run are
+    views of the memmap itself, with or without an explicit dtype that
+    matches the stored one."""
+    X, Y = _make_problem(28, 40, 4, 3)
+    store = make_run_store(X, Y, n_runs=2)       # runs of 20 rows
+
+    def is_memmap_view(a):
+        while a is not None:
+            if isinstance(a, np.memmap):
+                return True
+            a = getattr(a, "base", None)
+        return False
+
+    for kwargs in ({}, {"dtype": np.float32}, {"dtype": "float32"}):
+        X_c, Y_c = next(store.iter_chunks(10, **kwargs))
+        assert is_memmap_view(X_c) and not X_c.flags.owndata, kwargs
+        assert is_memmap_view(Y_c) and not Y_c.flags.owndata, kwargs
+    # A real cast still converts (and therefore allocates a fresh array).
+    X_c, _ = next(store.iter_chunks(10, dtype=np.float64))
+    assert X_c.dtype == np.float64 and X_c.flags.owndata
 
 
 # ---------------------------------------------------------------------------
