@@ -25,12 +25,18 @@ streamed/in-memory wall ratio + the prefetch overlap gain, and writes
 
     {"rss_cap_mb": ..., "rows": [{"name", "n", "p", "t",
       "array_mb",              # n·(p+t)·4 — what in-memory must hold
-      "inmem": {"wall_s", "peak_rss_mb", "best_lambda"},
-      "streamed": {..., "read_stall_s", "compute_stall_s",
-                   "compile_count"},
+      "inmem": {"wall_s", "peak_rss_mb", "best_lambda", "roofline"},
+      "streamed": {..., "read_stall_s", "compute_stall_s", "bytes_staged",
+                   "compile_count", "roofline"},
       "streamed_nopf": {...}, "sharded": {...},
       "streamed_over_inmem": W_s/W_i, "overlap_gain": W_nopf/W_s,
       "lambda_match": true, "streamed_under_cap": true}, ...]}
+
+Each variant also carries a ``roofline`` placement
+(``repro.launch.roofline_report.encoding_roofline``): achieved FLOP/byte
+against the host envelope (``--peak-gflops``/``--mem-bw-gbs``), with
+bytes = the actually staged traffic for the streaming variants —
+reported, never gated.
 
 ``--smoke`` runs one small shape (CI parity guard; prints the overlap
 ratios — reported, not gated, CPU wall times are load-sensitive).
@@ -116,6 +122,7 @@ def run_variant(variant: str, store_path: str, n_folds: int,
         res.update(
             read_stall_s=round(stream["read_stall_s"], 2),
             compute_stall_s=round(stream["compute_stall_s"], 2),
+            bytes_staged=int(stream["bytes_staged"]),
             compile_count=stream["compile_count"])
     return res
 
@@ -143,21 +150,39 @@ def spawn_variant(variant: str, store_path: str, n_folds: int,
 
 def bench_shape(name: str, n: int, p: int, t: int, chunk_rows: int,
                 n_folds: int, workdir: str, variants: list[str],
-                rss_cap_mb: float) -> dict:
+                rss_cap_mb: float, peak_flops: float,
+                mem_bw: float) -> dict:
     store_path = os.path.join(workdir, f"{name}_{n}x{p}x{t}")
     print(f"[{name}] materialising store at {store_path} ...", flush=True)
     _ensure_store(store_path, n, p, t)
     row: dict = {"name": name, "n": n, "p": p, "t": t,
                  "chunk_rows": chunk_rows,
                  "array_mb": round(n * (p + t) * 4 / 2**20, 1)}
+    from repro.launch.roofline_report import encoding_roofline
     for variant in variants:
         res = spawn_variant(variant, store_path, n_folds, chunk_rows)
         row[variant] = {k: v for k, v in res.items() if k != "variant"}
+        # Roofline placement (reported, never gated): achieved FLOP/byte
+        # against the host envelope, bytes = actual staged traffic for the
+        # streaming variants, nominal array bytes for in-memory.
+        roof = encoding_roofline(
+            n, p, t, n_folds=n_folds, wall_s=res["wall_s"],
+            bytes_staged=res.get("bytes_staged"),
+            peak_flops=peak_flops, mem_bw=mem_bw)
+        row[variant]["roofline"] = {
+            "flop_per_byte": round(roof["flop_per_byte"], 2),
+            "peak_flop_per_byte": round(roof["peak_flop_per_byte"], 2),
+            "peak_fraction": round(roof["peak_fraction"], 4),
+            "bottleneck": roof["bottleneck"]}
         extra = ""
         if "read_stall_s" in res:
             extra = (f" read_stall={res['read_stall_s']}s "
                      f"compute_stall={res['compute_stall_s']}s "
                      f"compiles={res['compile_count']}")
+        extra += (f" roofline={roof['flop_per_byte']:.1f}/"
+                  f"{roof['peak_flop_per_byte']:.1f} FLOP/B "
+                  f"({roof['peak_fraction'] * 100:.1f}% of peak, "
+                  f"{roof['bottleneck']}-bound)")
         print(f"[{name}] {variant}: {res['wall_s']}s "
               f"rss={res['peak_rss_mb']}MB λ={res['best_lambda']}{extra}",
               flush=True)
@@ -193,6 +218,12 @@ def main() -> None:
                          "lane: the cap would kill it) and enforce the cap")
     ap.add_argument("--rss-cap-mb", type=float, default=1024.0,
                     help="RSS ceiling the streamed variants must stay under")
+    ap.add_argument("--peak-gflops", type=float, default=None,
+                    help="host peak GFLOP/s for the roofline placement "
+                         "(reported, never gated)")
+    ap.add_argument("--mem-bw-gbs", type=float, default=None,
+                    help="host staging bandwidth GB/s for the roofline "
+                         "placement (reported, never gated)")
     ap.add_argument("--workdir", default=None,
                     help="store directory (default: a temp dir)")
     ap.add_argument("--out", default=None)
@@ -213,12 +244,18 @@ def main() -> None:
                 else ["inmem", "streamed", "streamed_nopf", "sharded"])
     workdir = args.workdir or tempfile.mkdtemp(prefix="oocore_bench_")
 
+    from repro.launch.roofline_report import CPU_MEM_BW, CPU_PEAK_FLOPS
+    peak_flops = (args.peak_gflops * 1e9 if args.peak_gflops
+                  else CPU_PEAK_FLOPS)
+    mem_bw = args.mem_bw_gbs * 1e9 if args.mem_bw_gbs else CPU_MEM_BW
+
     rows = []
     for name, n, p, t, chunk_rows in shapes:
         if args.streamed_only and name not in ("tall", "smoke"):
             continue
         rows.append(bench_shape(name, n, p, t, chunk_rows, args.n_folds,
-                                workdir, variants, args.rss_cap_mb))
+                                workdir, variants, args.rss_cap_mb,
+                                peak_flops, mem_bw))
 
     for row in rows:
         if "streamed_over_inmem" in row:
@@ -243,7 +280,10 @@ def main() -> None:
         print(f"# streamed path bounded under {args.rss_cap_mb} MB RSS")
 
     payload = {"n_folds": args.n_folds, "smoke": args.smoke,
-               "rss_cap_mb": args.rss_cap_mb, "rows": rows}
+               "rss_cap_mb": args.rss_cap_mb,
+               "roofline_envelope": {"peak_flops": peak_flops,
+                                     "mem_bw": mem_bw},
+               "rows": rows}
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")

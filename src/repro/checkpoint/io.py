@@ -111,16 +111,34 @@ def _read_manifest(src: str) -> dict:
     return manifest
 
 
-def _load_leaf(src: str, key: str, meta: dict) -> np.ndarray:
+def _load_leaf(src: str, key: str, meta: dict, *,
+               mmap: bool = False) -> np.ndarray:
     path = os.path.join(src, meta["file"])
     if not os.path.exists(path):
         raise CheckpointError(
             f"leaf {key!r}: manifest records {meta['file']} but the file "
             f"is missing under {src}")
-    arr = np.load(path)
+    arr = np.load(path, mmap_mode="r" if mmap else None)
     if meta["dtype"] == "bfloat16":
         arr = arr.view(jnp.bfloat16)
     return arr
+
+
+def load_leaf(ckpt_dir: str, step: int, key: str, *,
+              mmap: bool = False) -> np.ndarray:
+    """Load ONE leaf by its flattened key path.
+
+    ``mmap=True`` returns a read-only memmap view — nothing is paged in
+    until the caller touches it, so a consumer that needs one column
+    shard of a whole-brain weight matrix never faults in the rest.
+    bfloat16 leaves come back viewed as bf16 either way.
+    """
+    src = os.path.join(ckpt_dir, f"step_{step}")
+    manifest = _read_manifest(src)
+    if key not in manifest["leaves"]:
+        raise CheckpointError(
+            f"leaf {key!r} is not recorded in the manifest under {src}")
+    return _load_leaf(src, key, manifest["leaves"][key], mmap=mmap)
 
 
 def load(ckpt_dir: str, step: int) -> dict[str, np.ndarray]:

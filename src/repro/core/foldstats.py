@@ -352,6 +352,18 @@ class FoldStatsAccumulator:
             s += 1
         return onehot, slot_fold
 
+    def _apply(self, Xs, Ys, onehot, slot_fold) -> None:
+        """Apply one fixed-shape padded chunk to the running statistics.
+
+        The single overridable seam of the streaming machinery: subclasses
+        that accumulate a different statistic from the same masked chunks
+        (``repro.wholebrain.ColumnBlockAccumulator``) replace only this —
+        splitting, padding, slot masks, offsets, and the finalize contract
+        stay shared.
+        """
+        self._stats = _FIXED_UPDATE(self._stats, jnp.asarray(Xs),
+                                    jnp.asarray(Ys), onehot, slot_fold)
+
     def update(self, X_chunk: jax.Array, Y_chunk: jax.Array) -> None:
         import numpy as np
         m = X_chunk.shape[0]
@@ -375,8 +387,7 @@ class FoldStatsAccumulator:
                 Xp[:hi - lo], Yp[:hi - lo] = Xs, Ys
                 Xs, Ys = Xp, Yp
             onehot, slot_fold = self._slot_mask(hi - lo)
-            self._stats = _FIXED_UPDATE(self._stats, jnp.asarray(Xs),
-                                        jnp.asarray(Ys), onehot, slot_fold)
+            self._apply(Xs, Ys, onehot, slot_fold)
             self._offset += hi - lo
             lo = hi
         # Synchronize before returning: jnp.asarray's host→device transfer
@@ -573,10 +584,19 @@ class ColumnMoments:
         return np.sqrt(self.m2 / self.count) + eps
 
 
-def validation_scores_from_stats(
+def validation_scores_per_target(
         stats: FoldStats, f: int, Q: jax.Array, evals: jax.Array,
         C_tr: jax.Array, lambdas: jax.Array, scoring: str) -> jax.Array:
-    """Per-λ validation score of split ``f`` from sufficient statistics.
+    """Per-λ, per-TARGET validation score of split ``f``, shape ``(r, t)``.
+
+    The un-averaged form of ``validation_scores_from_stats`` (which is its
+    mean over targets) — the column-blocked driver (``repro.wholebrain``)
+    needs the per-column scores so it can aggregate across target blocks
+    on the host without ever building a full-``t`` score tensor in one
+    program.  Every contraction is per-column independent, so a column
+    block of this function's output is bit-identical to the same columns
+    of the full-width call (the property the target-block invariance
+    harness locks down).
 
     With ``W_r = Q (Λ+λ_r)⁻¹ QᵀC_tr``, the held-out error needs only the
     fold's own statistics — no validation rows:
@@ -586,9 +606,9 @@ def validation_scores_from_stats(
 
     Everything stays in the eigenbasis, so the per-λ work is diagonal plus
     one ``(p×p)·(p×t)`` contraction per λ — the mutualisation of Eq. 5
-    extended to the scoring itself.  Returns mean score across targets,
-    shape ``(r,)`` — ``"r2"`` and ``"r"`` match ``ridge._score`` exactly in
-    exact arithmetic.
+    extended to the scoring itself.  ``"r2"`` and ``"r"`` match
+    ``ridge._score`` exactly in exact arithmetic (after the mean the
+    wrapper below takes).
 
     Precision caveat: unlike the row-based CV loop (which centres the
     validation rows before any large contraction), statistics can only be
@@ -630,10 +650,22 @@ def validation_scores_from_stats(
         # with only the scalar fold means meeting at full magnitude.
         mean_term = m * (s_hat / m - mu) ** 2
         ss_res = m2 - 2.0 * c_xy + c_p2 + mean_term
-        return jnp.mean(1.0 - ss_res / (m2 + 1e-12), axis=1)
+        return 1.0 - ss_res / (m2 + 1e-12)
     # Pearson r from centred moments per target.
     den = jnp.sqrt(jnp.maximum(m2 * c_p2, 0.0)) + 1e-12
-    return jnp.mean(c_xy / den, axis=1)
+    return c_xy / den
+
+
+def validation_scores_from_stats(
+        stats: FoldStats, f: int, Q: jax.Array, evals: jax.Array,
+        C_tr: jax.Array, lambdas: jax.Array, scoring: str) -> jax.Array:
+    """Per-λ validation score of split ``f`` from sufficient statistics —
+    the mean over targets of ``validation_scores_per_target``, shape
+    ``(r,)``.  See that function for the algebra and the precision caveat;
+    ``"r2"`` and ``"r"`` match ``ridge._score`` exactly in exact
+    arithmetic."""
+    return jnp.mean(validation_scores_per_target(
+        stats, f, Q, evals, C_tr, lambdas, scoring), axis=1)
 
 
 __all__: Sequence[str] = (
@@ -641,4 +673,5 @@ __all__: Sequence[str] = (
     "chunk_update_compile_count", "combine", "compute", "compute_chunked",
     "compute_sharded_chunked", "fold_bounds", "fold_of_rows",
     "partial_fold_stats", "shard_row_ranges", "validation_scores_from_stats",
+    "validation_scores_per_target",
 )

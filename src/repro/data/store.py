@@ -158,6 +158,7 @@ class ChunkPrefetcher:
 
     def __init__(self, store: "RunStore", chunk_rows: int, *,
                  dtype: np.dtype | None, row_range: tuple[int, int] | None,
+                 col_range: tuple[int, int] | None = None,
                  depth: int = 2):
         if depth < 1:
             raise ValueError(f"prefetch depth must be >= 1, got {depth}")
@@ -165,6 +166,7 @@ class ChunkPrefetcher:
         self._chunk_rows = chunk_rows
         self._dtype = dtype
         self._row_range = row_range
+        self._col_range = col_range
         self._depth = depth
         self.stats = PrefetchStats()
         self._queue: queue.Queue = queue.Queue(maxsize=depth)
@@ -180,10 +182,12 @@ class ChunkPrefetcher:
     def _start(self) -> None:
         dt_x = self._dtype or self._store.dtype_x
         dt_y = self._dtype or self._store.dtype_y
+        clo, chi = (self._col_range if self._col_range is not None
+                    else (0, self._store.t))
         n_buf = self._depth + 2
         self._bufs = [
             (np.empty((self._chunk_rows, self._store.p), dt_x),
-             np.empty((self._chunk_rows, self._store.t), dt_y))
+             np.empty((self._chunk_rows, chi - clo), dt_y))
             for _ in range(n_buf)]
         self._thread = threading.Thread(
             target=self._reader, name="runstore-prefetch", daemon=True)
@@ -210,7 +214,7 @@ class ChunkPrefetcher:
             seq = 0
             for X_c, Y_c in self._store.iter_chunks(
                     self._chunk_rows, dtype=self._dtype,
-                    row_range=self._row_range):
+                    row_range=self._row_range, col_range=self._col_range):
                 if self._stop.is_set():
                     return
                 bx, by = self._bufs[seq % len(self._bufs)]
@@ -462,6 +466,7 @@ class RunStore:
 
     def iter_chunks(self, chunk_rows: int, *, dtype: np.dtype | str | None
                     = None, row_range: tuple[int, int] | None = None,
+                    col_range: tuple[int, int] | None = None,
                     prefetch: bool = False, prefetch_depth: int = 2
                     ) -> Iterator[tuple[np.ndarray, np.ndarray]]:
         """Yield ``(X_chunk, Y_chunk)`` row batches in global row order.
@@ -473,6 +478,15 @@ class RunStore:
         rows at most — still O(chunk), never O(n)).  ``row_range=(lo, hi)``
         restricts the stream to a global row window — the hook the sharded
         accumulation uses to give each shard its own contiguous slice.
+
+        ``col_range=(clo, chi)`` restricts ``Y`` to a target-column window:
+        chunks arrive as ``(X (m, p), Y (m, chi−clo))`` with only the
+        window's pages ever touched — the target-axis streaming hook
+        (``repro.wholebrain``).  ``col_range=(0, 0)`` yields zero-width
+        ``Y`` chunks, which is how the X-only Gram pass streams the rows
+        without reading one byte of the (much wider) target shards.
+        ``X`` is never column-windowed: the whole point of the regime is
+        p ≪ t.
 
         ``prefetch=True`` returns a ``ChunkPrefetcher`` instead: a
         background reader stages the NEXT chunk into a reusable host
@@ -490,14 +504,21 @@ class RunStore:
         if not 0 <= lo <= hi <= self.n_total:
             raise ValueError(f"row_range {row_range} outside "
                              f"[0, {self.n_total}]")
+        if col_range is not None:
+            clo, chi = col_range
+            if not 0 <= clo <= chi <= (self.t or 0):
+                raise ValueError(f"col_range {col_range} outside "
+                                 f"[0, {self.t}]")
         dtype = _normalize_dtype(dtype)
         if prefetch:
             return ChunkPrefetcher(self, chunk_rows, dtype=dtype,
-                                   row_range=(lo, hi), depth=prefetch_depth)
-        return self._iter_chunks_sync(chunk_rows, dtype, lo, hi)
+                                   row_range=(lo, hi), col_range=col_range,
+                                   depth=prefetch_depth)
+        return self._iter_chunks_sync(chunk_rows, dtype, lo, hi, col_range)
 
     def _iter_chunks_sync(self, chunk_rows: int, dtype: np.dtype | None,
-                          lo: int, hi: int
+                          lo: int, hi: int,
+                          col_range: tuple[int, int] | None = None
                           ) -> Iterator[tuple[np.ndarray, np.ndarray]]:
         pending_x: list[np.ndarray] = []
         pending_y: list[np.ndarray] = []
@@ -514,6 +535,10 @@ class RunStore:
             if r.row_end <= lo or r.row_offset >= hi:
                 continue
             Xm, Ym = self._mmap(r)
+            if col_range is not None:
+                # Column window of the memmap: a strided VIEW — zero-copy,
+                # and reads fault in only the window's pages per row.
+                Ym = Ym[:, col_range[0]:col_range[1]]
             s_lo = max(lo, r.row_offset) - r.row_offset
             s_hi = min(hi, r.row_end) - r.row_offset
             pos = s_lo

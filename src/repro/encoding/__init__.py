@@ -83,6 +83,47 @@ invariants make that free of semantic cost:
 After a streamed fit, ``enc.stream_stats_`` reports the overlap telemetry
 (reader-stall vs compute-stall seconds, chunks, bytes staged, compiles).
 
+Whole-brain target streaming
+----------------------------
+Row streaming bounds the ``n`` terms but still accumulates the full
+``(k, p, t)`` fold statistics and solves all ``t`` targets at once — at
+the paper's whole-brain ``t≈264k`` those target-axis arrays are what no
+longer fit.  The third tier (``repro.wholebrain``) streams the TARGET
+axis on top of the row tier: one shared pass accumulates the X-only
+statistics (``G``, ``xsum``, ``count``), then each column block streams
+its own ``(k, p, t_block)`` cross-moments through ONE fixed-shape
+compiled update (ragged tail zero-padded to ``t_pad``), and the CV solve
+reuses the per-fold eigendecompositions of the downdated Grams across
+every block (the paper's Eq. 5 mutualisation, paid ``k+1`` times total,
+not per block).  Peak memory is ``O(p² + p·t_block)`` — independent of
+``t`` — and λ selection + weights stay BIT-identical to the unblocked
+solve (``tests/test_wholebrain.py`` gates this across block widths,
+f32 and bf16)::
+
+    # Transparent: same budget knob — when even the row tier's t-axis
+    # working set (k·p·(p+t) stats + (p, t) solve arrays) breaks the
+    # budget, dispatch escalates to method="colblocked" and picks a
+    # t_block that fits half the budget.  target_block= pins it.
+    enc = BrainEncoder(device_memory_budget=2**30).fit(store=store)
+    print(enc.report_.decision.method)          # "colblocked"
+
+    # Explicit, with streaming artifact writes: weight shards land on
+    # disk as blocks finish — W is NEVER resident all at once.
+    from repro.wholebrain import BundleWriter, fit_wholebrain
+    with BundleWriter("bundles/sub-01_wb", p=p, t=t) as w:
+        res = fit_wholebrain(store, enc.config, t_block=16_384,
+                             writer=w, collect=False)
+        w.commit(config=enc.config, report=report,
+                 lambda_by_target=res.lambda_by_target)
+
+Serving reads the result lazily: ``EncoderBundle`` memory-maps weight
+shards per column window (``load_weight_shard(i, mmap=True)``), and the
+serving registry charges + pages in ONLY the shards a request window
+touches, with LRU eviction at shard granularity.
+``python -m repro.launch.wholebrain`` runs the whole loop on a
+whole-brain-shaped synthetic subject under an RSS cap the unblocked
+path cannot survive (``BENCH_wholebrain.json``).
+
 Fit once, serve many
 --------------------
 A fitted encoder no longer dies with the process: ``save`` persists an
@@ -122,6 +163,10 @@ Modules:
   sharding  — ``ShardingPlan``: mesh build, row rounding, device_put specs
   estimator — ``BrainEncoder`` / ``EncodingReport`` / ``EvaluationReport``
   pipeline  — composable detrend → split → standardize → fit → evaluate
+
+(The target-axis tier itself lives in ``repro.wholebrain``: blocked
+fold statistics, the mutualised column-blocked CV driver, and the
+streaming ``BundleWriter``.)
 """
 from repro.encoding import pipeline  # noqa: F401
 from repro.encoding.config import EncoderConfig  # noqa: F401

@@ -76,6 +76,11 @@ class EncoderConfig:
     # Bounded hand-over queue depth; the reader owns depth + 2 staging
     # buffers of chunk_rows rows each.
     prefetch_depth: int = 2
+    # Target-axis streaming (repro.wholebrain): column-block width of the
+    # blocked CV fit.  None → chosen by dispatch from the memory budget
+    # when even the chunked path's (k, p, p+t) statistics cannot fit
+    # (method="colblocked"); set explicitly to pin the block width.
+    target_block: int | None = None
 
     # --- determinism -------------------------------------------------------
     seed: int = 0

@@ -28,14 +28,21 @@ class DispatchDecision:
     """The resolved execution plan, with the model cost that justified it."""
 
     solver: str              # "ridge" | "mor" | "bmor" | "bmor_dual" | "banded"
-    # Factorisation side "eigh" | "dual", or "chunked": the out-of-core
-    # streamed fold-statistics path (always primal/eigh on the accumulated
-    # Gram — the regime is tall-n, where (p, p) is the small object).
+    # Factorisation side "eigh" | "dual", or one of the streaming tiers:
+    # "chunked" — out-of-core row streaming (fold statistics accumulated
+    # chunk-wise; the regime is tall-n, where (k, p, p+t) is the small
+    # object) — or "colblocked" — row AND target streaming
+    # (repro.wholebrain; the regime is tall-n × wide-t, where even the
+    # (k, p, t) statistics break the budget).
     method: str
     data_shards: int
     target_shards: int
     predicted_cost: float    # §3 fp-mult count on the critical path
     rationale: str
+    # Column-block width of the "colblocked" tier; None for every other
+    # method (kept defaulted so decisions serialized before this field
+    # existed still round-trip through DispatchDecision(**d)).
+    target_block: int | None = None
 
     @property
     def device_count(self) -> int:
@@ -123,6 +130,53 @@ def _chunked_decision(cfg: EncoderConfig, w: RidgeWorkload, resident: int,
                   f"buffers stay resident)")
 
 
+def chunked_stats_bytes(n_folds: int, p: int, t: int,
+                        itemsize: int = 4) -> int:
+    """Resident footprint of the row-streamed tier's accumulated fold
+    statistics: ``G (k, p, p) + C (k, p, t)`` (the ``ysum``/``ysq``
+    vectors are noise next to these).  THIS is what breaks at whole-brain
+    ``t`` even though row streaming already bounded the ``n`` terms."""
+    return n_folds * p * (p + t) * itemsize
+
+
+def pick_target_block(budget: int, n_folds: int, p: int, t: int,
+                      itemsize: int = 4) -> int:
+    """Largest column-block width whose blocked statistics
+    ``k·p·(p + t_block)`` fit in HALF the budget (the other half covers
+    staging buffers, the hoisted eigenbases, and solve temporaries),
+    clamped to ``[2, t]`` — width 1 would break the tier's bitwise
+    column-slice contract (see ``wholebrain.stats.column_blocks``)."""
+    per_col = n_folds * p * itemsize
+    spare = budget // 2 - n_folds * p * p * itemsize
+    return max(2, min(t, spare // max(per_col, 1)))
+
+
+def _colblocked_decision(cfg: EncoderConfig, w: RidgeWorkload, resident: int,
+                         t_axis_bytes: int, t: int) -> DispatchDecision:
+    """Pin the target-axis streaming tier (whole-brain regime)."""
+    t_block = cfg.target_block or pick_target_block(
+        cfg.device_memory_budget, cfg.n_folds, w.p, t)
+    n_blocks = -(-t // t_block)
+    # Same FLOPs as the chunked tier — the Gram is still accumulated once
+    # and the C einsum totals n·p·t across blocks; the per-block cost is
+    # the re-streamed X I/O, which the FLOP model does not price.
+    cost = (complexity.t_w(w) +
+            complexity.t_m(w) + complexity.t_w_folded(w))
+    return DispatchDecision(
+        solver="ridge", method="colblocked", data_shards=1, target_shards=1,
+        predicted_cost=cost, target_block=t_block,
+        rationale=f"the target-axis working set (k·p·(p+t) fold statistics "
+                  f"+ (p, t) solve arrays) = {t_axis_bytes / 2**20:.1f} MB "
+                  f"breaks device_memory_budget = "
+                  f"{cfg.device_memory_budget / 2**20:.1f} MB regardless of "
+                  f"row streaming → column-blocked target streaming: "
+                  f"{n_blocks} block(s) of t_block={t_block} targets, "
+                  f"shared Gram pass + per-block (k, p, t_block) "
+                  f"statistics, eigendecompositions mutualised across "
+                  f"blocks (resident set O(p² + p·t_block), independent "
+                  f"of t={t})")
+
+
 def resolve(cfg: EncoderConfig, n: int, p: int, t: int,
             device_count: int) -> DispatchDecision:
     """Resolve ``cfg.solver`` ("auto" or explicit) into a concrete plan."""
@@ -150,14 +204,39 @@ def resolve(cfg: EncoderConfig, n: int, p: int, t: int,
         # under-estimate by device_count× and let fit(store=...)
         # materialise exactly the arrays the budget was set to prevent.
         resident = estimated_resident_bytes(n, p, t, cfg.target_shards or 1)
+        stats_bytes = chunked_stats_bytes(cfg.n_folds, p, t)
+        # Any fit — in-memory or row-streamed — holds the (k, p, t) fold
+        # statistics plus the (p, t)-sized solve arrays (W, the projected
+        # cross-moments, per-target scores).  At whole-brain t these
+        # t-axis terms break the budget even when the (possibly
+        # downscaled) rows fit, and only column blocking removes them.
+        t_axis_bytes = stats_bytes + 3 * p * t * 4
+        # Blocking only helps when the blocked statistics can actually fit
+        # the half-budget pick_target_block reserves for them; under an
+        # absurdly small budget nothing fits and the sharded row-streamed
+        # tier stays the best-effort plan.
+        colblock_viable = (chunked_stats_bytes(cfg.n_folds, p, 2)
+                           <= cfg.device_memory_budget // 2)
+        streamable = cfg.method != "dual" and cfg.bands is None
         if resident > cfg.device_memory_budget:
-            if cfg.method == "dual" or cfg.bands is not None:
+            if not streamable:
                 raise ValueError(
                     f"resident set {resident} B exceeds device_memory_budget="
                     f"{cfg.device_memory_budget} B but the pinned "
                     f"method/bands ({cfg.method!r}/{cfg.bands}) cannot "
-                    f"stream — the chunked path is primal/eigh only")
+                    f"stream — the streaming paths are primal/eigh only")
+            # Second-tier escalation: row streaming bounds the n terms but
+            # still accumulates (k, p, t) statistics — at whole-brain t
+            # those alone break the budget and the target axis must be
+            # blocked too.  An explicit target_block also opts in.
+            if cfg.target_block is not None or (
+                    t_axis_bytes > cfg.device_memory_budget
+                    and colblock_viable):
+                return _colblocked_decision(cfg, w, resident, t_axis_bytes, t)
             return _chunked_decision(cfg, w, resident, device_count)
+        if streamable and (cfg.target_block is not None or (
+                t_axis_bytes > cfg.device_memory_budget and colblock_viable)):
+            return _colblocked_decision(cfg, w, resident, t_axis_bytes, t)
 
     if solver == "auto":
         if cfg.bands is not None:

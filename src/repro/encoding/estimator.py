@@ -161,6 +161,8 @@ class BrainEncoder:
             self._check_store_folds(store)
             n, p, t = store.shape
             decision = resolve(self.config, n, p, t, jax.device_count())
+            if decision.method == "colblocked":
+                return self._fit_store_colblocked(store, decision, chunk_rows)
             if decision.method == "chunked":
                 return self._fit_store_chunked(store, decision, chunk_rows)
             X, Y = store.load()
@@ -301,6 +303,35 @@ class BrainEncoder:
             data_axis=self.config.data_axis, chunk_rows=chunk_rows)
         self._record_stream_stats(streams, compiles0)
         return self._fit_from_stats(stats, n_total, decision)
+
+    def _fit_store_colblocked(self, store, decision: DispatchDecision,
+                              chunk_rows: int | None) -> "BrainEncoder":
+        """Target-axis streamed fit (``repro.wholebrain``): shared Gram
+        pass + per-block ``(k, p, t_block)`` statistics, eigendecompositions
+        reused across blocks.  λ and ``W`` are bit-identical to the
+        unblocked statistics solve (global-λ mode).
+
+        This transparent route still assembles the host ``(p, t)`` weight
+        matrix for ``report_`` — at true whole-brain scale drive
+        ``wholebrain.fit_wholebrain`` directly with a ``BundleWriter`` so
+        the shards stream to disk instead (``launch/wholebrain.py``).
+        """
+        self._check_chunkable()
+        from repro.wholebrain.solver import fit_wholebrain
+
+        res = fit_wholebrain(store, self.config,
+                             t_block=decision.target_block,
+                             chunk_rows=chunk_rows)
+        self.report_ = EncodingReport(
+            weights=jnp.asarray(res.weights),
+            best_lambda=res.best_lambda,
+            cv_scores=res.cv_scores,
+            lambdas=self.config.lambdas, decision=decision)
+        self.stream_stats_ = {"prefetch": bool(self.config.prefetch),
+                              **res.telemetry,
+                              "compile_count":
+                                  res.telemetry["colblock_compile_delta"]}
+        return self
 
     def _record_stream_stats(self, streams, compiles_before: int) -> None:
         """Aggregate per-stream prefetch telemetry into ``stream_stats_``."""

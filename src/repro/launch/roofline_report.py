@@ -26,6 +26,54 @@ _HINTS = {
 }
 
 
+# Conservative single-socket CPU envelope for the out-of-core ridge bench
+# (one core, f32 FMA): ~50 GFLOP/s compute, ~20 GB/s sustained DRAM/disk
+# staging bandwidth.  Override from the bench CLI when the host is known.
+CPU_PEAK_FLOPS = 50e9
+CPU_MEM_BW = 20e9
+
+
+def encoding_roofline(n: int, p: int, t: int, *, r: int = 11,
+                      n_folds: int = 5, wall_s: float | None = None,
+                      bytes_staged: int | None = None,
+                      peak_flops: float = CPU_PEAK_FLOPS,
+                      mem_bw: float = CPU_MEM_BW) -> dict:
+    """Roofline placement of one out-of-core ridge-CV fit (paper §3 terms).
+
+    Model FLOPs come from the analytic complexity model: the single-pass
+    fold statistics (``n·p²`` Gram + ``n·p·t`` cross-moments,
+    ``t_w_folded``), the mutualised factorisation ``T_M``, and the
+    target application ``T_W`` — ×2 for multiply+add.  Bytes default to
+    the streamed tier's actual staged traffic (``bytes_staged`` from the
+    chunk prefetcher) so the reported arithmetic intensity is
+    *achieved*, not nominal; pass ``wall_s`` to also get the achieved
+    FLOP/s as a fraction of ``peak_flops``.  Purely informational — the
+    benches report these numbers but never gate on them.
+    """
+    from repro.core.complexity import (RidgeWorkload, t_m, t_w, t_w_folded)
+
+    w = RidgeWorkload(n=n, p=p, t=t, r=r, n_folds=n_folds)
+    mults = t_w_folded(w) + float(n) * p * t + t_m(w) + t_w(w)
+    flops = 2.0 * mults
+    nbytes = int(bytes_staged) if bytes_staged else n * (p + t) * 4
+    terms = roofline_terms(flops, nbytes, 0.0, peak_flops=peak_flops,
+                           hbm_bw=mem_bw)
+    out = {
+        "model_flops": flops,
+        "bytes": nbytes,
+        "flop_per_byte": flops / nbytes if nbytes else float("nan"),
+        "peak_flop_per_byte": peak_flops / mem_bw,
+        "t_compute_s": terms["t_compute_s"],
+        "t_memory_s": terms["t_memory_s"],
+        "bottleneck": ("compute" if terms["t_compute_s"]
+                       >= terms["t_memory_s"] else "memory"),
+    }
+    if wall_s:
+        out["achieved_flops"] = flops / wall_s
+        out["peak_fraction"] = flops / wall_s / peak_flops
+    return out
+
+
 def active_params(arch: str) -> tuple[int, int]:
     """(total, active) parameter counts from the config tree."""
     from repro import configs

@@ -1,0 +1,303 @@
+"""Whole-brain demo — materialise → fit → save → serve on commodity RAM.
+
+The paper's Table 1 whole-brain subject (t≈264k targets) is the shape
+where even the row-streamed tier dies: its accumulated ``(k, p, t)`` fold
+statistics alone are ~1 GB (8-fold CV at p=128) and the unblocked
+statistics solve tops 1.4 GB resident.  This driver runs the full loop on a synthetic subject of
+exactly that target width (downscaled ``n`` — the target axis is what is
+being proven) with every phase in its OWN subprocess, so each peak RSS
+(``getrusage(RUSAGE_SELF).ru_maxrss``) is an honest per-phase high-water
+mark:
+
+* **materialise** — ``RunStore.materialize_synthetic`` writes the
+  CNeuroMod-shaped subject run by run (never holding (n, t)).
+* **fit** (once per ``--t-block`` value) — ``wholebrain.fit_wholebrain``
+  under a memory budget that dispatch resolves to ``method="colblocked"``;
+  the child HARD-ASSERTS the column-block update compiled exactly once
+  across all blocks AND that its peak RSS stays under a cap the unblocked
+  path provably could not survive (the cap binds: the child refuses to
+  run if the unblocked estimate fits it).  The first fit streams its
+  weight shards through ``BundleWriter`` into an ``EncoderBundle``.
+* **serve** — opens the bundle in an ``EncoderRegistry`` and serves
+  column-windowed predictions (``EncoderService.predict_columns``),
+  asserting only the touched weight shards were paged in.
+
+Writes ``BENCH_wholebrain.json``: wall / peak RSS / bytes staged /
+compile counts per fit, keyed by ``t_block``, plus the serve paging
+stats.  ``--smoke`` shrinks ``n`` and the fold count (CI lane shape) —
+the target axis stays FULL SCALE, so the cap proof is unchanged.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+_T_FULL = 262_144                       # paper Table 1 whole-brain order
+_P = 128
+
+# (n, n_folds, rows_per_run, chunk_rows, t_blocks)
+_FULL = (1024, 8, 64, 256, (16_384, 20_480))   # 20_480: ragged 16k tail
+_SMOKE = (256, 6, 64, 128, (16_384, 20_480))   # 20_480: ragged 16k tail
+
+
+def _result(payload: dict) -> None:
+    print("WHOLEBRAIN_RESULT " + json.dumps(payload), flush=True)
+
+
+def _peak_rss_mb() -> float:
+    import resource
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
+
+
+def phase_materialise(args) -> None:
+    from repro.data import fmri
+    from repro.data.store import MANIFEST_NAME, RunStore
+
+    t0 = time.time()
+    if not os.path.exists(os.path.join(args.store, MANIFEST_NAME)):
+        spec = fmri.SubjectSpec(n=args.n, p=_P, t=args.t)
+        RunStore.create(args.store, n_folds=args.n_folds)\
+            .materialize_synthetic(spec, rows_per_run=args.rows_per_run)
+    store = RunStore.open(args.store)
+    _result({"phase": "materialise", "wall_s": round(time.time() - t0, 2),
+             "peak_rss_mb": round(_peak_rss_mb(), 1),
+             "shape": list(store.shape),
+             "store_gb": round(store.nbytes_resident() / 2**30, 2)})
+
+
+def phase_fit(args) -> None:
+    import jax
+    import numpy as np
+
+    from repro.data.store import RunStore
+    from repro.encoding.config import EncoderConfig
+    from repro.encoding.dispatch import chunked_stats_bytes, resolve
+    from repro.encoding.estimator import EncodingReport
+    from repro.wholebrain import BundleWriter, fit_wholebrain
+
+    store = RunStore.open(args.store)
+    n, p, t = store.shape
+    cap_bytes = int(args.cap_mb * 2**20)
+    # The cap must BIND: the unblocked statistics solve holds the
+    # (k, p, p+t) fold statistics plus C_total/Â/W working arrays.  If
+    # that estimate fits the cap, this run would prove nothing — refuse.
+    unblocked_mb = (chunked_stats_bytes(args.n_folds, p, t)
+                    + 3 * p * t * 4) / 2**20
+    if unblocked_mb <= args.cap_mb:
+        raise SystemExit(
+            f"cap {args.cap_mb} MB does not bind: the unblocked path needs "
+            f"only ~{unblocked_mb:.0f} MB — raise t or lower the cap")
+
+    cfg = EncoderConfig(n_folds=args.n_folds, chunk_rows=args.chunk_rows,
+                        device_memory_budget=cap_bytes,
+                        target_block=args.t_block)
+    decision = resolve(cfg, n, p, t, jax.device_count())
+    assert decision.method == "colblocked", decision
+    t0 = time.time()
+    if args.bundle:
+        with BundleWriter(args.bundle, p=p, t=t, overwrite=True) as w:
+            res = fit_wholebrain(store, cfg, t_block=decision.target_block,
+                                 writer=w, collect=False)
+            report = EncodingReport(
+                weights=None, best_lambda=res.best_lambda,
+                cv_scores=res.cv_scores, lambdas=cfg.lambdas,
+                decision=decision)
+            w.commit(config=cfg, report=report,
+                     lambda_by_target=res.lambda_by_target,
+                     provenance={"source": "launch.wholebrain",
+                                 "store": args.store,
+                                 "t_block": decision.target_block})
+    else:
+        res = fit_wholebrain(store, cfg, t_block=decision.target_block,
+                             collect=False)
+    wall = time.time() - t0
+    tel = res.telemetry
+    # THE deterministic gates (fresh process, so counts are absolute):
+    # one trace for the X-only Gram accumulation, one for the column-block
+    # update across ALL blocks — the fixed-shape contract on both axes.
+    if tel["gram_compile_delta"] != 1 or tel["colblock_compile_delta"] != 1:
+        raise SystemExit(f"fixed-shape contract broken: gram compiled "
+                         f"{tel['gram_compile_delta']}×, column-block "
+                         f"update {tel['colblock_compile_delta']}×")
+    peak = _peak_rss_mb()
+    if peak >= args.cap_mb:
+        raise SystemExit(f"blocked fit peaked at {peak:.0f} MB RSS — over "
+                         f"the {args.cap_mb} MB cap the unblocked path "
+                         f"(~{unblocked_mb:.0f} MB) was excluded by")
+    _result({"phase": "fit", "t_block": decision.target_block,
+             "wall_s": round(wall, 2), "peak_rss_mb": round(peak, 1),
+             "unblocked_stats_mb": round(unblocked_mb, 1),
+             "n_blocks": tel["n_blocks"],
+             "bytes_staged_mb": round(tel["bytes_staged"] / 2**20, 1),
+             "read_stall_s": round(tel["read_stall_s"], 2),
+             "gram_compiles": tel["gram_compile_delta"],
+             "colblock_compiles": tel["colblock_compile_delta"],
+             "best_lambda": float(np.asarray(res.best_lambda)[0]),
+             "saved_bundle": bool(args.bundle)})
+
+
+def phase_serve(args) -> None:
+    import numpy as np
+
+    from repro.serving_encoders.bundle import EncoderBundle
+    from repro.serving_encoders.registry import EncoderRegistry
+    from repro.serving_encoders.service import EncoderService
+
+    t0 = time.time()
+    bundle = EncoderBundle.open(args.bundle)
+    p, t = bundle.shape
+    reg = EncoderRegistry(device_memory_budget=64 * 2**20, wave_rows=64)
+    reg.add("wholebrain", args.bundle)
+    svc = EncoderService(reg, wave_rows=64)
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((100, p)).astype(np.float32)
+    # Three windowed requests: two distinct windows, then a repeat (cache
+    # hit).  Each must page in ONLY its own shards.
+    windows = [(1_000, 3_000), (t // 2 + 100, t // 2 + 2_100),
+               (1_000, 3_000)]
+    expect = set()
+    for lo, hi in windows:
+        P = svc.predict_columns("wholebrain", X, (lo, hi))
+        assert P.shape == (100, hi - lo), P.shape
+        # Reference straight off the mmap'd shards.
+        idxs = bundle.shards_for_columns(lo, hi)
+        expect |= {("wholebrain", i) for i in idxs}
+        cols = np.concatenate(
+            [np.asarray(bundle.load_weight_shard(i, mmap=True),
+                        np.float32) for i in idxs], axis=1)
+        first = bundle.weight_shard_bounds()[idxs[0]][0]
+        ref = X @ cols[:, lo - first:hi - first]
+        assert np.allclose(P, ref, atol=1e-4), "windowed serve mismatch"
+    st = reg.stats()
+    # The acceptance criterion: only the shards the windows touched are
+    # resident — never the full bundle, never an untouched shard.
+    assert st["loaded"] == 0, st
+    assert set(reg.loaded_shards) == expect, (reg.loaded_shards, expect)
+    assert st["shard_loads"] == len(expect), st
+    assert st["shard_hits"] > 0, st           # the repeated window hit
+    peak = _peak_rss_mb()
+    if peak >= args.cap_mb:
+        raise SystemExit(f"serve peaked at {peak:.0f} MB RSS — over the "
+                         f"{args.cap_mb} MB cap")
+    _result({"phase": "serve", "wall_s": round(time.time() - t0, 2),
+             "peak_rss_mb": round(peak, 1),
+             "weight_shards": bundle.manifest["weight_shards"],
+             "shards_paged": st["shard_loads"],
+             "shard_hits": st["shard_hits"],
+             "resident_mb": round(st["resident_bytes"] / 2**20, 2),
+             "compile_count": svc.compile_count})
+
+
+def _spawn(phase: str, extra: list[str]) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.wholebrain",
+         "--phase", phase] + extra,
+        capture_output=True, text=True, env=env)
+    if proc.returncode != 0:
+        raise SystemExit(f"{phase} child failed:\n{proc.stdout}\n"
+                         f"{proc.stderr}")
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("WHOLEBRAIN_RESULT ")][-1]
+    return json.loads(line[len("WHOLEBRAIN_RESULT "):])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--phase", default=None,
+                    help="(internal) child mode: materialise|fit|serve")
+    ap.add_argument("--store", default=None)
+    ap.add_argument("--bundle", default=None)
+    ap.add_argument("--n", type=int, default=0)
+    ap.add_argument("--t", type=int, default=_T_FULL,
+                    help="target count (full whole-brain scale by default)")
+    ap.add_argument("--n-folds", type=int, default=0)
+    ap.add_argument("--rows-per-run", type=int, default=64)
+    ap.add_argument("--chunk-rows", type=int, default=0)
+    ap.add_argument("--t-block", type=int, default=0)
+    ap.add_argument("--cap-mb", type=float, default=1024.0,
+                    help="per-phase RSS ceiling; must be fatal to the "
+                         "unblocked path (the fit child checks it binds)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI shape: downscaled n/folds, FULL-SCALE t")
+    ap.add_argument("--workdir", default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.phase:                                 # child mode
+        {"materialise": phase_materialise, "fit": phase_fit,
+         "serve": phase_serve}[args.phase](args)
+        return
+
+    import tempfile
+
+    n, n_folds, rows_per_run, chunk_rows, t_blocks = (
+        _SMOKE if args.smoke else _FULL)
+    n = args.n or n
+    n_folds = args.n_folds or n_folds
+    chunk_rows = args.chunk_rows or chunk_rows
+    workdir = args.workdir or tempfile.mkdtemp(prefix="wholebrain_")
+    store = os.path.join(workdir, f"subject_{n}x{_P}x{args.t}")
+    bundle = os.path.join(workdir, "bundle")
+    if args.out is None:
+        args.out = os.path.join(
+            REPO, "BENCH_wholebrain_smoke.json" if args.smoke
+            else "BENCH_wholebrain.json")
+
+    print(f"[wholebrain] materialising {n}x{_P}x{args.t} subject ...",
+          flush=True)
+    mat = _spawn("materialise", [
+        "--store", store, "--n", str(n), "--t", str(args.t),
+        "--n-folds", str(n_folds), "--rows-per-run", str(rows_per_run)])
+    print(f"[wholebrain] materialise: {mat['wall_s']}s "
+          f"rss={mat['peak_rss_mb']}MB store={mat['store_gb']}GB",
+          flush=True)
+
+    fits = []
+    for i, t_block in enumerate(t_blocks):
+        extra = ["--store", store, "--t-block", str(t_block),
+                 "--n-folds", str(n_folds), "--chunk-rows", str(chunk_rows),
+                 "--cap-mb", str(args.cap_mb)]
+        if i == 0:
+            extra += ["--bundle", bundle]
+        fit = _spawn("fit", extra)
+        fits.append(fit)
+        print(f"[wholebrain] fit t_block={t_block}: {fit['wall_s']}s "
+              f"rss={fit['peak_rss_mb']}MB (unblocked would need "
+              f"{fit['unblocked_stats_mb']}MB) blocks={fit['n_blocks']} "
+              f"staged={fit['bytes_staged_mb']}MB "
+              f"compiles={fit['gram_compiles']}+{fit['colblock_compiles']} "
+              f"λ={fit['best_lambda']}", flush=True)
+    lams = {f["best_lambda"] for f in fits}
+    if len(lams) != 1:
+        raise SystemExit(f"λ selection diverged across t_block values: "
+                         f"{lams}")
+
+    serve = _spawn("serve", ["--bundle", bundle,
+                             "--cap-mb", str(args.cap_mb)])
+    print(f"[wholebrain] serve: {serve['wall_s']}s "
+          f"rss={serve['peak_rss_mb']}MB paged "
+          f"{serve['shards_paged']}/{serve['weight_shards']} shards "
+          f"({serve['resident_mb']}MB resident)", flush=True)
+
+    payload = {"n": n, "p": _P, "t": args.t, "n_folds": n_folds,
+               "chunk_rows": chunk_rows, "rss_cap_mb": args.cap_mb,
+               "smoke": args.smoke, "materialise": mat,
+               "fit_vs_t_block": fits, "serve": serve}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

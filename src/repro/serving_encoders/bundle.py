@@ -309,8 +309,63 @@ class EncoderBundle:
                     f"manifest storage dtype {want_store}")
 
     # -- materialisation -----------------------------------------------------
-    def load_arrays(self) -> dict[str, np.ndarray]:
-        return ckpt_io.load(self.root, 0)
+    def _leaves(self) -> dict:
+        """Cached checkpoint-manifest leaf table (one json read)."""
+        cached = getattr(self, "_leaf_table", None)
+        if cached is None:
+            cached = ckpt_io._read_manifest(
+                os.path.join(self.root, "step_0"))["leaves"]
+            self._leaf_table = cached
+        return cached
+
+    def load_arrays(self, keys: list[str] | None = None, *,
+                    mmap: bool = False) -> dict[str, np.ndarray]:
+        """Load checkpoint leaves — all of them, or just ``keys``.
+
+        ``keys`` lets the lazy paths (``load_encoder``, the registry's
+        shard-granular ``get_columns``) pull the small metadata leaves
+        without materialising every weight shard; ``mmap=True`` returns
+        read-only memmap views (pages fault in on first touch).
+        """
+        leaves = self._leaves()
+        if keys is None:
+            keys = list(leaves)
+        else:
+            missing = [k for k in keys if k not in leaves]
+            if missing:
+                raise BundleError(f"bundle {self.root}: requested leaf/leaves "
+                                  f"{missing} not in the checkpoint manifest")
+        src = os.path.join(self.root, "step_0")
+        return {k: ckpt_io._load_leaf(src, k, leaves[k], mmap=mmap)
+                for k in keys}
+
+    def weight_shard_bounds(self) -> list[tuple[int, int]]:
+        return [(int(lo), int(hi))
+                for lo, hi in self.manifest["weight_shard_bounds"]]
+
+    def shards_for_columns(self, lo: int, hi: int) -> list[int]:
+        """Indices of the weight shards overlapping columns ``[lo, hi)``."""
+        p, t = self.shape
+        if not (0 <= lo <= hi <= t):
+            raise BundleError(f"bundle {self.root}: column window "
+                              f"[{lo}, {hi}) outside [0, {t})")
+        return [i for i, (slo, shi) in enumerate(self.weight_shard_bounds())
+                if slo < hi and lo < shi]
+
+    def load_weight_shard(self, i: int, *, mmap: bool = False) -> np.ndarray:
+        """Load ONE ``(p, width)`` weight column shard.
+
+        ``mmap=True`` is the serving path: the shard is a read-only view
+        into its ``.npy`` and only the pages a prediction actually reads
+        are faulted in.
+        """
+        m = self.manifest
+        if not (0 <= i < m["weight_shards"]):
+            raise BundleError(f"bundle {self.root}: weight shard {i} out of "
+                              f"range [0, {m['weight_shards']})")
+        key = f"W/{_shard_key(i)}"
+        return ckpt_io._load_leaf(os.path.join(self.root, "step_0"), key,
+                                  self._leaves()[key], mmap=mmap)
 
     def load_standardizer(self, arrays: dict[str, np.ndarray]):
         from repro.encoding.pipeline import Standardizer
@@ -338,8 +393,13 @@ class EncoderBundle:
         from repro.encoding.estimator import BrainEncoder, EncodingReport
 
         m = self.manifest
-        arrays = self.load_arrays()
-        blocks = [arrays[f"W/{_shard_key(i)}"]
+        # Per-shard access (not one eager load-everything): the metadata
+        # leaves are tiny, and the weight shards stream through
+        # ``load_weight_shard`` so a future column-windowed caller shares
+        # the exact same read path the registry's shard cache uses.
+        arrays = self.load_arrays(
+            [k for k in self._leaves() if not k.startswith("W/")])
+        blocks = [self.load_weight_shard(i)
                   for i in range(m["weight_shards"])]
         W = blocks[0] if len(blocks) == 1 else np.concatenate(blocks, axis=1)
         Wj = jnp.asarray(W)

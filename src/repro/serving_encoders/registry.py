@@ -19,6 +19,8 @@ import dataclasses
 import time
 from collections import OrderedDict
 
+import numpy as np
+
 from repro.encoding.dispatch import estimated_resident_bytes
 from repro.serving_encoders.bundle import EncoderBundle
 
@@ -68,6 +70,40 @@ class LoadedEncoder:
         return self.encoder.weights_
 
 
+@dataclasses.dataclass
+class LoadedShard:
+    """A resident weight COLUMN shard (the whole-brain serving granule).
+
+    Where ``LoadedEncoder`` pins a bundle's full ``(p, t)`` matrix, a
+    shard entry pins one ``(p, width)`` column window plus its μ/σ slice
+    — ``get_columns`` pages these in individually (mmap-backed reads, so
+    only the touched shard's file pages fault), and the LRU evicts them
+    individually too."""
+
+    name: str
+    shard: int
+    bounds: tuple[int, int]  # [lo, hi) target columns of the bundle
+    W: "object"              # (p, width) device array
+    mu_x: "object"           # (p,)
+    sd_x: "object"
+    mu_y: "object"           # (width,) — the shard's slice
+    sd_y: "object"
+    resident_bytes: int
+    charged_wave_rows: int
+    load_seconds: float
+
+
+def shard_resident_bytes(bundle: EncoderBundle, width: int, wave_rows: int
+                         ) -> int:
+    """Device bytes one column shard pins while serving ``wave_rows``
+    waves: its weight slice + μ/σ (the x vectors plus the shard's y
+    slice) + the windowed activation working set."""
+    p, _ = bundle.shape
+    w_bytes = p * width * bundle.weight_dtype.itemsize
+    std = (2 * p + 2 * width) * 4
+    return w_bytes + std + estimated_resident_bytes(wave_rows, p, width)
+
+
 def _serving_arrays(encoder, p: int, t: int):
     import jax.numpy as jnp
 
@@ -107,9 +143,17 @@ class EncoderRegistry:
         self.target_shards = target_shards
         self._bundles: dict[str, EncoderBundle] = {}
         self._loaded: "OrderedDict[str, LoadedEncoder]" = OrderedDict()
+        # Shard-granular residency pool (whole-brain serving): keyed by
+        # (model, shard index), LRU-ordered, charged against the SAME
+        # budget as the full-bundle pool.
+        self._shards: "OrderedDict[tuple[str, int], LoadedShard]" \
+            = OrderedDict()
+        self._std_host: dict[str, tuple] = {}   # host μ/σ cache per model
         self.hits = 0
         self.loads = 0
         self.evictions = 0
+        self.shard_hits = 0
+        self.shard_loads = 0
 
     # -- registration --------------------------------------------------------
     def add(self, name: str, path: str) -> EncoderBundle:
@@ -163,7 +207,13 @@ class EncoderRegistry:
 
     @property
     def resident_bytes(self) -> int:
-        return sum(e.resident_bytes for e in self._loaded.values())
+        return (sum(e.resident_bytes for e in self._loaded.values())
+                + sum(e.resident_bytes for e in self._shards.values()))
+
+    @property
+    def loaded_shards(self) -> list[tuple[str, int]]:
+        """LRU → MRU order of the resident column shards."""
+        return list(self._shards)
 
     # -- residency -----------------------------------------------------------
     def get(self, name: str, *, wave_rows: int | None = None
@@ -223,14 +273,118 @@ class EncoderRegistry:
         self.loads += 1
         return entry
 
-    def _evict_until_fits(self, extra_need: int, keep: str | None = None
-                          ) -> None:
-        """Evict LRU-first (sparing ``keep``) until ``extra_need`` more
-        bytes fit the budget.  Callers pre-check that the kept/incoming
-        entry alone fits, so the loop always terminates within budget."""
+    # -- shard-granular residency (whole-brain serving) ----------------------
+    def _std_host_arrays(self, name: str) -> tuple:
+        """Host-side μ/σ of a bundle, cached once per model (the vectors
+        are O(p + t) — tiny next to any weight shard) so windowed gets
+        never re-read the standardizer leaves per shard."""
+        cached = self._std_host.get(name)
+        if cached is None:
+            bundle = self.bundle(name)
+            p, t = bundle.shape
+            mu_x = np.zeros((p,), np.float32)
+            sd_x = np.ones((p,), np.float32)
+            mu_y = np.zeros((t,), np.float32)
+            sd_y = np.ones((t,), np.float32)
+            flags = bundle.manifest["standardizer"]
+            keys = (["mu_x", "sd_x"] if flags.get("x") else []) + \
+                   (["mu_y", "sd_y"] if flags.get("y") else [])
+            if keys:
+                arrays = bundle.load_arrays(keys)
+                if flags.get("x"):
+                    mu_x = np.asarray(arrays["mu_x"], np.float32)
+                    sd_x = np.asarray(arrays["sd_x"], np.float32)
+                if flags.get("y"):
+                    mu_y = np.asarray(arrays["mu_y"], np.float32)
+                    sd_y = np.asarray(arrays["sd_y"], np.float32)
+            cached = (mu_x, sd_x, mu_y, sd_y)
+            self._std_host[name] = cached
+        return cached
+
+    def get_columns(self, name: str, col_range: tuple[int, int], *,
+                    wave_rows: int | None = None) -> list[LoadedShard]:
+        """Resident shard entries covering target columns ``[lo, hi)``.
+
+        ONLY the bundle's shards overlapping the window are charged and
+        paged in (mmap-backed ``load_weight_shard``, so even the read
+        faults just that shard's file) — a wave that touches one column
+        window of a whole-brain bundle never pays for the rest of it.
+        Each shard is an independent LRU resident, evicted individually.
+        """
+        import jax.numpy as jnp
+
+        bundle = self.bundle(name)
+        lo, hi = col_range
+        idxs = bundle.shards_for_columns(lo, hi)
+        if not idxs:
+            raise RegistryError(f"column window [{lo}, {hi}) of {name!r} "
+                                f"touches no weight shard")
+        eff_wave = max(self.wave_rows, wave_rows or 0)
+        budget = self.device_memory_budget
+        bounds = bundle.weight_shard_bounds()
+        wanted = frozenset((name, i) for i in idxs)
+        out = []
+        for i in idxs:
+            key = (name, i)
+            slo, shi = bounds[i]
+            if key in self._shards:
+                self.shard_hits += 1
+                entry = self._shards[key]
+                self._shards.move_to_end(key)
+                if eff_wave > entry.charged_wave_rows:
+                    new_need = shard_resident_bytes(bundle, shi - slo,
+                                                    eff_wave)
+                    if budget is not None and new_need > budget:
+                        raise RegistryError(
+                            f"shard {i} of {name!r} needs "
+                            f"{new_need / 2**20:.1f} MB resident at wave "
+                            f"size {eff_wave}, over the registry budget "
+                            f"{budget / 2**20:.1f} MB")
+                    entry.resident_bytes = new_need
+                    entry.charged_wave_rows = eff_wave
+                    self._evict_until_fits(extra_need=0, keep_shards=wanted)
+                out.append(entry)
+                continue
+            need = shard_resident_bytes(bundle, shi - slo, eff_wave)
+            if budget is not None and need > budget:
+                raise RegistryError(
+                    f"shard {i} of {name!r} needs {need / 2**20:.1f} MB "
+                    f"resident, over the registry budget "
+                    f"{budget / 2**20:.1f} MB — re-save with narrower "
+                    f"weight shards")
+            self._evict_until_fits(extra_need=need, keep_shards=wanted)
+            t0 = time.perf_counter()
+            W = jnp.asarray(bundle.load_weight_shard(i, mmap=True))
+            mu_x, sd_x, mu_y, sd_y = self._std_host_arrays(name)
+            entry = LoadedShard(
+                name=name, shard=i, bounds=(slo, shi), W=W,
+                mu_x=jnp.asarray(mu_x), sd_x=jnp.asarray(sd_x),
+                mu_y=jnp.asarray(mu_y[slo:shi]),
+                sd_y=jnp.asarray(sd_y[slo:shi]),
+                resident_bytes=need, charged_wave_rows=eff_wave,
+                load_seconds=time.perf_counter() - t0)
+            self._shards[key] = entry
+            self.shard_loads += 1
+            out.append(entry)
+        return out
+
+    def _evict_until_fits(self, extra_need: int, keep: str | None = None,
+                          keep_shards: frozenset = frozenset()) -> None:
+        """Evict LRU-first (sparing ``keep``/``keep_shards``) until
+        ``extra_need`` more bytes fit the budget.  Shard entries go first
+        — they are the finer granule, and dropping one column window is
+        cheaper to undo than reloading a whole bundle.  Callers pre-check
+        that the kept/incoming entry alone fits, so the loop always
+        terminates within budget."""
         budget = self.device_memory_budget
         while budget is not None \
                 and self.resident_bytes + extra_need > budget:
+            skey = next((k for k in self._shards if k not in keep_shards),
+                        None)
+            if skey is not None:
+                del self._shards[skey]
+                self.evictions += 1
+                continue
             victim = next((n for n in self._loaded if n != keep), None)
             if victim is None:
                 return
@@ -238,20 +392,30 @@ class EncoderRegistry:
             self.evictions += 1
 
     def evict(self, name: str) -> bool:
-        """Drop a resident entry (device arrays become collectable)."""
+        """Drop a resident entry — the full-bundle entry AND any of the
+        model's resident column shards (device arrays become
+        collectable)."""
+        hit = False
         if name in self._loaded:
             del self._loaded[name]
             self.evictions += 1
-            return True
-        return False
+            hit = True
+        for key in [k for k in self._shards if k[0] == name]:
+            del self._shards[key]
+            self.evictions += 1
+            hit = True
+        return hit
 
     def stats(self) -> dict:
         return {"registered": len(self._bundles),
                 "loaded": len(self._loaded),
+                "loaded_shards": len(self._shards),
                 "resident_bytes": self.resident_bytes,
                 "hits": self.hits, "loads": self.loads,
+                "shard_hits": self.shard_hits,
+                "shard_loads": self.shard_loads,
                 "evictions": self.evictions}
 
 
 __all__ = ["EncoderRegistry", "RegistryError", "LoadedEncoder",
-           "bundle_resident_bytes"]
+           "LoadedShard", "bundle_resident_bytes", "shard_resident_bytes"]

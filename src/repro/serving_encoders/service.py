@@ -180,6 +180,62 @@ class EncoderService:
         return np.concatenate(
             [block, np.zeros((pad, block.shape[1]), np.float32)])
 
+    # -- windowed serving (whole-brain bundles) ------------------------------
+    def predict_columns(self, model: str, features: np.ndarray,
+                        col_range: tuple[int, int], *,
+                        wave_rows: int | None = None) -> np.ndarray:
+        """Predict ONE target-column window of one model.
+
+        The whole-brain serving path: the registry pages in (and charges)
+        only the weight column shards overlapping ``col_range`` — a
+        request for 2k voxels of a 262k-voxel bundle faults in one mmap'd
+        shard, not the ``p·t`` matrix.  Rows fly in the same fixed-shape
+        waves as ``serve`` and each (wave shape, shard width) pair
+        compiles once, reused across shards, waves, and calls.
+
+        Returns the ``(rows, hi - lo)`` raw-unit predictions.
+        """
+        import jax.numpy as jnp
+
+        lo, hi = col_range
+        bundle = self.registry.bundle(model)
+        p, t = bundle.shape
+        if not (0 <= lo < hi <= t):
+            raise ServiceError(f"column window [{lo}, {hi}) invalid for "
+                               f"{model!r} with t={t}")
+        feats = np.asarray(features, np.float32)
+        if feats.ndim != 2 or feats.shape[1] != p or not feats.size:
+            raise ServiceError(f"request for {model!r}: features "
+                               f"{feats.shape} incompatible with p={p}")
+        if wave_rows is not None and wave_rows < 1:
+            raise ServiceError(f"wave_rows must be >= 1, got {wave_rows}")
+        max_wave = wave_rows if wave_rows is not None else (
+            self.wave_buckets[-1] if self.wave_buckets else self.wave_rows)
+        shards = self.registry.get_columns(model, (lo, hi),
+                                           wave_rows=max_wave)
+        first_lo = shards[0].bounds[0]
+        # Enqueue all (wave × shard) programs before any host pull —
+        # async dispatch overlaps them with the padding of later waves.
+        parts, counts = [], []
+        pos = 0
+        for w in self._plan_waves(feats.shape[0], wave_rows):
+            chunk = jnp.asarray(self._pad(feats[pos:pos + w], w))
+            real = min(w, feats.shape[0] - pos)
+            parts.append([self._predict(chunk, e.W, e.mu_x, e.sd_x,
+                                        e.mu_y, e.sd_y) for e in shards])
+            counts.append(real)
+            self.stats.record_wave(w, real)
+            pos += w
+        host = []
+        for outs, c in zip(parts, counts):
+            row = (np.concatenate([np.asarray(o) for o in outs], axis=1)
+                   if len(outs) > 1 else np.asarray(outs[0]))
+            host.append(row[:c])
+        out = np.concatenate(host) if len(host) > 1 else host[0]
+        self.stats.rows += feats.shape[0]
+        self.stats.requests += 1
+        return out[:, lo - first_lo:hi - first_lo]
+
     # -- serving -------------------------------------------------------------
     def serve(self, requests: Sequence[PredictRequest], *,
               wave_rows: int | None = None) -> list[PredictResult]:

@@ -1,0 +1,36 @@
+"""Target-axis streaming tier: whole-brain fits on commodity memory.
+
+Composes with the row-streaming tier (``repro.data.store`` +
+``repro.core.foldstats``) along the OTHER axis: rows stream in chunks,
+targets stream in column blocks, and peak memory is
+``O(p² + p·t_block)`` — independent of both ``n`` and ``t``.
+
+* ``stats`` — ``ColumnBlockAccumulator``: per-block ``(k, p, t_block)``
+  statistics from mmap column windows, one compiled update for all blocks.
+* ``solver`` — ``fit_wholebrain``: column-blocked CV ridge reusing the
+  ``k+1`` eigendecompositions across every block; λ and ``W`` bit-identical
+  to the unblocked path in ``"global"`` mode.
+* ``artifact`` — ``BundleWriter``: weight shards appended as blocks
+  finish, one atomic ``bundle.json`` commit; read back lazily per shard.
+
+``BrainEncoder.fit(store=...)`` routes here automatically when the
+dispatch layer decides ``p·t`` breaks the device-memory budget (method
+``"colblocked"``); ``launch/wholebrain.py`` drives the full
+materialise→fit→save→serve loop under an RSS cap.
+"""
+from repro.wholebrain.artifact import BundleWriter
+from repro.wholebrain.solver import WholebrainResult, fit_wholebrain
+from repro.wholebrain.stats import (
+    ColumnBlockAccumulator, ColumnBlockStats, colblock_update_compile_count,
+    column_blocks,
+)
+
+__all__ = [
+    "BundleWriter",
+    "ColumnBlockAccumulator",
+    "ColumnBlockStats",
+    "WholebrainResult",
+    "colblock_update_compile_count",
+    "column_blocks",
+    "fit_wholebrain",
+]

@@ -1,0 +1,310 @@
+"""Column-blocked CV ridge driver — Eq. 5 mutualisation across target blocks.
+
+``ridge.ridge_cv_from_stats`` already mutualises the expensive per-fold
+eigendecompositions across all targets and all λ — but it consumes a full
+``(k, p, t)`` statistics tensor.  This driver extends the mutualisation
+across TARGET BLOCKS: the ``k+1`` eigendecompositions of the downdated
+Grams depend only on ``X`` and are computed once (from the shared X-only
+pass), then reused for every column block; each block's ``(k, p, t_block)``
+statistics stream through ``ColumnBlockAccumulator`` and are scored
+against the hoisted eigenbases via ``validation_scores_per_target``.
+
+Two λ-selection modes:
+
+* ``"global"`` (default) — one λ for ALL targets, the unblocked
+  ``ridge_cv_from_stats`` contract.  Per-column validation scores are
+  aggregated on the host in float64 in global column order (so the
+  aggregate is invariant to the blocking), and the final weights are
+  produced per block from the block's eigenbasis projection
+  ``Â_b = Qᵀ C_total[:, block]`` stashed in an on-disk float32 scratch
+  during the single statistics pass — no second pass over the rows.  λ
+  and ``W`` are bit-identical to the unblocked path (the invariance
+  harness's gate): every per-block contraction runs at one fixed padded
+  width and XLA's column-blocked GEMMs are bitwise column slices of the
+  full-width ones.
+* ``"per_block"`` — one λ per target block, the B-MOR semantics of
+  Alg. 1 line 13 carried to the streaming tier: each block's CV curve is
+  scored and argmaxed exactly as ``ridge_cv_from_stats`` would on the
+  block-restricted statistics, and its weights are solved at the block's
+  own λ in the same single pass.
+
+Peak memory: ``O(p² + p·t_block)`` device + the scratch/weight shards on
+disk — independent of ``t``.  ``X`` is re-streamed once per block (its
+``n·p`` bytes are the SMALL axis in the whole-brain regime); ``Y`` is
+streamed exactly once, each block faulting in only its own column pages.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import foldstats
+from repro.encoding.config import EncoderConfig
+from repro.wholebrain.stats import (
+    ColumnBlockAccumulator, colblock_update_compile_count, column_blocks,
+)
+
+
+@dataclasses.dataclass
+class WholebrainResult:
+    """Fit result of the column-blocked driver.
+
+    ``best_lambda``/``cv_scores`` follow the ``EncodingReport`` batch
+    convention: one row per λ-selection batch — shape ``(1,)``/``(1, r)``
+    in global mode, ``(n_blocks,)``/``(n_blocks, r)`` per block.
+    ``weights`` is the assembled host ``(p, t)`` float32 matrix when the
+    fit collected it, ``None`` when every shard went to a writer instead.
+    """
+
+    best_lambda: np.ndarray            # (n_batches,) float64
+    cv_scores: np.ndarray              # (n_batches, r) float64
+    lambdas: tuple[float, ...]
+    lambda_mode: str                   # "global" | "per_block"
+    t_block: int
+    block_bounds: list[tuple[int, int]]
+    lambda_by_target: np.ndarray       # (t,) float64, from the REAL bounds
+    weights: np.ndarray | None
+    telemetry: dict
+
+
+def _stream_stats(agg: dict, stream) -> None:
+    s = getattr(stream, "stats", None)
+    if s is None:
+        return
+    agg["chunks"] += s.chunks
+    agg["bytes_staged"] += s.bytes_staged
+    agg["read_stall_s"] += s.read_stall_s
+    agg["compute_stall_s"] += s.compute_stall_s
+
+
+def _accumulate(acc, store, chunk_rows: int, col_range, cfg: EncoderConfig,
+                agg: dict):
+    """One prefetched row pass over ``store`` restricted to ``col_range``."""
+    stream = store.iter_chunks(chunk_rows, col_range=col_range,
+                               prefetch=cfg.prefetch,
+                               prefetch_depth=cfg.prefetch_depth)
+    try:
+        for Xc, Yc in stream:
+            acc.update(Xc, Yc)
+    finally:
+        if hasattr(stream, "close"):
+            stream.close()
+    _stream_stats(agg, stream)
+    return acc.finalize()
+
+
+def _check_target_scale(bstats, n_total: int, lo: int, hi: int) -> None:
+    """The row tier's un-standardized-target refusal, per block (see
+    ``BrainEncoder._fit_from_stats``): statistics-based CV scoring loses
+    f32 precision quadratically in |ȳ|/σ_y."""
+    w = hi - lo
+    mu = np.asarray(jnp.sum(bstats.ysum, axis=0))[:w] / n_total
+    var = np.asarray(jnp.sum(bstats.ysq, axis=0))[:w] / max(n_total - 1, 1)
+    ratio = float(np.max(np.abs(mu) / np.sqrt(var + 1e-12)))
+    if ratio > 1e3:
+        raise ValueError(
+            f"wholebrain fit: target mean/std ratio {ratio:.0f} in columns "
+            f"[{lo}, {hi}) is too large for statistics-based CV scoring in "
+            f"float32 — standardize the targets first")
+
+
+def fit_wholebrain(store, cfg: EncoderConfig | None = None, *,
+                   t_block: int | None = None,
+                   lambda_mode: str = "global",
+                   chunk_rows: int | None = None,
+                   writer=None, collect: bool | None = None,
+                   scratch_dir: str | None = None) -> WholebrainResult:
+    """Column-blocked streaming CV ridge over a ``RunStore``.
+
+    ``writer`` (any object with ``append(W_block)``, e.g.
+    ``wholebrain.artifact.BundleWriter``) receives the ``(p, w)`` float32
+    weight shards in block order as they finish — the streaming-save path
+    where the full ``(p, t)`` matrix never exists in memory.  Without a
+    writer, ``collect=True`` (the default then) assembles the host
+    weight matrix.  ``scratch_dir`` hosts the global-mode ``Â`` scratch
+    memmap (default: alongside the writer's staging dir, else a tempdir).
+    """
+    cfg = cfg or EncoderConfig()
+    if cfg.solver not in ("auto", "ridge"):
+        raise ValueError(f"wholebrain fit supports only the ridge solver; "
+                         f"solver={cfg.solver!r} is pinned")
+    if cfg.method == "dual" or cfg.bands is not None:
+        raise ValueError("wholebrain fit is primal/eigh only (streamed "
+                         "statistics cannot build the dual kernel or bands)")
+    if lambda_mode not in ("global", "per_block"):
+        raise ValueError(f"lambda_mode must be 'global' or 'per_block', "
+                         f"got {lambda_mode!r}")
+    k_store = getattr(store, "n_folds", None)
+    if k_store is not None and k_store != cfg.n_folds:
+        raise ValueError(f"store manifest records n_folds={k_store} but the "
+                         f"config says n_folds={cfg.n_folds}")
+    n, p, t = store.shape
+    t_block = t_block or getattr(cfg, "target_block", None)
+    if t_block is None:
+        raise ValueError("pass t_block= (or set EncoderConfig.target_block)")
+    bounds = column_blocks(t, t_block)
+    t_pad = bounds[0][1] - bounds[0][0]
+    k = cfg.n_folds
+    r = len(cfg.lambdas)
+    chunk_rows = min(chunk_rows or cfg.chunk_rows, n)
+    if collect is None:
+        collect = writer is None
+
+    agg = {"chunks": 0, "bytes_staged": 0, "read_stall_s": 0.0,
+           "compute_stall_s": 0.0}
+    fixed0 = foldstats.chunk_update_compile_count()
+    colblock0 = colblock_update_compile_count()
+
+    # -- shared pass: G/xsum/count from X alone (zero-width Y window) --------
+    gacc = foldstats.FoldStatsAccumulator(n, k, chunk_rows=chunk_rows)
+    gstats = _accumulate(gacc, store, chunk_rows, (0, 0), cfg, agg)
+
+    # -- hoisted factorisations: k downdated eighs + the refit, once ---------
+    # (the paper's Eq. 5 mutualisation extended across blocks: these depend
+    # only on X, so every target block reuses them).
+    eye = cfg.jitter * jnp.eye(p, dtype=jnp.float32)
+    lams = jnp.asarray(cfg.lambdas, dtype=jnp.float32)
+    fold_eigs = []
+    for f in range(k):
+        G_tr, _ = gstats.train(f)
+        evals_f, Q_f = jnp.linalg.eigh(G_tr + eye)
+        fold_eigs.append((evals_f, Q_f))
+    evals_R, Q_R = jnp.linalg.eigh(gstats.G_total + eye)
+
+    W_full = np.empty((p, t), np.float32) if collect else None
+    scratch = None
+    scratch_path = None
+    tmp_holder = None
+    per_block_lams: list[float] = []
+    per_block_curves: list[np.ndarray] = []
+    score_sum = np.zeros((k, r), np.float64)     # global: Σ_cols per fold
+
+    try:
+        if lambda_mode == "global":
+            base = scratch_dir or getattr(writer, "scratch_dir", None)
+            if base is None:
+                tmp_holder = tempfile.mkdtemp(prefix="wholebrain_scratch_")
+                base = tmp_holder
+            scratch_path = os.path.join(base, "ahat.npy")
+            scratch = np.lib.format.open_memmap(
+                scratch_path, mode="w+", dtype=np.float32, shape=(p, t))
+
+        # -- per-block pass: stream the block's columns, score every fold ----
+        for lo, hi in bounds:
+            w = hi - lo
+            bacc = ColumnBlockAccumulator(n, k, t_pad, chunk_rows=chunk_rows)
+            bstats = _accumulate(bacc, store, chunk_rows, (lo, hi), cfg, agg)
+            _check_target_scale(bstats, n, lo, hi)
+            # Grafted onto the shared statistics this is a full FoldStats
+            # restricted (bitwise) to the block's columns.
+            full = foldstats.FoldStats(
+                G=gstats.G, C=bstats.C, xsum=gstats.xsum,
+                ysum=bstats.ysum, ysq=bstats.ysq, count=gstats.count)
+            fold_scores = []
+            for f in range(k):
+                evals_f, Q_f = fold_eigs[f]
+                _, C_tr = full.train(f)
+                s_rt = foldstats.validation_scores_per_target(
+                    full, f, Q_f, evals_f, C_tr, lams, cfg.scoring)
+                if lambda_mode == "global":
+                    # Host f64 accumulation in global column order — the
+                    # aggregate is independent of the blocking.
+                    score_sum[f] += np.asarray(
+                        s_rt[:, :w], np.float64).sum(axis=1)
+                else:
+                    fold_scores.append(jnp.mean(s_rt[:, :w], axis=1))
+            C_total_b = full.C_total                      # (p, t_pad)
+            if lambda_mode == "global":
+                # Stash the refit eigenbasis projection of the block — the
+                # only per-block quantity the final solve needs, computed
+                # HERE so λ selection costs no second pass over the rows.
+                Ahat = jnp.matmul(Q_R.T, C_total_b,
+                                  preferred_element_type=jnp.float32)
+                scratch[:, lo:hi] = np.asarray(Ahat)[:, :w]
+            else:
+                # ridge_cv_from_stats on the block-restricted statistics,
+                # with the factorisations hoisted: same ops, same bits.
+                cv_b = jnp.mean(jnp.stack(fold_scores), axis=0)
+                best_b = int(jnp.argmax(cv_b))
+                lam_b = float(np.asarray(lams)[best_b])
+                z = jnp.matmul(Q_R.T, C_total_b,
+                               preferred_element_type=jnp.float32)
+                z = z / (evals_R + lams[best_b])[:, None]
+                Wb = jnp.matmul(Q_R, z,
+                                preferred_element_type=jnp.float32)[:, :w]
+                per_block_lams.append(lam_b)
+                per_block_curves.append(np.asarray(cv_b, np.float64))
+                Wb = np.asarray(Wb)
+                if collect:
+                    W_full[:, lo:hi] = Wb
+                if writer is not None:
+                    writer.append(Wb)
+
+        scratch_bytes = 0
+        if lambda_mode == "global":
+            cv_scores = (score_sum / t).mean(axis=0)          # (r,) f64
+            best = int(np.argmax(cv_scores))
+            lam = float(np.asarray(lams)[best])
+            # -- weight pass: read each block's Â back, diagonal solve -------
+            # (padded back to t_pad so the final GEMM stays a bitwise
+            # column slice of the unblocked solve, even on a ragged tail).
+            scratch.flush()
+            for lo, hi in bounds:
+                w = hi - lo
+                Ab = np.zeros((p, t_pad), np.float32)
+                Ab[:, :w] = scratch[:, lo:hi]
+                z = jnp.asarray(Ab) / (evals_R + lams[best])[:, None]
+                Wb = jnp.matmul(Q_R, z,
+                                preferred_element_type=jnp.float32)[:, :w]
+                Wb = np.asarray(Wb)
+                if collect:
+                    W_full[:, lo:hi] = Wb
+                if writer is not None:
+                    writer.append(Wb)
+            scratch_bytes = p * t * 4
+            best_lambda = np.asarray([lam], np.float64)
+            curves = cv_scores[None, :]
+            lam_t = np.full((t,), lam, np.float64)
+        else:
+            best_lambda = np.asarray(per_block_lams, np.float64)
+            curves = np.stack(per_block_curves)
+            # λ per target from the REAL block bounds (the ceil-repeat
+            # expansion in serving_encoders.bundle assumes equal blocks).
+            lam_t = np.empty((t,), np.float64)
+            for lam_b, (lo, hi) in zip(per_block_lams, bounds):
+                lam_t[lo:hi] = lam_b
+    finally:
+        if scratch is not None:
+            del scratch                          # unmap before unlink
+        if scratch_path is not None and os.path.exists(scratch_path):
+            os.unlink(scratch_path)
+        if tmp_holder is not None:
+            import shutil
+            shutil.rmtree(tmp_holder, ignore_errors=True)
+
+    telemetry = {
+        **agg,
+        "n_blocks": len(bounds),
+        "t_block": t_block,
+        "t_pad": t_pad,
+        "eighs": k + 1,
+        "gram_compile_delta": foldstats.chunk_update_compile_count() - fixed0,
+        "colblock_compile_delta": (colblock_update_compile_count()
+                                   - colblock0),
+        "scratch_bytes": scratch_bytes if lambda_mode == "global" else 0,
+        "row_passes_x": 1 + len(bounds),
+        "row_passes_y": 1,
+    }
+    return WholebrainResult(
+        best_lambda=best_lambda, cv_scores=np.asarray(curves, np.float64),
+        lambdas=cfg.lambdas, lambda_mode=lambda_mode, t_block=t_block,
+        block_bounds=bounds, lambda_by_target=lam_t,
+        weights=W_full, telemetry=telemetry)
+
+
+__all__ = ["WholebrainResult", "fit_wholebrain"]

@@ -1,0 +1,95 @@
+"""Synthetic fleet + request-traffic generators (``serving_encoders.traffic``).
+
+These feed both ``launch/serve.py --encoders`` and
+``benchmarks/serving_bench.py``; the contracts locked down here are the
+ones the drivers rely on — seeded determinism (two drivers with the same
+seed replay the same traffic), the documented ragged row-size envelope,
+and fit-once bundle reuse."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.serving_encoders.bundle import EncoderBundle
+from repro.serving_encoders.traffic import build_synthetic_fleet, \
+    ragged_requests
+
+
+# ---------------------------------------------------------------------------
+# ragged_requests
+# ---------------------------------------------------------------------------
+
+def test_ragged_requests_seed_deterministic():
+    models = ["sub-01", "sub-02", "sub-03"]
+    a = ragged_requests(np.random.default_rng(7), models, p=6, wave_rows=16,
+                        count=25)
+    b = ragged_requests(np.random.default_rng(7), models, p=6, wave_rows=16,
+                        count=25)
+    assert [r.model for r in a] == [r.model for r in b]
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(ra.features, rb.features)
+    c = ragged_requests(np.random.default_rng(8), models, p=6, wave_rows=16,
+                        count=25)
+    assert ([r.features.shape for r in a] != [r.features.shape for r in c]
+            or any((ra.features != rc.features).any()
+                   for ra, rc in zip(a, c)))
+
+
+def test_ragged_requests_envelope():
+    """Row counts are ragged within [8, 2·wave_rows), features are f32
+    with the fleet's p, and models come from the given list."""
+    models = ["m0", "m1"]
+    reqs = ragged_requests(np.random.default_rng(0), models, p=4,
+                           wave_rows=16, count=200)
+    assert len(reqs) == 200
+    rows = {r.features.shape[0] for r in reqs}
+    assert all(8 <= n < 32 for n in rows)
+    assert len(rows) > 1                       # actually ragged
+    assert {r.model for r in reqs} == set(models)
+    for r in reqs:
+        assert r.features.dtype == np.float32
+        assert r.features.shape[1] == 4
+
+
+def test_ragged_requests_tiny_wave_guard():
+    """wave_rows <= 4 would make hi <= lo; the guard pins hi to 9."""
+    reqs = ragged_requests(np.random.default_rng(1), ["m"], p=2,
+                           wave_rows=4, count=50)
+    assert all(r.features.shape[0] == 8 for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# build_synthetic_fleet
+# ---------------------------------------------------------------------------
+
+def test_build_synthetic_fleet_reuses_bundles(tmp_path, capsys):
+    fleet = build_synthetic_fleet(str(tmp_path), 2, n=48, p=6, t=5)
+    assert [name for name, _ in fleet] == ["sub-01", "sub-02"]
+    mtimes = {}
+    for name, path in fleet:
+        b = EncoderBundle.open(path)
+        assert b.shape == (6, 5)
+        assert b.manifest["provenance"]["subject"] == name
+        mtimes[name] = os.stat(os.path.join(str(b.root),
+                                            "bundle.json")).st_mtime_ns
+    capsys.readouterr()
+    # Second call must reuse, not refit: same files, "reusing" messages.
+    again = build_synthetic_fleet(str(tmp_path), 2, n=48, p=6, t=5)
+    assert again == fleet
+    out = capsys.readouterr().out
+    assert out.count("reusing bundle") == 2 and "fitted" not in out
+    for name, path in again:
+        b = EncoderBundle.open(path)
+        assert os.stat(os.path.join(str(b.root),
+                                    "bundle.json")).st_mtime_ns == mtimes[name]
+    # Growing the fleet refits only the new member.
+    grown = build_synthetic_fleet(str(tmp_path), 3, n=48, p=6, t=5)
+    assert grown[:2] == fleet and grown[2][0] == "sub-03"
+    out = capsys.readouterr().out
+    assert out.count("reusing bundle") == 2 and out.count("fitted") == 1
+
+
+def test_build_synthetic_fleet_shape_mismatch(tmp_path):
+    build_synthetic_fleet(str(tmp_path), 1, n=48, p=6, t=5)
+    with pytest.raises(ValueError, match=r"\(p, t\)=\(6, 5\)"):
+        build_synthetic_fleet(str(tmp_path), 1, n=48, p=6, t=7)

@@ -1,0 +1,496 @@
+"""Whole-brain target-streaming subsystem: block invariance, artifacts.
+
+The lockdown contract: the column-blocked CV driver (``"global"`` λ mode)
+is BIT-IDENTICAL to the unblocked ``ridge.ridge_cv_from_stats`` — same λ,
+``np.testing.assert_array_equal`` on W — across block widths {one block,
+ragged tail, many blocks}, f32 and bf16-as-u16 stores, chunk sizes, and
+fold counts.  Property-based (hypothesis) where available, with a
+fixed-seed grid that always runs (the ``test_oocore`` pattern).  Plus:
+the ``BundleWriter`` streaming artifact path, lazy per-shard bundle
+reads, the registry's shard-granular residency, windowed serving, and
+the ``colblocked`` dispatch escalation.
+"""
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import foldstats, ridge
+from repro.core.ridge import RidgeCVConfig
+from repro.encoding import BrainEncoder, EncoderConfig, resolve
+from repro.encoding.dispatch import chunked_stats_bytes, pick_target_block
+from repro.encoding.estimator import EncodingReport
+from repro.serving_encoders.bundle import BundleError, EncoderBundle
+from repro.serving_encoders.registry import EncoderRegistry
+from repro.serving_encoders.service import EncoderService, ServiceError
+from repro.wholebrain import (
+    BundleWriter, ColumnBlockAccumulator, colblock_update_compile_count,
+    column_blocks, fit_wholebrain,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                # fixed-seed grid only
+    HAVE_HYPOTHESIS = False
+
+
+def _make_problem(seed, n, p, t, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, p)).astype(np.float32)
+    W = rng.normal(size=(p, t)).astype(np.float32) / np.sqrt(p)
+    Y = (X @ W + 0.05 * rng.normal(size=(n, t))).astype(np.float32)
+    if dtype == "bfloat16":
+        X = np.asarray(jnp.asarray(X, jnp.bfloat16))
+        Y = np.asarray(jnp.asarray(Y, jnp.bfloat16))
+    return X, Y
+
+
+def _reference(store, cfg):
+    """The unblocked statistics solve on the same store."""
+    stats = foldstats.compute_chunked(
+        store.iter_chunks(cfg.chunk_rows), store.shape[0], cfg.n_folds,
+        chunk_rows=cfg.chunk_rows)
+    rcfg = RidgeCVConfig(lambdas=cfg.lambdas, n_folds=cfg.n_folds,
+                         jitter=cfg.jitter, scoring=cfg.scoring,
+                         method="eigh")
+    return stats, ridge.ridge_cv_from_stats(stats, rcfg)
+
+
+def _check_block_invariance(make_run_store, seed, n, p, t, t_block, k,
+                            chunk, dtype=np.float32):
+    """Core harness: blocked λ and W bitwise-equal the unblocked solve."""
+    X, Y = _make_problem(seed, n, p, t, dtype=dtype)
+    store = make_run_store(X, Y, n_folds=k)
+    cfg = EncoderConfig(n_folds=k, chunk_rows=chunk)
+    _, ref = _reference(store, cfg)
+    res = fit_wholebrain(store, cfg, t_block=t_block)
+    assert float(res.best_lambda[0]) == float(np.asarray(ref.best_lambda)), \
+        f"λ diverged at t_block={t_block}"
+    np.testing.assert_array_equal(
+        res.weights, np.asarray(ref.weights),
+        err_msg=f"W not bitwise at t_block={t_block} ({dtype})")
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Column blocking
+# ---------------------------------------------------------------------------
+
+def test_column_blocks_shapes():
+    assert column_blocks(10, 4) == [(0, 4), (4, 8), (8, 10)]
+    assert column_blocks(8, 4) == [(0, 4), (4, 8)]
+    assert column_blocks(5, 99) == [(0, 5)]        # one covering block
+    assert column_blocks(1, 1) == [(0, 1)]         # t_block >= t is exempt
+    with pytest.raises(ValueError, match="t_block"):
+        column_blocks(10, 1)                       # width-1 gemv hazard
+    with pytest.raises(ValueError, match="t >= 1"):
+        column_blocks(0, 4)
+
+
+# ---------------------------------------------------------------------------
+# Target-block invariance: fixed-seed lockdown grid (always runs)
+# ---------------------------------------------------------------------------
+
+# t=23: t_block 23 → one block; 8 → ragged tail (8, 8, 7); 4 → many
+# blocks; 2 → the minimum legal width.
+@pytest.mark.parametrize("t_block", [23, 8, 4, 2])
+@pytest.mark.parametrize("dtype", [np.float32, "bfloat16"])
+def test_target_block_invariance_fixed(make_run_store, t_block, dtype):
+    _check_block_invariance(make_run_store, seed=0, n=96, p=7, t=23,
+                            t_block=t_block, k=5, chunk=17, dtype=dtype)
+
+
+def test_target_block_invariance_fold_misaligned(make_run_store):
+    """Chunk straddles folds AND the tail block is ragged: n=97 (folds of
+    20/20/19/19/19), chunks of 13, blocks of 9 over t=21."""
+    _check_block_invariance(make_run_store, seed=1, n=97, p=6, t=21,
+                            t_block=9, k=5, chunk=13)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**16), t=st.integers(3, 25),
+           t_block=st.integers(2, 30), k=st.integers(2, 6),
+           chunk=st.integers(1, 40))
+    def test_target_block_invariance_property(tmp_path_factory, seed, t,
+                                              t_block, k, chunk):
+        from repro.data.store import RunStore
+
+        X, Y = _make_problem(seed, 64, 5, t)
+        root = tmp_path_factory.mktemp("wb") / "store"
+        store = RunStore.create(str(root), n_folds=k)
+        store.write(X[:40], Y[:40], "r0")
+        store.write(X[40:], Y[40:], "r1")
+        store = RunStore.open(str(root))
+        cfg = EncoderConfig(n_folds=k, chunk_rows=chunk)
+        _, ref = _reference(store, cfg)
+        res = fit_wholebrain(store, cfg, t_block=max(2, min(t_block, t)))
+        assert float(res.best_lambda[0]) == float(
+            np.asarray(ref.best_lambda))
+        np.testing.assert_array_equal(res.weights, np.asarray(ref.weights))
+
+
+# ---------------------------------------------------------------------------
+# per_block λ mode + solver contracts
+# ---------------------------------------------------------------------------
+
+def test_per_block_matches_restricted_stats(make_run_store):
+    """Each block's λ/W equals ridge_cv_from_stats on the column-restricted
+    statistics — the B-MOR per-batch-λ semantics, streamed."""
+    X, Y = _make_problem(2, 96, 6, 13)
+    store = make_run_store(X, Y, n_folds=4)
+    cfg = EncoderConfig(n_folds=4, chunk_rows=32)
+    stats, _ = _reference(store, cfg)
+    res = fit_wholebrain(store, cfg, t_block=5, lambda_mode="per_block")
+    assert res.best_lambda.shape == (3,)
+    assert res.cv_scores.shape == (3, len(cfg.lambdas))
+    rcfg = RidgeCVConfig(lambdas=cfg.lambdas, n_folds=4, jitter=cfg.jitter,
+                         scoring=cfg.scoring, method="eigh")
+    for b, (lo, hi) in enumerate(res.block_bounds):
+        sub = foldstats.FoldStats(
+            G=stats.G, C=stats.C[:, :, lo:hi], xsum=stats.xsum,
+            ysum=stats.ysum[:, lo:hi], ysq=stats.ysq[:, lo:hi],
+            count=stats.count)
+        rr = ridge.ridge_cv_from_stats(sub, rcfg)
+        assert res.best_lambda[b] == float(np.asarray(rr.best_lambda))
+        np.testing.assert_allclose(res.weights[:, lo:hi],
+                                   np.asarray(rr.weights),
+                                   rtol=2e-5, atol=2e-4)
+        # λ-by-target expansion uses the REAL (ragged) bounds.
+        assert (res.lambda_by_target[lo:hi] == res.best_lambda[b]).all()
+
+
+def test_one_compile_across_blocks(make_run_store):
+    """However many blocks stream, the column-block update traces at most
+    once per (chunk, p, t_pad, k) signature — and zero on a repeat fit."""
+    X, Y = _make_problem(3, 64, 5, 24)
+    store = make_run_store(X, Y, n_folds=4)
+    cfg = EncoderConfig(n_folds=4, chunk_rows=16)
+    res = fit_wholebrain(store, cfg, t_block=6)            # 4 blocks
+    assert res.telemetry["n_blocks"] == 4
+    assert res.telemetry["colblock_compile_delta"] <= 1
+    res2 = fit_wholebrain(store, cfg, t_block=6)           # warm cache
+    assert res2.telemetry["colblock_compile_delta"] == 0
+
+
+def test_fit_wholebrain_validation(make_run_store):
+    X, Y = _make_problem(4, 40, 4, 6)
+    store = make_run_store(X, Y, n_folds=3)
+    cfg = EncoderConfig(n_folds=3)
+    with pytest.raises(ValueError, match="t_block"):
+        fit_wholebrain(store, cfg)                         # no block width
+    with pytest.raises(ValueError, match="lambda_mode"):
+        fit_wholebrain(store, cfg, t_block=3, lambda_mode="nope")
+    with pytest.raises(ValueError, match="n_folds"):
+        fit_wholebrain(store, EncoderConfig(n_folds=5), t_block=3)
+    with pytest.raises(ValueError, match="ridge solver"):
+        fit_wholebrain(store, EncoderConfig(n_folds=3, solver="bmor"),
+                       t_block=3)
+    # The row tier's un-standardized-target refusal, per block.
+    Yoff = Y + 500.0
+    store2 = make_run_store(X, Yoff, n_folds=3)
+    with pytest.raises(ValueError, match="mean/std"):
+        fit_wholebrain(store2, cfg, t_block=3)
+
+
+def test_colblock_accumulator_grafts_bitwise(make_run_store):
+    """ColumnBlockStats + the shared X-only pass == the fused full-width
+    accumulation, bitwise, on the block's columns."""
+    X, Y = _make_problem(5, 48, 5, 11)
+    store = make_run_store(X, Y, n_folds=3)
+    full = foldstats.compute_chunked(store.iter_chunks(16), 48, 3,
+                                     chunk_rows=16)
+    lo, hi = 4, 9
+    acc = ColumnBlockAccumulator(48, 3, t_pad=5, chunk_rows=16)
+    for Xc, Yc in store.iter_chunks(16, col_range=(lo, hi)):
+        acc.update(Xc, Yc)
+    b = acc.finalize()
+    np.testing.assert_array_equal(np.asarray(b.C),
+                                  np.asarray(full.C[:, :, lo:hi]))
+    np.testing.assert_array_equal(np.asarray(b.ysum),
+                                  np.asarray(full.ysum[:, lo:hi]))
+    np.testing.assert_array_equal(np.asarray(b.ysq),
+                                  np.asarray(full.ysq[:, lo:hi]))
+    np.testing.assert_array_equal(np.asarray(b.count),
+                                  np.asarray(full.count))
+
+
+# ---------------------------------------------------------------------------
+# Dispatch escalation
+# ---------------------------------------------------------------------------
+
+def test_dispatch_colblocked_escalation():
+    n, p, t = 10_000, 64, 4_096
+    # Budget below even the chunked tier's statistics → colblocked, with a
+    # budget-derived block width.
+    small = chunked_stats_bytes(5, p, t) // 2
+    cfg = EncoderConfig(device_memory_budget=small)
+    d = resolve(cfg, n, p, t, 1)
+    assert d.method == "colblocked" and d.solver == "ridge"
+    assert 2 <= d.target_block < t
+    assert d.target_block == pick_target_block(small, 5, p, t)
+    assert "colblocked" not in d.rationale  # rationale is prose
+    assert "t_block" in d.rationale
+    # Budget that fits the statistics but not the arrays → chunked.
+    d2 = resolve(EncoderConfig(
+        device_memory_budget=chunked_stats_bytes(5, p, t) * 2), n, p, t, 1)
+    assert d2.method == "chunked" and d2.target_block is None
+    # An explicit target_block opts in even when chunked would fit.
+    d3 = resolve(EncoderConfig(
+        device_memory_budget=chunked_stats_bytes(5, p, t) * 2,
+        target_block=512), n, p, t, 1)
+    assert d3.method == "colblocked" and d3.target_block == 512
+    # Serialized decisions from before the field existed still round-trip.
+    import dataclasses
+    old = dataclasses.asdict(d2)
+    old.pop("target_block")
+    from repro.encoding.dispatch import DispatchDecision
+    assert DispatchDecision(**old).target_block is None
+
+
+def test_estimator_routes_colblocked(make_run_store):
+    """fit(store=) under a colblocked decision matches the chunked path's
+    report bitwise (same λ, same W)."""
+    X, Y = _make_problem(6, 80, 6, 18)
+    store = make_run_store(X, Y, n_folds=5)
+    enc = BrainEncoder(EncoderConfig(n_folds=5, chunk_rows=32,
+                                     device_memory_budget=1,
+                                     target_block=7)).fit(store=store)
+    assert enc.report_.decision.method == "colblocked"
+    assert enc.stream_stats_["compile_count"] <= 1
+    assert enc.stream_stats_["n_blocks"] == 3
+    ref = BrainEncoder(EncoderConfig(
+        n_folds=5, chunk_rows=32,
+        device_memory_budget=chunked_stats_bytes(5, 6, 18) * 2)
+        ).fit(store=store)
+    assert ref.report_.decision.method == "chunked"
+    np.testing.assert_array_equal(np.asarray(enc.report_.weights),
+                                  np.asarray(ref.report_.weights))
+    assert enc.report_.best_lambda == ref.report_.best_lambda
+
+
+# ---------------------------------------------------------------------------
+# Streaming artifact: BundleWriter
+# ---------------------------------------------------------------------------
+
+def _write_bundle(tmp_path, res, cfg, decision, name="bundle", **commit_kw):
+    path = str(tmp_path / name)
+    with BundleWriter(path, p=res.weights.shape[0],
+                      t=res.weights.shape[1]) as w:
+        for lo, hi in res.block_bounds:
+            w.append(res.weights[:, lo:hi])
+        report = EncodingReport(weights=None, best_lambda=res.best_lambda,
+                                cv_scores=res.cv_scores, lambdas=cfg.lambdas,
+                                decision=decision)
+        w.commit(config=cfg, report=report,
+                 lambda_by_target=res.lambda_by_target, **commit_kw)
+    return path
+
+
+def test_bundle_writer_round_trip(make_run_store, tmp_path):
+    X, Y = _make_problem(7, 64, 5, 13)
+    store = make_run_store(X, Y, n_folds=3)
+    cfg = EncoderConfig(n_folds=3, chunk_rows=16, device_memory_budget=1,
+                        target_block=6)
+    decision = resolve(cfg, *store.shape, 1)
+    res = fit_wholebrain(store, cfg, t_block=6)
+    path = _write_bundle(tmp_path, res, cfg, decision)
+    b = EncoderBundle.open(path)                     # full eager validation
+    assert b.shape == (5, 13)
+    assert b.weight_shard_bounds() == res.block_bounds
+    assert b.decision().target_block == decision.target_block
+    W = np.concatenate([b.load_weight_shard(i) for i in range(3)], axis=1)
+    np.testing.assert_array_equal(W, res.weights)
+    # Round-trip through the ordinary loader: predict parity.
+    enc = b.load_encoder()
+    np.testing.assert_array_equal(np.asarray(enc.weights_), res.weights)
+    arrays = b.load_arrays(["lambda_by_target"])
+    np.testing.assert_array_equal(arrays["lambda_by_target"],
+                                  res.lambda_by_target)
+
+
+def test_bundle_writer_bf16_and_errors(make_run_store, tmp_path):
+    X, Y = _make_problem(8, 48, 4, 9)
+    store = make_run_store(X, Y, n_folds=3)
+    cfg = EncoderConfig(n_folds=3, chunk_rows=16, target_block=4)
+    decision = resolve(EncoderConfig(n_folds=3, device_memory_budget=1,
+                                     target_block=4), *store.shape, 1)
+    res = fit_wholebrain(store, cfg, t_block=4)
+
+    path = str(tmp_path / "bf16")
+    with BundleWriter(path, p=4, t=9, weight_dtype="bfloat16") as w:
+        for lo, hi in res.block_bounds:
+            w.append(res.weights[:, lo:hi])
+        w.commit(config=cfg, report=EncodingReport(
+            weights=None, best_lambda=res.best_lambda,
+            cv_scores=res.cv_scores, lambdas=cfg.lambdas,
+            decision=decision))
+    b = EncoderBundle.open(path)
+    assert b.weight_dtype == jnp.bfloat16
+    shard = b.load_weight_shard(0)
+    assert jnp.asarray(shard).dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(shard),
+        np.asarray(jnp.asarray(res.weights[:, :4]).astype(jnp.bfloat16)))
+
+    # Incomplete coverage refuses to commit.
+    with BundleWriter(str(tmp_path / "short"), p=4, t=9) as w:
+        w.append(res.weights[:, :4])
+        with pytest.raises(BundleError, match="cover"):
+            w.commit(config=cfg, report=EncodingReport(
+                weights=None, best_lambda=res.best_lambda,
+                cv_scores=res.cv_scores, lambdas=cfg.lambdas,
+                decision=decision))
+    assert not os.path.exists(str(tmp_path / "short"))    # abort cleaned up
+    # Wrong shard shape / overflow refuse at append.
+    with BundleWriter(str(tmp_path / "bad"), p=4, t=9) as w:
+        with pytest.raises(BundleError, match="p=4"):
+            w.append(np.zeros((5, 3), np.float32))
+        with pytest.raises(BundleError, match="overflow"):
+            w.append(np.zeros((4, 10), np.float32))
+    # Existing bundle refuses without overwrite=True.
+    with pytest.raises(BundleError, match="overwrite"):
+        BundleWriter(path, p=4, t=9)
+    # No stray staging dirs left behind anywhere.
+    assert not [d for d in os.listdir(tmp_path)
+                if d.startswith(".tmpbundle_")]
+
+
+def test_writer_solver_streaming_save(make_run_store, tmp_path):
+    """writer= streams shards during the fit itself (collect=False →
+    weights never assembled in memory) and the bundle round-trips."""
+    X, Y = _make_problem(9, 64, 5, 14)
+    store = make_run_store(X, Y, n_folds=3)
+    cfg = EncoderConfig(n_folds=3, chunk_rows=16, target_block=6)
+    decision = resolve(EncoderConfig(n_folds=3, device_memory_budget=1,
+                                     target_block=6), *store.shape, 1)
+    ref = fit_wholebrain(store, cfg, t_block=6)
+    path = str(tmp_path / "streamed")
+    with BundleWriter(path, p=5, t=14) as w:
+        res = fit_wholebrain(store, cfg, t_block=6, writer=w,
+                             collect=False)
+        assert res.weights is None
+        w.commit(config=cfg, report=EncodingReport(
+            weights=None, best_lambda=res.best_lambda,
+            cv_scores=res.cv_scores, lambdas=cfg.lambdas,
+            decision=decision), lambda_by_target=res.lambda_by_target)
+    b = EncoderBundle.open(path)
+    W = np.concatenate([b.load_weight_shard(i, mmap=True)
+                        for i in range(len(res.block_bounds))], axis=1)
+    np.testing.assert_array_equal(W, ref.weights)
+
+
+# ---------------------------------------------------------------------------
+# Lazy shard reads + registry shard residency + windowed serving
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def wb_bundle(make_run_store, tmp_path):
+    X, Y = _make_problem(10, 64, 5, 20)
+    store = make_run_store(X, Y, n_folds=3)
+    cfg = EncoderConfig(n_folds=3, chunk_rows=16, target_block=6)
+    decision = resolve(EncoderConfig(n_folds=3, device_memory_budget=1,
+                                     target_block=6), *store.shape, 1)
+    res = fit_wholebrain(store, cfg, t_block=6)    # bounds 6/6/6/2
+    path = _write_bundle(tmp_path, res, cfg, decision, name="wb")
+    return path, res
+
+
+def test_lazy_shard_access(wb_bundle):
+    path, res = wb_bundle
+    b = EncoderBundle.open(path)
+    assert b.shards_for_columns(0, 6) == [0]
+    assert b.shards_for_columns(5, 7) == [0, 1]
+    assert b.shards_for_columns(18, 20) == [3]
+    with pytest.raises(BundleError, match="window"):
+        b.shards_for_columns(5, 25)
+    with pytest.raises(BundleError, match="range"):
+        b.load_weight_shard(4)
+    mm = b.load_weight_shard(1, mmap=True)
+    assert isinstance(mm, np.memmap)               # lazy: pages on touch
+    np.testing.assert_array_equal(np.asarray(mm), res.weights[:, 6:12])
+    with pytest.raises(BundleError, match="not in the checkpoint"):
+        b.load_arrays(["nope"])
+
+
+def test_registry_shard_granular_lru(wb_bundle):
+    path, res = wb_bundle
+    reg = EncoderRegistry(wave_rows=8)
+    reg.add("m", path)
+    got = reg.get_columns("m", (5, 13))            # shards 0, 1, 2
+    assert [e.shard for e in got] == [0, 1, 2]
+    assert reg.stats()["shard_loads"] == 3 and reg.stats()["loaded"] == 0
+    reg.get_columns("m", (6, 12))                  # pure hit
+    assert reg.stats()["shard_hits"] == 1 and reg.stats()["shard_loads"] == 3
+    np.testing.assert_array_equal(np.asarray(got[1].W),
+                                  res.weights[:, 6:12])
+    # Shard-granular eviction: budget for ~2 shards drops LRU shards only.
+    from repro.serving_encoders.registry import shard_resident_bytes
+    per = shard_resident_bytes(reg.bundle("m"), 6, 8)
+    small = EncoderRegistry(wave_rows=8, device_memory_budget=2 * per + 16)
+    small.add("m", path)
+    small.get_columns("m", (0, 12))                # shards 0, 1 resident
+    small.get_columns("m", (12, 18))               # shard 2 evicts shard 0
+    assert ("m", 0) not in small.loaded_shards
+    assert ("m", 2) in small.loaded_shards
+    assert small.evictions >= 1
+    # evict(name) clears the model's shards too.
+    assert small.evict("m")
+    assert not small.loaded_shards
+
+
+def test_service_predict_columns(wb_bundle):
+    path, res = wb_bundle
+    reg = EncoderRegistry(wave_rows=8)
+    reg.add("m", path)
+    svc = EncoderService(reg, wave_rows=8)
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(13, 5)).astype(np.float32)   # ragged final wave
+    P = svc.predict_columns("m", X, (5, 13))
+    assert P.shape == (13, 8)
+    np.testing.assert_allclose(P, X @ res.weights[:, 5:13],
+                               rtol=1e-5, atol=1e-5)
+    # Only the overlapping shards were paged in.
+    assert set(reg.loaded_shards) == {("m", 0), ("m", 1), ("m", 2)}
+    # Fixed-shape waves: repeat with same shapes compiles nothing new.
+    before = svc.compile_count
+    svc.predict_columns("m", X, (5, 13))
+    assert svc.compile_count == before
+    with pytest.raises(ServiceError, match="window"):
+        svc.predict_columns("m", X, (13, 5))
+    with pytest.raises(ServiceError, match="features"):
+        svc.predict_columns("m", X[:, :3], (5, 13))
+
+
+def test_service_predict_columns_standardized(make_run_store, tmp_path):
+    """μ/σ are applied per shard slice exactly as the full path does."""
+    from repro.encoding.pipeline import Standardizer
+
+    X, Y = _make_problem(11, 64, 4, 10)
+    store = make_run_store(X, Y, n_folds=3)
+    cfg = EncoderConfig(n_folds=3, chunk_rows=16, target_block=4)
+    decision = resolve(EncoderConfig(n_folds=3, device_memory_budget=1,
+                                     target_block=4), *store.shape, 1)
+    res = fit_wholebrain(store, cfg, t_block=4)
+    rng = np.random.default_rng(1)
+    std = Standardizer()
+    std.mu_x = rng.normal(size=(4,)).astype(np.float32)
+    std.sd_x = (1 + rng.random(size=(4,))).astype(np.float32)
+    std.mu_y = rng.normal(size=(10,)).astype(np.float32)
+    std.sd_y = (1 + rng.random(size=(10,))).astype(np.float32)
+    path = _write_bundle(tmp_path, res, cfg, decision, name="std",
+                         standardizer=std)
+    reg = EncoderRegistry(wave_rows=8)
+    reg.add("m", path)
+    svc = EncoderService(reg, wave_rows=8)
+    Xq = rng.normal(size=(6, 4)).astype(np.float32)
+    P = svc.predict_columns("m", Xq, (3, 9))
+    # Same per-shard compiled wave → any window is a bitwise slice of the
+    # full-width window.
+    full = svc.predict_columns("m", Xq, (0, 10))
+    np.testing.assert_array_equal(P, full[:, 3:9])
+    manual = ((Xq - std.mu_x) / std.sd_x) @ res.weights * std.sd_y + std.mu_y
+    np.testing.assert_allclose(P, manual[:, 3:9], rtol=1e-5, atol=1e-5)
