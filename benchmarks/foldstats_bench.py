@@ -16,6 +16,14 @@ trajectory is machine-readable::
 
 ``--smoke`` runs one tiny shape with a single rep — a CI guard that the
 perf path still imports and the two implementations still agree.
+
+Streamed A/B rows (``*_streamed``) time the chunked fold-statistics
+accumulation with the kernel tier off vs on (``use_pallas``), assert λ
+bit-identity between the two, and carry the §3 roofline placement of the
+fit (``launch.roofline_report.encoding_roofline``).  ``--use-pallas``
+additionally requires the AUTO kernel-tier dispatch to engage (setting
+``REPRO_PALLAS_FORCE_INTERPRET=1`` if unset) and exits non-zero on a
+silent fallback — the CI pallas lane's guard.
 """
 from __future__ import annotations
 
@@ -38,6 +46,15 @@ SHAPES = [
     ("dual", 256, 1024, 256),
 ]
 SMOKE_SHAPES = [("smoke", 96, 16, 8), ("smoke_dual", 24, 48, 8)]
+
+# (name, n, p, t, chunk_rows) for the streamed fused-vs-unfused A/B.  Kept
+# to the primal shapes: the kernel tier lives in the streamed masked
+# update, which the dual path never routes through.
+STREAMED_SHAPES = [
+    ("small", 512, 128, 256, 128),
+    ("medium", 1024, 256, 512, 256),
+]
+SMOKE_STREAMED_SHAPES = [("smoke", 96, 16, 8, 32)]
 
 
 def timed(fn, reps: int) -> float:
@@ -83,10 +100,61 @@ def bench_shape(name: str, n: int, p: int, t: int, n_folds: int,
     return row
 
 
+def bench_streamed(name: str, n: int, p: int, t: int, chunk_rows: int,
+                   n_folds: int, reps: int) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.core import foldstats, ridge
+    from repro.kernels.ops import _interpret
+    from repro.launch.roofline_report import encoding_roofline
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    X = jax.random.normal(k1, (n, p), jnp.float32)
+    Y = jax.random.normal(k2, (n, t), jnp.float32)
+    chunks = [(X[i:i + chunk_rows], Y[i:i + chunk_rows])
+              for i in range(0, n, chunk_rows)]
+
+    def run(up: bool):
+        return foldstats.compute_chunked(iter(chunks), n, n_folds,
+                                         chunk_rows=chunk_rows,
+                                         use_pallas=up).G
+
+    unfused_us = timed(lambda: run(False), reps)
+    fused_us = timed(lambda: run(True), reps)
+
+    cfg = ridge.RidgeCVConfig(n_folds=n_folds)
+    lam = [float(ridge.ridge_cv_from_stats(
+        foldstats.compute_chunked(iter(chunks), n, n_folds,
+                                  chunk_rows=chunk_rows, use_pallas=up),
+        cfg).best_lambda) for up in (False, True)]
+    lambda_match = lam[0] == lam[1]
+    tier = "interpret" if _interpret() else "compiled"
+    roof = encoding_roofline(n, p, t, r=len(cfg.lambdas), n_folds=n_folds,
+                             wall_s=min(unfused_us, fused_us) * 1e-6)
+    row = {"name": f"{name}_streamed", "n": n, "p": p, "t": t,
+           "n_folds": n_folds, "chunk_rows": chunk_rows,
+           "unfused_us": round(unfused_us, 1),
+           "fused_us": round(fused_us, 1),
+           "fused_speedup": round(unfused_us / fused_us, 3),
+           "kernel_tier": tier, "lambda_match": lambda_match,
+           "roofline": roof}
+    print(f"foldstats_{name}_streamed,{fused_us:.1f},"
+          f"unfused_us={unfused_us:.1f};tier={tier};"
+          f"lambda_match={lambda_match};"
+          f"bottleneck={roof['bottleneck']}", flush=True)
+    if not lambda_match:
+        raise SystemExit(f"λ selection diverged fused-vs-unfused on {name}")
+    return row
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shape, 1 rep — perf-path import/parity guard")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="require the AUTO kernel tier to engage (sets "
+                         "REPRO_PALLAS_FORCE_INTERPRET=1 if unset); exits "
+                         "non-zero on silent fallback")
     ap.add_argument("--n-folds", type=int, default=5)
     ap.add_argument("--reps", type=int, default=5)
     ap.add_argument("--out", default=None,
@@ -99,11 +167,28 @@ def main() -> None:
                 else "BENCH_foldstats.json")
         args.out = os.path.join(REPO, name)
 
+    if args.use_pallas:
+        os.environ.setdefault("REPRO_PALLAS_FORCE_INTERPRET", "1")
+        from repro.encoding import dispatch
+        from repro.encoding.config import EncoderConfig
+        cfg = EncoderConfig()  # use_pallas=None — the auto default
+        if not cfg.resolve_use_pallas():
+            raise SystemExit("--use-pallas: auto kernel tier did not "
+                             "engage (silent fallback)")
+        d = dispatch.resolve(cfg, 512, 128, 256, 1)
+        if not d.use_pallas:
+            raise SystemExit("--use-pallas: dispatch dropped the kernel "
+                             f"tier (silent fallback): {d.rationale}")
+        print(f"# kernel tier engaged: {d.rationale}")
+
     shapes = SMOKE_SHAPES if args.smoke else SHAPES
+    streamed = SMOKE_STREAMED_SHAPES if args.smoke else STREAMED_SHAPES
     reps = 1 if args.smoke else args.reps
     print("name,us_per_call,derived")
     rows = [bench_shape(name, n, p, t, args.n_folds, reps)
             for name, n, p, t in shapes]
+    rows += [bench_streamed(name, n, p, t, c, args.n_folds, reps)
+             for name, n, p, t, c in streamed]
     payload = {"n_folds": args.n_folds, "smoke": args.smoke, "rows": rows}
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)

@@ -6,8 +6,10 @@ request traffic:
 
 * **Wave sweep** — for each wave size, serve batches of ragged concurrent
   requests across all registry entries and record per-``serve()`` p50/p99
-  latency, waves/s, and rows/s.  The first call per wave size is the cold
-  (compiling) call, reported separately.
+  latency, waves/s, and rows/s, plus the roofline placement of one wave
+  (``launch.roofline_report.predict_roofline``, achieved FLOP/s from the
+  p50).  The first call per wave size is the cold (compiling) call,
+  reported separately.
 * **Bucketed sweep** — the same traffic through a ``wave_buckets``
   service (2–3 ladder shapes picked per wave by rows remaining): records
   waves/rows/pad-fraction PER BUCKET plus the total pad fraction, the
@@ -219,14 +221,21 @@ def main() -> None:
         models.append(name)
     service = EncoderService(registry, wave_rows=wave_sizes[0])
 
+    from repro.launch.roofline_report import predict_roofline
+
     sweep = []
     for w in wave_sizes:
         row = sweep_wave(service, models, p, w, batches, reqs, seed=w)
+        # Roofline placement of one wave (Ŷ = X·W at this wave shape),
+        # achieved FLOP/s from the measured p50 — informational only.
+        row["roofline"] = predict_roofline(w, p, t,
+                                           wall_s=row["p50_ms"] * 1e-3)
         sweep.append(row)
         print(f"wave_rows={w:4d}: cold {row['cold_ms']:.1f} ms, "
               f"p50 {row['p50_ms']:.2f} ms, p99 {row['p99_ms']:.2f} ms, "
               f"{row['waves_per_s']:.0f} waves/s, "
-              f"{row['rows_per_s']:.0f} rows/s")
+              f"{row['rows_per_s']:.0f} rows/s, "
+              f"{row['roofline']['bottleneck']}-bound")
 
     # THE acceptance assertion: one compiled predict per distinct wave
     # shape — model count and request traffic must not multiply traces.

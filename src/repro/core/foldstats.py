@@ -204,14 +204,16 @@ class _FixedShapeUpdate:
 
     def __init__(self) -> None:
         self.compile_count = 0
-        self._fn = jax.jit(self._update)
+        self._fn = jax.jit(self._update, static_argnames=("use_pallas",))
 
-    def __call__(self, stats: FoldStats, X, Y, onehot, slot_fold
-                 ) -> FoldStats:
-        return self._fn(stats, X, Y, onehot, slot_fold)
+    def __call__(self, stats: FoldStats, X, Y, onehot, slot_fold, *,
+                 use_pallas: bool = False) -> FoldStats:
+        return self._fn(stats, X, Y, onehot, slot_fold,
+                        use_pallas=use_pallas)
 
     def _update(self, stats: FoldStats, X: jax.Array, Y: jax.Array,
-                onehot: jax.Array, slot_fold: jax.Array) -> FoldStats:
+                onehot: jax.Array, slot_fold: jax.Array,
+                use_pallas: bool = False) -> FoldStats:
         # Python side effect at TRACE time only: counts actual program
         # builds, the O(1)-compiles contract tests and the oocore bench
         # assert on.
@@ -221,9 +223,18 @@ class _FixedShapeUpdate:
         # One fused Xᵀ[X | Y] per slot — a single batched GEMM per chunk.
         Z = jnp.concatenate([X.astype(dt), Y.astype(dt)], axis=1)
         w = onehot                                          # (m, s) f32 0/1
-        Xw = X.astype(dt)[None] * jnp.swapaxes(w, 0, 1)[:, :, None].astype(dt)
-        GC = jnp.einsum("smp,mq->spq", Xw, Z,
-                        preferred_element_type=jnp.float32)  # (s, p, p+t)
+        if use_pallas:
+            # Kernel tier: mask + Gram + cross-covariance fused into one
+            # VMEM-resident blocked reduction — one HBM pass per chunk,
+            # the (s, m, p) masked intermediate never materialised.
+            from repro.kernels import ops
+            GC = ops.xty_folds_masked(X.astype(dt), Z,
+                                      w.astype(dt))         # (s, p, p+t)
+        else:
+            Xw = (X.astype(dt)[None]
+                  * jnp.swapaxes(w, 0, 1)[:, :, None].astype(dt))
+            GC = jnp.einsum("smp,mq->spq", Xw, Z,
+                            preferred_element_type=jnp.float32)
         Xf, Yf = X.astype(jnp.float32), Y.astype(jnp.float32)
         cnt = jnp.sum(w, axis=0)                             # (s,)
         xsum = jnp.einsum("ms,mp->sp", w, Xf,
@@ -298,8 +309,14 @@ class FoldStatsAccumulator:
 
     def __init__(self, n_total: int, n_folds: int, *, row_start: int = 0,
                  row_stop: int | None = None,
-                 chunk_rows: int | None = None):
+                 chunk_rows: int | None = None,
+                 use_pallas: bool = False):
         self.n_total = n_total
+        # Kernel-tier flag for the heavy [G|C] contribution.  Static under
+        # the jit, so fused and unfused streams are distinct signatures —
+        # each still traces exactly once (the compile_count contract is
+        # per signature, and a process never mixes tiers mid-stream).
+        self.use_pallas = use_pallas
         self.bounds = fold_bounds(n_total, n_folds)
         self.row_start = row_start
         self.row_stop = n_total if row_stop is None else row_stop
@@ -362,7 +379,8 @@ class FoldStatsAccumulator:
         stay shared.
         """
         self._stats = _FIXED_UPDATE(self._stats, jnp.asarray(Xs),
-                                    jnp.asarray(Ys), onehot, slot_fold)
+                                    jnp.asarray(Ys), onehot, slot_fold,
+                                    use_pallas=self.use_pallas)
 
     def update(self, X_chunk: jax.Array, Y_chunk: jax.Array) -> None:
         import numpy as np
@@ -410,15 +428,19 @@ class FoldStatsAccumulator:
 
 def compute_chunked(chunks: Iterable[tuple[jax.Array, jax.Array]],
                     n_total: int, n_folds: int, *,
-                    chunk_rows: int | None = None) -> FoldStats:
+                    chunk_rows: int | None = None,
+                    use_pallas: bool = False) -> FoldStats:
     """One-call streaming accumulation over ``(X_chunk, Y_chunk)`` batches.
 
     ``chunk_rows`` pins the fixed shape of the compiled masked update up
     front (one trace for the whole stream); omitted, it is inferred from
-    the first chunk.  Iterators with a ``close`` method (the prefetching
-    store reader) are closed on every exit path.
+    the first chunk.  ``use_pallas`` routes the heavy [G|C] contribution
+    through the fused ``kernels.gram.xty_folds_masked`` tier.  Iterators
+    with a ``close`` method (the prefetching store reader) are closed on
+    every exit path.
     """
-    acc = FoldStatsAccumulator(n_total, n_folds, chunk_rows=chunk_rows)
+    acc = FoldStatsAccumulator(n_total, n_folds, chunk_rows=chunk_rows,
+                               use_pallas=use_pallas)
     try:
         for X_chunk, Y_chunk in chunks:
             acc.update(X_chunk, Y_chunk)
@@ -485,7 +507,8 @@ def compute_sharded_chunked(
         shard_streams: Sequence[Iterable[tuple[jax.Array, jax.Array]]],
         n_total: int, n_folds: int, *, mesh=None,
         data_axis: str = "data",
-        chunk_rows: int | None = None) -> FoldStats:
+        chunk_rows: int | None = None,
+        use_pallas: bool = False) -> FoldStats:
     """Sharded out-of-core accumulation along ``data_axis``.
 
     ``shard_streams[s]`` yields shard ``s``'s row chunks, covering exactly
@@ -512,7 +535,8 @@ def compute_sharded_chunked(
     parts: list[FoldStats] = []
     for (lo, hi), stream in zip(ranges, shard_streams):
         acc = FoldStatsAccumulator(n_total, n_folds, row_start=lo,
-                                   row_stop=hi, chunk_rows=chunk_rows)
+                                   row_stop=hi, chunk_rows=chunk_rows,
+                                   use_pallas=use_pallas)
         try:
             for X_chunk, Y_chunk in stream:
                 acc.update(X_chunk, Y_chunk)

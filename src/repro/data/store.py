@@ -159,6 +159,7 @@ class ChunkPrefetcher:
     def __init__(self, store: "RunStore", chunk_rows: int, *,
                  dtype: np.dtype | None, row_range: tuple[int, int] | None,
                  col_range: tuple[int, int] | None = None,
+                 col_range_x: tuple[int, int] | None = None,
                  depth: int = 2):
         if depth < 1:
             raise ValueError(f"prefetch depth must be >= 1, got {depth}")
@@ -167,6 +168,7 @@ class ChunkPrefetcher:
         self._dtype = dtype
         self._row_range = row_range
         self._col_range = col_range
+        self._col_range_x = col_range_x
         self._depth = depth
         self.stats = PrefetchStats()
         self._queue: queue.Queue = queue.Queue(maxsize=depth)
@@ -184,9 +186,11 @@ class ChunkPrefetcher:
         dt_y = self._dtype or self._store.dtype_y
         clo, chi = (self._col_range if self._col_range is not None
                     else (0, self._store.t))
+        xlo, xhi = (self._col_range_x if self._col_range_x is not None
+                    else (0, self._store.p))
         n_buf = self._depth + 2
         self._bufs = [
-            (np.empty((self._chunk_rows, self._store.p), dt_x),
+            (np.empty((self._chunk_rows, xhi - xlo), dt_x),
              np.empty((self._chunk_rows, chi - clo), dt_y))
             for _ in range(n_buf)]
         self._thread = threading.Thread(
@@ -214,7 +218,8 @@ class ChunkPrefetcher:
             seq = 0
             for X_c, Y_c in self._store.iter_chunks(
                     self._chunk_rows, dtype=self._dtype,
-                    row_range=self._row_range, col_range=self._col_range):
+                    row_range=self._row_range, col_range=self._col_range,
+                    col_range_x=self._col_range_x):
                 if self._stop.is_set():
                     return
                 bx, by = self._bufs[seq % len(self._bufs)]
@@ -467,6 +472,7 @@ class RunStore:
     def iter_chunks(self, chunk_rows: int, *, dtype: np.dtype | str | None
                     = None, row_range: tuple[int, int] | None = None,
                     col_range: tuple[int, int] | None = None,
+                    col_range_x: tuple[int, int] | None = None,
                     prefetch: bool = False, prefetch_depth: int = 2
                     ) -> Iterator[tuple[np.ndarray, np.ndarray]]:
         """Yield ``(X_chunk, Y_chunk)`` row batches in global row order.
@@ -485,8 +491,12 @@ class RunStore:
         (``repro.wholebrain``).  ``col_range=(0, 0)`` yields zero-width
         ``Y`` chunks, which is how the X-only Gram pass streams the rows
         without reading one byte of the (much wider) target shards.
-        ``X`` is never column-windowed: the whole point of the regime is
-        p ≪ t.
+        ``col_range_x`` is the (rare) mirror for ``X``.  Whole-brain fits
+        never window REAL feature columns (p ≪ t is the whole regime);
+        its one use is ``col_range_x=(0, 0)`` — a Y-only pass that reads
+        zero bytes of the feature shards while a host-side chunk cache
+        supplies the ``X`` rows captured during an earlier stream (the
+        single-X-pass composition in ``repro.wholebrain.solver``).
 
         ``prefetch=True`` returns a ``ChunkPrefetcher`` instead: a
         background reader stages the NEXT chunk into a reusable host
@@ -509,16 +519,24 @@ class RunStore:
             if not 0 <= clo <= chi <= (self.t or 0):
                 raise ValueError(f"col_range {col_range} outside "
                                  f"[0, {self.t}]")
+        if col_range_x is not None:
+            xlo, xhi = col_range_x
+            if not 0 <= xlo <= xhi <= (self.p or 0):
+                raise ValueError(f"col_range_x {col_range_x} outside "
+                                 f"[0, {self.p}]")
         dtype = _normalize_dtype(dtype)
         if prefetch:
             return ChunkPrefetcher(self, chunk_rows, dtype=dtype,
                                    row_range=(lo, hi), col_range=col_range,
+                                   col_range_x=col_range_x,
                                    depth=prefetch_depth)
-        return self._iter_chunks_sync(chunk_rows, dtype, lo, hi, col_range)
+        return self._iter_chunks_sync(chunk_rows, dtype, lo, hi, col_range,
+                                      col_range_x)
 
     def _iter_chunks_sync(self, chunk_rows: int, dtype: np.dtype | None,
                           lo: int, hi: int,
-                          col_range: tuple[int, int] | None = None
+                          col_range: tuple[int, int] | None = None,
+                          col_range_x: tuple[int, int] | None = None
                           ) -> Iterator[tuple[np.ndarray, np.ndarray]]:
         pending_x: list[np.ndarray] = []
         pending_y: list[np.ndarray] = []
@@ -539,6 +557,8 @@ class RunStore:
                 # Column window of the memmap: a strided VIEW — zero-copy,
                 # and reads fault in only the window's pages per row.
                 Ym = Ym[:, col_range[0]:col_range[1]]
+            if col_range_x is not None:
+                Xm = Xm[:, col_range_x[0]:col_range_x[1]]
             s_lo = max(lo, r.row_offset) - r.row_offset
             s_hi = min(hi, r.row_end) - r.row_offset
             pos = s_lo

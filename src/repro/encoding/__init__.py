@@ -124,6 +124,34 @@ touches, with LRU eviction at shard granularity.
 whole-brain-shaped synthetic subject under an RSS cap the unblocked
 path cannot survive (``BENCH_wholebrain.json``).
 
+The kernel tier (Pallas) is the default hot path
+------------------------------------------------
+The streamed masked chunk update — the inner loop of every tier above —
+routes its heavy ``[G|C]`` contribution through the fused Pallas kernel
+``kernels.gram.xty_folds_masked`` (one HBM pass: chunk in, per-fold
+scatter out; the ``(k, m, p)`` masked intermediate never materialises).
+``EncoderConfig.use_pallas`` is tri-state:
+
+* ``None`` (default) — auto.  On where the backend compiles the kernels
+  natively (TPU: they ARE the fast path), and on CPU only when
+  ``REPRO_PALLAS_FORCE_INTERPRET=1`` is set — interpret mode runs the
+  same code path as a correctness harness (the CI pallas lane), but is
+  orders of magnitude slower than XLA, so plain CPU sessions stay on the
+  einsum tier.
+* ``True`` / ``False`` — pin it either way; explicit always wins.
+
+``dispatch.resolve`` collapses the tri-state to a concrete
+``DispatchDecision.use_pallas`` and names the choice in the rationale.
+Both tiers present every chunk to the same fixed-shape jitted update
+(``use_pallas`` is a static argument — each tier traces once), and λ
+selection is bit-identical between them at f32
+(``tests/test_fused_foldstats.py``; ``BENCH_foldstats.json`` carries the
+fused-vs-unfused A/B with roofline placement)::
+
+    enc = BrainEncoder()                      # auto: kernel tier on TPU
+    enc = BrainEncoder(use_pallas=False)      # pin the einsum tier
+    print(enc.report_.decision.use_pallas, enc.report_.decision.rationale)
+
 Fit once, serve many
 --------------------
 A fitted encoder no longer dies with the process: ``save`` persists an

@@ -36,7 +36,12 @@ class EncoderConfig:
     n_folds: int = 5
     jitter: float = 1e-6
     scoring: Literal["r", "r2"] = "r2"
-    use_pallas: bool = False
+    # Kernel tier (Pallas fused statistics/solve kernels).  Tri-state:
+    # None (default) = auto — on where the backend compiles them natively
+    # (TPU), and on CPU only when REPRO_PALLAS_FORCE_INTERPRET is set (the
+    # CI pallas lane: interpret mode exercises the same code path but is a
+    # correctness harness, not a fast path).  True/False pin it.
+    use_pallas: bool | None = None
 
     # --- solver selection --------------------------------------------------
     solver: Solver = "auto"
@@ -85,12 +90,24 @@ class EncoderConfig:
     # --- determinism -------------------------------------------------------
     seed: int = 0
 
+    def resolve_use_pallas(self) -> bool:
+        """The kernel-tier decision as a concrete bool.
+
+        ``None`` resolves through ``kernels.ops.kernel_tier_auto()`` (TPU →
+        on; CPU → on only under ``REPRO_PALLAS_FORCE_INTERPRET``); an
+        explicit ``True``/``False`` always wins.
+        """
+        if self.use_pallas is not None:
+            return self.use_pallas
+        from repro.kernels import ops
+        return ops.kernel_tier_auto()
+
     def ridge_cv_config(self, method: str | None = None) -> RidgeCVConfig:
         """Project onto the low-level ``RidgeCVConfig``."""
         return RidgeCVConfig(
             lambdas=self.lambdas, n_folds=self.n_folds,
             method=method or self.method, jitter=self.jitter,
-            scoring=self.scoring, use_pallas=self.use_pallas)
+            scoring=self.scoring, use_pallas=self.resolve_use_pallas())
 
     def banded_config(self) -> BandedConfig:
         """Project onto the low-level ``BandedConfig`` (requires ``bands``)."""

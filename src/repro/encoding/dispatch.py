@@ -43,6 +43,10 @@ class DispatchDecision:
     # method (kept defaulted so decisions serialized before this field
     # existed still round-trip through DispatchDecision(**d)).
     target_block: int | None = None
+    # Kernel-tier resolution of EncoderConfig.use_pallas (tri-state None =
+    # auto → this concrete bool).  Defaulted for the same serialized
+    # round-trip reason as target_block.
+    use_pallas: bool = False
 
     @property
     def device_count(self) -> int:
@@ -177,9 +181,46 @@ def _colblocked_decision(cfg: EncoderConfig, w: RidgeWorkload, resident: int,
                   f"of t={t})")
 
 
+def _kernel_tier(cfg: EncoderConfig) -> tuple[bool, str]:
+    """Resolve the kernel tier to a concrete bool plus a rationale clause."""
+    import jax
+
+    up = cfg.resolve_use_pallas()
+    if up:
+        if cfg.use_pallas is True:
+            why = "pinned on by config"
+        elif jax.default_backend() == "tpu":
+            why = "auto: TPU backend compiles the kernels to Mosaic"
+        else:
+            why = ("auto: REPRO_PALLAS_FORCE_INTERPRET set — interpret "
+                   "mode on this backend (same code path, correctness "
+                   "harness not a fast path)")
+        return True, (f"kernel tier: pallas ON ({why}; fused "
+                      f"xty_folds_masked chunk updates)")
+    if cfg.use_pallas is False:
+        why = "pinned off by config"
+    else:
+        why = (f"auto: backend {jax.default_backend()!r} would interpret "
+               f"the kernels (set REPRO_PALLAS_FORCE_INTERPRET=1 to opt in)")
+    return False, f"kernel tier: pallas OFF ({why}; XLA einsum updates)"
+
+
 def resolve(cfg: EncoderConfig, n: int, p: int, t: int,
             device_count: int) -> DispatchDecision:
-    """Resolve ``cfg.solver`` ("auto" or explicit) into a concrete plan."""
+    """Resolve ``cfg.solver`` ("auto" or explicit) into a concrete plan.
+
+    Every decision also carries the kernel-tier resolution
+    (``use_pallas``): the tri-state ``EncoderConfig.use_pallas`` collapsed
+    to a concrete bool, named in the rationale string.
+    """
+    decision = _resolve_plan(cfg, n, p, t, device_count)
+    up, tier = _kernel_tier(cfg)
+    return dataclasses.replace(decision, use_pallas=up,
+                               rationale=f"{decision.rationale}; {tier}")
+
+
+def _resolve_plan(cfg: EncoderConfig, n: int, p: int, t: int,
+                  device_count: int) -> DispatchDecision:
     valid = ("auto", "ridge", "mor", "bmor", "bmor_dual", "banded")
     if cfg.solver not in valid:
         raise ValueError(f"unknown solver {cfg.solver!r}; expected one of "

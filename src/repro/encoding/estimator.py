@@ -210,9 +210,9 @@ class BrainEncoder:
         if n_total is None:
             raise ValueError("fit_chunks needs n_total for iterator sources")
         compiles0 = foldstats.chunk_update_compile_count()
-        stats = foldstats.compute_chunked(chunks, n_total,
-                                          self.config.n_folds,
-                                          chunk_rows=chunk_rows)
+        stats = foldstats.compute_chunked(
+            chunks, n_total, self.config.n_folds, chunk_rows=chunk_rows,
+            use_pallas=self.config.resolve_use_pallas())
         self._record_stream_stats([stream] if stream is not None else [],
                                   compiles0)
         return self._fit_from_stats(stats, n_total)
@@ -300,7 +300,8 @@ class BrainEncoder:
         compiles0 = foldstats.chunk_update_compile_count()
         stats = foldstats.compute_sharded_chunked(
             streams, n_total, self.config.n_folds, mesh=mesh,
-            data_axis=self.config.data_axis, chunk_rows=chunk_rows)
+            data_axis=self.config.data_axis, chunk_rows=chunk_rows,
+            use_pallas=decision.use_pallas)
         self._record_stream_stats(streams, compiles0)
         return self._fit_from_stats(stats, n_total, decision)
 
@@ -338,6 +339,7 @@ class BrainEncoder:
         agg = {"prefetch": bool(self.config.prefetch), "chunks": 0,
                "bytes_staged": 0, "read_stall_s": 0.0,
                "compute_stall_s": 0.0,
+               "use_pallas": self.config.resolve_use_pallas(),
                "compile_count": (foldstats.chunk_update_compile_count()
                                  - compiles_before)}
         for stream in streams:

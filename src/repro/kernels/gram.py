@@ -57,8 +57,16 @@ def xty(x: jax.Array, y: jax.Array, *, block_n: int = DEFAULT_BLOCK_N,
     bn = min(block_n, _ceil_mult(n, 8))
     bp = min(block_p, _ceil_mult(max(p, q), 128))
     n_pad, p_pad, q_pad = _pad_to(n, bn), _pad_to(p, bp), _pad_to(q, bp)
-    xp = jnp.pad(x, ((0, n_pad - n), (0, p_pad - p)))
-    yp = jnp.pad(y, ((0, n_pad - n), (0, q_pad - q)))
+    if (n_pad, p_pad, q_pad) == (n, p, q):
+        # Tile-aligned fast path: the operands already ARE the padded
+        # layout, so hand them to the kernel untouched — no pad copy in,
+        # no slice copy out (the aligned-dtype mirror of
+        # ``RunStore.iter_chunks``' zero-copy contract; a test asserts no
+        # ``pad``/``slice`` op is traced on this path).
+        xp, yp = x, y
+    else:
+        xp = jnp.pad(x, ((0, n_pad - n), (0, p_pad - p)))
+        yp = jnp.pad(y, ((0, n_pad - n), (0, q_pad - q)))
 
     grid = (p_pad // bp, q_pad // bp, n_pad // bn)
     out = pl.pallas_call(
@@ -72,6 +80,8 @@ def xty(x: jax.Array, y: jax.Array, *, block_n: int = DEFAULT_BLOCK_N,
         out_shape=jax.ShapeDtypeStruct((p_pad, q_pad), jnp.float32),
         interpret=interpret,
     )(xp, yp)
+    if (p_pad, q_pad) == (p, q):
+        return out
     return out[:p, :q]
 
 
@@ -157,6 +167,83 @@ def xty_folds(x: jax.Array, y: jax.Array, bounds: tuple[tuple[int, int], ...],
         out_shape=jax.ShapeDtypeStruct((k, p_pad, q_pad), jnp.float32),
         interpret=interpret,
     )(xp, yp)
+    return out[:, :p, :q]
+
+
+def _xty_masked_kernel(x_ref, z_ref, w_ref, o_ref):
+    """One (slot, i, j) tile of the masked per-slot cross-Gram; reduction
+    over the row-block grid axis (axis 3, innermost).  The slot's 0/1 row
+    mask rides in as a (bn, 1) column and is applied on the VMEM-resident
+    tile — the masked operand ``X·w_s`` is never materialised in HBM."""
+
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]                    # (bn, bpi)
+    z = z_ref[...]                    # (bn, bpj)
+    w = w_ref[...].astype(x.dtype)    # (bn, 1) 0/1 slot mask
+    o_ref[0, :, :] += jnp.dot((x * w).T, z,
+                              preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_p",
+                                             "interpret"))
+def xty_folds_masked(x: jax.Array, z: jax.Array, onehot: jax.Array, *,
+                     block_n: int = DEFAULT_BLOCK_N,
+                     block_p: int = DEFAULT_BLOCK_P,
+                     interpret: bool = False) -> jax.Array:
+    """Per-slot masked cross-Gram ``out[s] = (X·w_s)ᵀZ`` in one HBM pass.
+
+    The streamed fold-statistics update (``foldstats._FixedShapeUpdate``)
+    presents every chunk as a fixed ``(chunk_rows, p)`` block of rows plus
+    per-row slot one-hots ``onehot: (chunk_rows, s)`` (TRACED — slot
+    contents change per chunk, the compiled program does not).  The XLA
+    formulation materialises the masked operand
+    ``Xw = X[None] * onehotᵀ[:, :, None]`` — an ``(s, m, p)`` HBM
+    intermediate — before the ``einsum("smp,mq->spq")``.  Here the mask is
+    applied per VMEM tile inside the same blocked reduction that computes
+    the ``[G | C]`` contribution, so the chunk costs exactly one read of
+    ``X``/``Z`` and the intermediate never exists.
+
+    Grid ``(s, p tiles, q tiles, row blocks)`` with the row axis innermost:
+    each slot's ``(i, j)`` accumulator tile stays VMEM-resident across the
+    whole row sweep and is zero-initialised at the first row block.  Unused
+    slots carry all-zero masks and emit exact zero tiles (the scatter-add
+    downstream is then a no-op for them).
+
+    x: (m, p), z: (m, q), onehot: (m, s) → (s, p, q) float32.
+    """
+    m, p = x.shape
+    m2, q = z.shape
+    m3, s = onehot.shape
+    assert m == m2 == m3, (x.shape, z.shape, onehot.shape)
+    bn = min(block_n, _ceil_mult(m, 8))
+    bp = min(block_p, _ceil_mult(max(p, q), 128))
+    m_pad, p_pad, q_pad = _pad_to(m, bn), _pad_to(p, bp), _pad_to(q, bp)
+    if (m_pad, p_pad) != (m, p):
+        x = jnp.pad(x, ((0, m_pad - m), (0, p_pad - p)))
+    if (m_pad, q_pad) != (m, q):
+        z = jnp.pad(z, ((0, m_pad - m), (0, q_pad - q)))
+    if m_pad != m:
+        # Pad rows carry a zero mask, so they contribute exact zeros.
+        onehot = jnp.pad(onehot, ((0, m_pad - m), (0, 0)))
+
+    grid = (s, p_pad // bp, q_pad // bp, m_pad // bn)
+    out = pl.pallas_call(
+        _xty_masked_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bp), lambda si, i, j, b: (b, i)),
+            pl.BlockSpec((bn, bp), lambda si, i, j, b: (b, j)),
+            pl.BlockSpec((bn, 1), lambda si, i, j, b: (b, si)),
+        ],
+        out_specs=pl.BlockSpec((1, bp, bp), lambda si, i, j, b: (si, i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, p_pad, q_pad), jnp.float32),
+        interpret=interpret,
+    )(x, z, onehot)
+    if (p_pad, q_pad) == (p, q):
+        return out
     return out[:, :p, :q]
 
 

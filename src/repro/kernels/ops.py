@@ -23,6 +23,23 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def kernel_tier_auto() -> bool:
+    """Whether auto dispatch (``use_pallas=None``) turns the kernel tier on.
+
+    True on TPU (the kernels compile to Mosaic and ARE the fast path) and
+    on CPU when ``REPRO_PALLAS_FORCE_INTERPRET`` is set truthy — the CI
+    pallas lane sets it so the fused code path is exercised end to end in
+    interpret mode.  Plain CPU/GPU sessions default off: interpret mode is
+    a correctness harness, not a fast path, and would slow every
+    default-config fit by orders of magnitude.  An explicit
+    ``use_pallas=True/False`` in ``EncoderConfig`` always wins over this.
+    """
+    if jax.default_backend() == "tpu":
+        return True
+    env = os.environ.get("REPRO_PALLAS_FORCE_INTERPRET")
+    return env is not None and env not in ("0", "false", "False")
+
+
 def gram(x, **kw):
     """XᵀX, f32 accumulation.  (n, p) → (p, p)."""
     kw.setdefault("interpret", _interpret())
@@ -39,6 +56,14 @@ def xty_folds(x, y, bounds, **kw):
     """Per-fold XᵀY tiles in one HBM pass.  (n, p), (n, q) → (k, p, q)."""
     kw.setdefault("interpret", _interpret())
     return _gram.xty_folds(x, y, tuple(tuple(b) for b in bounds), **kw)
+
+
+def xty_folds_masked(x, z, onehot, **kw):
+    """Fused masked per-slot cross-Gram (the streamed chunk update's
+    ``(s, p, q)`` ``[G|C]`` contribution) in one HBM pass.  (m, p), (m, q),
+    (m, s) → (s, p, q)."""
+    kw.setdefault("interpret", _interpret())
+    return _gram.xty_folds_masked(x, z, onehot, **kw)
 
 
 def solve_lambda_grid(q, evals, a, lambdas, **kw):

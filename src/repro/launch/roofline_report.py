@@ -74,6 +74,40 @@ def encoding_roofline(n: int, p: int, t: int, *, r: int = 11,
     return out
 
 
+def predict_roofline(rows: int, p: int, t: int, *,
+                     wall_s: float | None = None,
+                     bytes_staged: int | None = None,
+                     peak_flops: float = CPU_PEAK_FLOPS,
+                     mem_bw: float = CPU_MEM_BW) -> dict:
+    """Roofline placement of one serving prediction pass (Ŷ = X·W).
+
+    FLOPs are the ``2·rows·p·t`` matmul; bytes default to the nominal
+    traffic — stream ``rows·(p+t)`` in/out plus one read of the ``p·t``
+    weight shard — unless the serving loop reports its achieved
+    ``bytes_staged``.  Same informational-only contract as
+    ``encoding_roofline``.
+    """
+    flops = 2.0 * rows * p * t
+    nbytes = (int(bytes_staged) if bytes_staged
+              else rows * (p + t) * 4 + p * t * 4)
+    terms = roofline_terms(flops, nbytes, 0.0, peak_flops=peak_flops,
+                           hbm_bw=mem_bw)
+    out = {
+        "model_flops": flops,
+        "bytes": nbytes,
+        "flop_per_byte": flops / nbytes if nbytes else float("nan"),
+        "peak_flop_per_byte": peak_flops / mem_bw,
+        "t_compute_s": terms["t_compute_s"],
+        "t_memory_s": terms["t_memory_s"],
+        "bottleneck": ("compute" if terms["t_compute_s"]
+                       >= terms["t_memory_s"] else "memory"),
+    }
+    if wall_s:
+        out["achieved_flops"] = flops / wall_s
+        out["peak_fraction"] = flops / wall_s / peak_flops
+    return out
+
+
 def active_params(arch: str) -> tuple[int, int]:
     """(total, active) parameter counts from the config tree."""
     from repro import configs

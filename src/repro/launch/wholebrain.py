@@ -18,6 +18,13 @@ mark:
   path provably could not survive (the cap binds: the child refuses to
   run if the unblocked estimate fits it).  The first fit streams its
   weight shards through ``BundleWriter`` into an ``EncoderBundle``.
+* **fit** also gates the single-X-pass composition: the X-statistics
+  pass rides the first target block's stream and an in-budget chunk
+  cache replays X for later blocks, so telemetry must show at most 2
+  row passes over X — never one per block.
+* **ab** — fused-vs-unfused kernel-tier A/B of the same composition at
+  a downscaled t (interpret mode on CPU), asserting bitwise λ parity
+  and recording the roofline placement.
 * **serve** — opens the bundle in an ``EncoderRegistry`` and serves
   column-windowed predictions (``EncoderService.predict_columns``),
   asserting only the touched weight shards were paged in.
@@ -125,6 +132,14 @@ def phase_fit(args) -> None:
         raise SystemExit(f"fixed-shape contract broken: gram compiled "
                          f"{tel['gram_compile_delta']}×, column-block "
                          f"update {tel['colblock_compile_delta']}×")
+    # Single-X-pass composition gate: the stats pass rides block 0's
+    # stream and the chunk cache replays X for blocks 1+, so X is read
+    # at most twice (once + at worst a full re-stream when the cache
+    # exceeds the budget) — never once per block.
+    if tel["row_passes_x"] > 2:
+        raise SystemExit(f"single-X-pass composition broken: "
+                         f"{tel['row_passes_x']} row passes over X for "
+                         f"{tel['n_blocks']} blocks (expected <= 2)")
     peak = _peak_rss_mb()
     if peak >= args.cap_mb:
         raise SystemExit(f"blocked fit peaked at {peak:.0f} MB RSS — over "
@@ -138,8 +153,63 @@ def phase_fit(args) -> None:
              "read_stall_s": round(tel["read_stall_s"], 2),
              "gram_compiles": tel["gram_compile_delta"],
              "colblock_compiles": tel["colblock_compile_delta"],
+             "row_passes_x": tel["row_passes_x"],
+             "x_cache_mb": round(tel["x_cache_bytes"] / 2**20, 2),
+             "use_pallas": tel["use_pallas"],
              "best_lambda": float(np.asarray(res.best_lambda)[0]),
              "saved_bundle": bool(args.bundle)})
+
+
+def phase_ab(args) -> None:
+    """Fused-vs-unfused A/B of the column-blocked fit (downscaled t).
+
+    On CPU the fused tier runs in interpret mode — a correctness harness,
+    orders of magnitude slower than XLA — so at full-scale t the A/B
+    would take hours.  It therefore runs the SAME composition (blocked
+    CV, single-X-pass, chunk cache) at a small target width, asserts λ
+    matches bitwise between the tiers, and anchors the comparison in
+    roofline terms (FLOP/byte), which transfer to the compiled tier.
+    """
+    import numpy as np
+
+    from repro.data import fmri
+    from repro.data.store import MANIFEST_NAME, RunStore
+    from repro.encoding.config import EncoderConfig
+    from repro.kernels.ops import _interpret
+    from repro.launch.roofline_report import encoding_roofline
+    from repro.wholebrain import fit_wholebrain
+
+    if not os.path.exists(os.path.join(args.store, MANIFEST_NAME)):
+        spec = fmri.SubjectSpec(n=args.n, p=_P, t=args.t)
+        RunStore.create(args.store, n_folds=args.n_folds)\
+            .materialize_synthetic(spec, rows_per_run=args.rows_per_run)
+    store = RunStore.open(args.store)
+    n, p, t = store.shape
+
+    def run(up: bool):
+        cfg = EncoderConfig(n_folds=args.n_folds,
+                            chunk_rows=args.chunk_rows, use_pallas=up)
+        t0 = time.time()
+        res = fit_wholebrain(store, cfg, t_block=args.t_block,
+                             collect=False)
+        return time.time() - t0, res
+
+    unfused_s, base = run(False)
+    fused_s, fused = run(True)
+    if (float(np.asarray(base.best_lambda)[0])
+            != float(np.asarray(fused.best_lambda)[0])):
+        raise SystemExit(f"λ diverged fused-vs-unfused: "
+                         f"{base.best_lambda} vs {fused.best_lambda}")
+    tier = "interpret" if _interpret() else "compiled"
+    roof = encoding_roofline(n, p, t, n_folds=args.n_folds,
+                             wall_s=min(unfused_s, fused_s))
+    _result({"phase": "ab", "n": n, "p": p, "t": t,
+             "t_block": args.t_block, "chunk_rows": args.chunk_rows,
+             "unfused_s": round(unfused_s, 2),
+             "fused_s": round(fused_s, 2),
+             "kernel_tier": tier, "lambda_match": True,
+             "row_passes_x": fused.telemetry["row_passes_x"],
+             "roofline": roof})
 
 
 def phase_serve(args) -> None:
@@ -235,7 +305,7 @@ def main() -> None:
 
     if args.phase:                                 # child mode
         {"materialise": phase_materialise, "fit": phase_fit,
-         "serve": phase_serve}[args.phase](args)
+         "ab": phase_ab, "serve": phase_serve}[args.phase](args)
         return
 
     import tempfile
@@ -282,6 +352,22 @@ def main() -> None:
         raise SystemExit(f"λ selection diverged across t_block values: "
                          f"{lams}")
 
+    # Fused-vs-unfused kernel-tier A/B at a downscaled t (interpret mode
+    # on CPU is a correctness harness — full-scale fused would take
+    # hours); λ parity is asserted in the child, roofline anchors it.
+    ab_n, ab_t, ab_tb, ab_chunk = ((128, 512, 128, 64) if args.smoke
+                                   else (512, 2048, 512, 128))
+    ab_store = os.path.join(workdir, f"ab_subject_{ab_n}x{_P}x{ab_t}")
+    ab = _spawn("ab", ["--store", ab_store, "--n", str(ab_n),
+                       "--t", str(ab_t), "--t-block", str(ab_tb),
+                       "--n-folds", str(n_folds),
+                       "--chunk-rows", str(ab_chunk),
+                       "--rows-per-run", str(rows_per_run)])
+    print(f"[wholebrain] fused A/B ({ab_n}x{_P}x{ab_t}, "
+          f"{ab['kernel_tier']}): unfused {ab['unfused_s']}s vs fused "
+          f"{ab['fused_s']}s, λ match, x passes={ab['row_passes_x']}",
+          flush=True)
+
     serve = _spawn("serve", ["--bundle", bundle,
                              "--cap-mb", str(args.cap_mb)])
     print(f"[wholebrain] serve: {serve['wall_s']}s "
@@ -292,7 +378,7 @@ def main() -> None:
     payload = {"n": n, "p": _P, "t": args.t, "n_folds": n_folds,
                "chunk_rows": chunk_rows, "rss_cap_mb": args.cap_mb,
                "smoke": args.smoke, "materialise": mat,
-               "fit_vs_t_block": fits, "serve": serve}
+               "fit_vs_t_block": fits, "fused_ab": ab, "serve": serve}
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")

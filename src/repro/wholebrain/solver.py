@@ -29,9 +29,13 @@ Two λ-selection modes:
   own λ in the same single pass.
 
 Peak memory: ``O(p² + p·t_block)`` device + the scratch/weight shards on
-disk — independent of ``t``.  ``X`` is re-streamed once per block (its
-``n·p`` bytes are the SMALL axis in the whole-brain regime); ``Y`` is
-streamed exactly once, each block faulting in only its own column pages.
+disk — independent of ``t``.  ``Y`` is streamed exactly once, each block
+faulting in only its own column pages; ``X`` is streamed ONCE when the
+single-X-pass composition engages (the X-only statistics ride the first
+block's stream and a chunk-granular host cache replays the feature rows
+for later blocks — ``n·p`` is the SMALL axis in the whole-brain regime),
+spilling to a once-per-block prefetcher re-stream only when the cache
+breaks the memory budget (telemetry: ``row_passes_x``).
 """
 from __future__ import annotations
 
@@ -98,6 +102,51 @@ def _accumulate(acc, store, chunk_rows: int, col_range, cfg: EncoderConfig,
     return acc.finalize()
 
 
+class _XChunkCache:
+    """Chunk-granular host cache of the ``X`` rows seen in one stream.
+
+    Filled during the fused first-block pass (the staging buffers of the
+    prefetcher recycle, so each chunk is copied out at stream granularity
+    into one contiguous ``(n, p)`` host array); subsequent target blocks
+    replay the identical chunk partition from it and re-stream only their
+    ``Y`` columns (``iter_chunks(col_range_x=(0, 0))``) — zero further
+    reads of the feature shards.
+    """
+
+    def __init__(self, n: int, p: int, dtype) -> None:
+        self._arr = np.empty((n, p), dtype)
+        self._fill = 0
+        self._chunk_ends: list[int] = []
+
+    @property
+    def nbytes(self) -> int:
+        return self._arr.nbytes
+
+    def append(self, Xc: np.ndarray) -> None:
+        m = Xc.shape[0]
+        self._arr[self._fill:self._fill + m] = Xc
+        self._fill += m
+        self._chunk_ends.append(self._fill)
+
+    def chunks(self):
+        """Read-only views replaying the captured chunk partition."""
+        lo = 0
+        for hi in self._chunk_ends:
+            v = self._arr[lo:hi].view()
+            v.flags.writeable = False
+            yield v
+            lo = hi
+
+    @staticmethod
+    def fits(n: int, p: int, itemsize: int, budget: int | None) -> bool:
+        """Cache policy: the whole-brain regime is p ≪ t, so ``n·p`` is
+        the small axis — cache it whenever it takes at most a quarter of
+        the device-memory budget (the budget bounds the DEVICE working
+        set; the host cache rides in the same envelope so the launch-layer
+        RSS caps keep binding), or always when no budget was set."""
+        return budget is None or n * p * itemsize <= budget // 4
+
+
 def _check_target_scale(bstats, n_total: int, lo: int, hi: int) -> None:
     """The row tier's un-standardized-target refusal, per block (see
     ``BrainEncoder._fit_from_stats``): statistics-based CV scoring loses
@@ -155,14 +204,44 @@ def fit_wholebrain(store, cfg: EncoderConfig | None = None, *,
     if collect is None:
         collect = writer is None
 
+    use_pallas = cfg.resolve_use_pallas()
     agg = {"chunks": 0, "bytes_staged": 0, "read_stall_s": 0.0,
            "compute_stall_s": 0.0}
     fixed0 = foldstats.chunk_update_compile_count()
     colblock0 = colblock_update_compile_count()
 
-    # -- shared pass: G/xsum/count from X alone (zero-width Y window) --------
-    gacc = foldstats.FoldStatsAccumulator(n, k, chunk_rows=chunk_rows)
-    gstats = _accumulate(gacc, store, chunk_rows, (0, 0), cfg, agg)
+    # -- fused first pass: the X-only statistics (G/xsum/count, zero-width
+    # Y window — same compiled signature as a standalone X pass) ride the
+    # FIRST target block's stream, so they cost no row pass of their own.
+    # When the (n, p) feature rows fit the cache policy they are also
+    # captured chunk-by-chunk, and every later block re-streams only its
+    # own Y columns — row passes over X drop from 1 + ceil(t/t_block) to 1
+    # (cached) or ceil(t/t_block) (spilled to the prefetcher re-stream).
+    lo0, hi0 = bounds[0]
+    gacc = foldstats.FoldStatsAccumulator(n, k, chunk_rows=chunk_rows,
+                                          use_pallas=use_pallas)
+    bacc0 = ColumnBlockAccumulator(n, k, t_pad, chunk_rows=chunk_rows,
+                                   use_pallas=use_pallas)
+    dtype_x = getattr(store, "dtype_x", np.dtype(np.float32))
+    x_cache = None
+    if len(bounds) > 1 and _XChunkCache.fits(n, p, dtype_x.itemsize,
+                                             cfg.device_memory_budget):
+        x_cache = _XChunkCache(n, p, dtype_x)
+    stream = store.iter_chunks(chunk_rows, col_range=(lo0, hi0),
+                               prefetch=cfg.prefetch,
+                               prefetch_depth=cfg.prefetch_depth)
+    try:
+        for Xc, Yc in stream:
+            gacc.update(Xc, Yc[:, :0])
+            bacc0.update(Xc, Yc)
+            if x_cache is not None:
+                x_cache.append(np.asarray(Xc))
+    finally:
+        if hasattr(stream, "close"):
+            stream.close()
+    _stream_stats(agg, stream)
+    gstats = gacc.finalize()
+    block0_stats = bacc0.finalize()
 
     # -- hoisted factorisations: k downdated eighs + the refit, once ---------
     # (the paper's Eq. 5 mutualisation extended across blocks: these depend
@@ -195,10 +274,38 @@ def fit_wholebrain(store, cfg: EncoderConfig | None = None, *,
                 scratch_path, mode="w+", dtype=np.float32, shape=(p, t))
 
         # -- per-block pass: stream the block's columns, score every fold ----
-        for lo, hi in bounds:
+        # (block 0 was accumulated in the fused first pass above; later
+        # blocks read X from the chunk cache when it was captured, else
+        # re-stream the full rows through the prefetcher.)
+        restreamed_x = 0
+        for bi, (lo, hi) in enumerate(bounds):
             w = hi - lo
-            bacc = ColumnBlockAccumulator(n, k, t_pad, chunk_rows=chunk_rows)
-            bstats = _accumulate(bacc, store, chunk_rows, (lo, hi), cfg, agg)
+            if bi == 0:
+                bstats = block0_stats
+            else:
+                bacc = ColumnBlockAccumulator(n, k, t_pad,
+                                              chunk_rows=chunk_rows,
+                                              use_pallas=use_pallas)
+                if x_cache is not None:
+                    # Y-only store pass (zero feature-shard bytes) zipped
+                    # with the cache's replay of the identical chunk
+                    # partition.
+                    stream = store.iter_chunks(
+                        chunk_rows, col_range=(lo, hi), col_range_x=(0, 0),
+                        prefetch=cfg.prefetch,
+                        prefetch_depth=cfg.prefetch_depth)
+                    try:
+                        for Xc, (_, Yc) in zip(x_cache.chunks(), stream):
+                            bacc.update(Xc, Yc)
+                    finally:
+                        if hasattr(stream, "close"):
+                            stream.close()
+                    _stream_stats(agg, stream)
+                    bstats = bacc.finalize()
+                else:
+                    restreamed_x += 1
+                    bstats = _accumulate(bacc, store, chunk_rows, (lo, hi),
+                                         cfg, agg)
             _check_target_scale(bstats, n, lo, hi)
             # Grafted onto the shared statistics this is a full FoldStats
             # restricted (bitwise) to the block's columns.
@@ -297,8 +404,12 @@ def fit_wholebrain(store, cfg: EncoderConfig | None = None, *,
         "colblock_compile_delta": (colblock_update_compile_count()
                                    - colblock0),
         "scratch_bytes": scratch_bytes if lambda_mode == "global" else 0,
-        "row_passes_x": 1 + len(bounds),
+        # 1 fused first pass + any blocks that had to re-stream the
+        # feature shards because the X chunk cache was not captured.
+        "row_passes_x": 1 + restreamed_x,
         "row_passes_y": 1,
+        "x_cache_bytes": 0 if x_cache is None else x_cache.nbytes,
+        "use_pallas": use_pallas,
     }
     return WholebrainResult(
         best_lambda=best_lambda, cv_scores=np.asarray(curves, np.float64),

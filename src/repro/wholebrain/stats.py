@@ -91,22 +91,33 @@ class _ColumnBlockUpdate:
 
     def __init__(self) -> None:
         self.compile_count = 0
-        self._fn = jax.jit(self._update)
+        self._fn = jax.jit(self._update, static_argnames=("use_pallas",))
 
-    def __call__(self, stats: ColumnBlockStats, X, Y, onehot, slot_fold
-                 ) -> ColumnBlockStats:
-        return self._fn(stats, X, Y, onehot, slot_fold)
+    def __call__(self, stats: ColumnBlockStats, X, Y, onehot, slot_fold, *,
+                 use_pallas: bool = False) -> ColumnBlockStats:
+        return self._fn(stats, X, Y, onehot, slot_fold,
+                        use_pallas=use_pallas)
 
     def _update(self, stats: ColumnBlockStats, X: jax.Array, Y: jax.Array,
-                onehot: jax.Array, slot_fold: jax.Array) -> ColumnBlockStats:
+                onehot: jax.Array, slot_fold: jax.Array,
+                use_pallas: bool = False) -> ColumnBlockStats:
         # Python side effect at TRACE time only — the compile counter the
         # wholebrain CI lane gates at exactly 1 across ALL blocks.
         self.compile_count += 1
         dt = jnp.promote_types(X.dtype, Y.dtype)
         w = onehot                                          # (m, s) f32 0/1
-        Xw = X.astype(dt)[None] * jnp.swapaxes(w, 0, 1)[:, :, None].astype(dt)
-        Cb = jnp.einsum("smp,mq->spq", Xw, Y.astype(dt),
-                        preferred_element_type=jnp.float32)  # (s, p, t_pad)
+        if use_pallas:
+            # Same fused masked kernel as the row tier, with Z = the
+            # block's Y columns only (the X half of [G|C] is shared across
+            # blocks and accumulated once, in the X-only/first-block pass).
+            from repro.kernels import ops
+            Cb = ops.xty_folds_masked(X.astype(dt), Y.astype(dt),
+                                      w.astype(dt))          # (s, p, t_pad)
+        else:
+            Xw = (X.astype(dt)[None]
+                  * jnp.swapaxes(w, 0, 1)[:, :, None].astype(dt))
+            Cb = jnp.einsum("smp,mq->spq", Xw, Y.astype(dt),
+                            preferred_element_type=jnp.float32)
         Yf = Y.astype(jnp.float32)
         cnt = jnp.sum(w, axis=0)                             # (s,)
         ysum = jnp.einsum("ms,mt->st", w, Yf,
@@ -160,11 +171,13 @@ class ColumnBlockAccumulator(foldstats.FoldStatsAccumulator):
 
     def __init__(self, n_total: int, n_folds: int, t_pad: int, *,
                  row_start: int = 0, row_stop: int | None = None,
-                 chunk_rows: int | None = None):
+                 chunk_rows: int | None = None,
+                 use_pallas: bool = False):
         if t_pad < 1:
             raise ValueError(f"t_pad must be >= 1, got {t_pad}")
         super().__init__(n_total, n_folds, row_start=row_start,
-                         row_stop=row_stop, chunk_rows=chunk_rows)
+                         row_stop=row_stop, chunk_rows=chunk_rows,
+                         use_pallas=use_pallas)
         self.t_pad = t_pad
 
     def _init_stats(self, p: int, t: int) -> ColumnBlockStats:
@@ -186,7 +199,8 @@ class ColumnBlockAccumulator(foldstats.FoldStatsAccumulator):
             Yp[:, :Ys.shape[1]] = Ys
             Ys = Yp
         self._stats = _COLBLOCK_UPDATE(self._stats, jnp.asarray(Xs),
-                                       jnp.asarray(Ys), onehot, slot_fold)
+                                       jnp.asarray(Ys), onehot, slot_fold,
+                                       use_pallas=self.use_pallas)
 
 
 __all__ = ["ColumnBlockAccumulator", "ColumnBlockStats", "column_blocks",

@@ -1,0 +1,177 @@
+"""Fused streamed kernel tier — parity, λ bit-identity, dispatch default.
+
+The fused ``kernels.gram.xty_folds_masked`` path must be a drop-in for the
+XLA einsum inside the fixed-shape masked chunk update: same statistics (to
+f32 reduction-order tolerance) against a float64 oracle across the chunk
+shapes that historically caused trouble (single-row, fold-misaligned,
+ragged tails) for both stored dtypes and shard counts, BIT-identical λ
+selection at f32, and the one-trace-per-stream compile contract intact.
+The dispatch tests (quick lane) pin the tri-state auto default: on under
+``REPRO_PALLAS_FORCE_INTERPRET``/TPU, off on plain CPU, explicit
+True/False always wins, and the rationale names the tier.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+
+from repro.core import foldstats, ridge
+from repro.encoding import dispatch
+from repro.encoding.config import EncoderConfig
+
+N, P, T, K = 67, 5, 7, 4
+
+
+def _make_problem(seed: int, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(N, P)).astype(dtype)
+    Y = rng.normal(size=(N, T)).astype(dtype)
+    return X, Y
+
+
+def _oracle_stats(X: np.ndarray, Y: np.ndarray, k: int):
+    """Float64 per-fold G/C from the raw rows (what the kernel sees after
+    input rounding — bf16 inputs are widened bf16 values, exactly)."""
+    X64 = np.asarray(X, np.float64)
+    Y64 = np.asarray(Y, np.float64)
+    bounds = foldstats.fold_bounds(X.shape[0], k)
+    G = np.stack([X64[lo:hi].T @ X64[lo:hi] for lo, hi in bounds])
+    C = np.stack([X64[lo:hi].T @ Y64[lo:hi] for lo, hi in bounds])
+    return G, C
+
+
+def _shard_streams(store, n_shards: int, chunk: int):
+    return [store.iter_chunks(chunk, row_range=(lo, hi))
+            for lo, hi in foldstats.shard_row_ranges(N, n_shards)]
+
+
+# chunk shapes: single-row, fold-misaligned (fold sizes are 17/16), ragged
+CHUNKS = [1, 13, 29]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("n_shards", [1, 8])
+@pytest.mark.parametrize("dtype", [np.float32, ml_dtypes.bfloat16])
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_fused_stream_matches_f64_oracle(make_run_store, chunk, dtype,
+                                         n_shards):
+    X, Y = _make_problem(chunk * 100 + n_shards, dtype=dtype)
+    store = make_run_store(X, Y, n_runs=2, n_folds=K)
+    stats = foldstats.compute_sharded_chunked(
+        _shard_streams(store, n_shards, chunk), N, K,
+        chunk_rows=chunk, use_pallas=True)
+    G64, C64 = _oracle_stats(X, Y, K)
+    tol = (dict(rtol=2e-2, atol=2e-2) if dtype == ml_dtypes.bfloat16
+           else dict(rtol=1e-4, atol=2e-4))
+    np.testing.assert_allclose(np.asarray(stats.G), G64, **tol)
+    np.testing.assert_allclose(np.asarray(stats.C), C64, **tol)
+    np.testing.assert_allclose(np.asarray(stats.count),
+                               [hi - lo for lo, hi in
+                                foldstats.fold_bounds(N, K)])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_fused_lambda_selection_bit_identical_to_unfused(make_run_store,
+                                                         chunk):
+    X, Y = _make_problem(7)
+    store = make_run_store(X, Y, n_runs=2, n_folds=K)
+    cfg = ridge.RidgeCVConfig(n_folds=K)
+
+    def fit(use_pallas: bool):
+        stats = foldstats.compute_chunked(
+            store.iter_chunks(chunk), N, K, chunk_rows=chunk,
+            use_pallas=use_pallas)
+        return ridge.ridge_cv_from_stats(stats, cfg)
+
+    base, fused = fit(False), fit(True)
+    assert float(base.best_lambda) == float(fused.best_lambda)
+    np.testing.assert_allclose(np.asarray(fused.weights),
+                               np.asarray(base.weights), rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.slow
+def test_fused_stream_compiles_once():
+    """The kernel tier rides INSIDE the one jitted masked update — a fused
+    stream still traces exactly once however chunks meet fold bounds."""
+    X, Y = _make_problem(3)
+    # Distinctive (chunk, p, t, k) signature so the module-level jit cache
+    # cannot already hold it.
+    Xs, Ys = X[:, :4], Y[:, :6]
+    before = foldstats.chunk_update_compile_count()
+    foldstats.compute_chunked(
+        [(Xs[i:i + 11], Ys[i:i + 11]) for i in range(0, N, 11)], N, 3,
+        chunk_rows=11, use_pallas=True)
+    assert foldstats.chunk_update_compile_count() - before == 1
+    # A second fused stream over the same signature is a cache hit.
+    foldstats.compute_chunked(
+        [(Xs[i:i + 11], Ys[i:i + 11]) for i in range(0, N, 11)], N, 3,
+        chunk_rows=11, use_pallas=True)
+    assert foldstats.chunk_update_compile_count() - before == 1
+
+
+@pytest.mark.slow
+def test_colblock_fused_matches_unfused(make_run_store):
+    from repro.wholebrain.solver import fit_wholebrain
+
+    X, Y = _make_problem(11)
+    store = make_run_store(X, Y, n_runs=2, n_folds=K)
+    base = fit_wholebrain(store, EncoderConfig(n_folds=K, use_pallas=False),
+                          t_block=3, chunk_rows=13)
+    fused = fit_wholebrain(store, EncoderConfig(n_folds=K, use_pallas=True),
+                           t_block=3, chunk_rows=13)
+    assert float(base.best_lambda[0]) == float(fused.best_lambda[0])
+    np.testing.assert_allclose(fused.weights, base.weights, rtol=1e-4,
+                               atol=1e-4)
+    assert fused.telemetry["use_pallas"] is True
+    assert fused.telemetry["row_passes_x"] == 1
+    assert fused.telemetry["colblock_compile_delta"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Dispatch tri-state (quick lane — no kernels run)
+# ---------------------------------------------------------------------------
+
+def test_auto_defaults_off_on_plain_cpu(monkeypatch):
+    monkeypatch.delenv("REPRO_PALLAS_FORCE_INTERPRET", raising=False)
+    cfg = EncoderConfig()
+    assert cfg.use_pallas is None
+    assert cfg.resolve_use_pallas() is False
+    d = dispatch.resolve(cfg, 100, 8, 16, 1)
+    assert d.use_pallas is False
+    assert "kernel tier: pallas OFF" in d.rationale
+
+
+def test_auto_turns_on_under_forced_interpret(monkeypatch):
+    monkeypatch.setenv("REPRO_PALLAS_FORCE_INTERPRET", "1")
+    cfg = EncoderConfig()
+    assert cfg.resolve_use_pallas() is True
+    d = dispatch.resolve(cfg, 100, 8, 16, 1)
+    assert d.use_pallas is True
+    assert "kernel tier: pallas ON" in d.rationale
+    # The resolved flag feeds the low-level solver config too.
+    assert cfg.ridge_cv_config("eigh").use_pallas is True
+
+
+def test_explicit_pin_beats_auto(monkeypatch):
+    monkeypatch.setenv("REPRO_PALLAS_FORCE_INTERPRET", "1")
+    off = dispatch.resolve(EncoderConfig(use_pallas=False), 100, 8, 16, 1)
+    assert off.use_pallas is False and "pinned off" in off.rationale
+    monkeypatch.delenv("REPRO_PALLAS_FORCE_INTERPRET")
+    on = dispatch.resolve(EncoderConfig(use_pallas=True), 100, 8, 16, 1)
+    assert on.use_pallas is True and "pinned on" in on.rationale
+
+
+def test_decision_round_trips_with_kernel_tier(monkeypatch):
+    monkeypatch.setenv("REPRO_PALLAS_FORCE_INTERPRET", "1")
+    d = dispatch.resolve(EncoderConfig(), 100, 8, 16, 1)
+    again = dispatch.DispatchDecision(**dataclasses.asdict(d))
+    assert again == d
+    # Pre-existing serialized decisions (no use_pallas key) still load.
+    legacy = dataclasses.asdict(d)
+    del legacy["use_pallas"]
+    assert dispatch.DispatchDecision(**legacy).use_pallas is False

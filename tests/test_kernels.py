@@ -43,6 +43,54 @@ def test_xty_matches_oracle(n, p, q, dtype):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
 
 
+def _primitive_names(jaxpr):
+    """All primitive names in a (closed) jaxpr, recursing through pjit/call
+    sub-jaxprs — the view that exposes hidden pad/slice copies."""
+    names = set()
+    for eqn in jaxpr.jaxpr.eqns:
+        names.add(eqn.primitive.name)
+        for v in eqn.params.values():
+            if hasattr(v, "jaxpr"):
+                names |= _primitive_names(v)
+    return names
+
+
+def test_xty_aligned_traces_no_pad_or_slice():
+    # Tile-aligned inputs must take the zero-copy fast path: no jnp.pad
+    # round-trip in, no slice back out — the arrays feed pallas_call as-is.
+    x = _rand(jax.random.PRNGKey(0), (1024, 256), jnp.float32)
+    y = _rand(jax.random.PRNGKey(1), (1024, 256), jnp.float32)
+    prims = _primitive_names(jax.make_jaxpr(
+        lambda a, b: gram_k.xty(a, b, block_n=128, block_p=128,
+                                interpret=True))(x, y))
+    assert "pad" not in prims and "slice" not in prims
+    # Ragged inputs still pad in and slice out (the correctness path).
+    xr = _rand(jax.random.PRNGKey(2), (300, 129), jnp.float32)
+    yr = _rand(jax.random.PRNGKey(3), (300, 70), jnp.float32)
+    prims = _primitive_names(jax.make_jaxpr(
+        lambda a, b: gram_k.xty(a, b, block_n=128, block_p=128,
+                                interpret=True))(xr, yr))
+    assert "pad" in prims and "slice" in prims
+
+
+@pytest.mark.parametrize("m,p,q,s", [(24, 16, 8, 3), (37, 5, 12, 4),
+                                     (64, 32, 32, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_xty_folds_masked_matches_oracle(m, p, q, s, dtype):
+    kx, kz = jax.random.split(jax.random.PRNGKey(m + p + q + s))
+    x = _rand(kx, (m, p), dtype)
+    z = _rand(kz, (m, q), dtype)
+    slots = np.random.default_rng(s).integers(0, s, size=m)
+    onehot = jnp.asarray(np.eye(s, dtype=np.float32)[slots])
+    got = gram_k.xty_folds_masked(x, z, onehot, block_n=8, block_p=128,
+                                  interpret=True)
+    want = jnp.einsum("ms,mp,mq->spq", onehot,
+                      x.astype(jnp.float32), z.astype(jnp.float32))
+    assert got.shape == (s, p, q) and got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **_tol(dtype))
+
+
 @pytest.mark.parametrize("n,p", [(200, 64), (64, 200), (257, 128)])
 def test_gram_symmetric_and_correct(n, p):
     x = _rand(jax.random.PRNGKey(0), (n, p), jnp.float32)
