@@ -21,6 +21,15 @@ request traffic:
   share ``(p, t)``, so model count must NOT multiply compilations; the
   bucketed service once per bucket used).  The bench exits non-zero
   otherwise; the CI serving lane runs ``--smoke``.
+* **Mixed-traffic trace replay** (``--replay-trace``) — the fleet tier's
+  acceptance gate: the checked-in seeded trace
+  (``benchmarks/traces/mixed_v1.json``: ragged rows, scored/unscored mix,
+  tenants, Zipf-ish popularity over more models than the budget fits)
+  replays through bounded admission + mixed waves, asserts BIT identity
+  (predictions and Pearson r) against the per-request reference serve
+  and compile_count == wave buckets used, and records flush p50/p99,
+  rows/s, backpressure rejections, and per-tenant accounting.  The CI
+  fleet lane runs ``--smoke --replay-trace``.
 
 Writes ``BENCH_serving.json``::
 
@@ -31,6 +40,8 @@ Writes ``BENCH_serving.json``::
       "rows_per_s", "compile_count"},
      "registry": {"entries", "resident_mb", "cold_load_ms", "warm_hit_ms",
       "eviction_demo": {...}},
+     "mixed_traffic": {"trace", "digest", "p50_ms", "p99_ms", "rows_per_s",
+      "rejections", "per_tenant": {...}, "bit_identical": true, ...},
      "compile_count": K, "distinct_wave_shapes": K}
 """
 from __future__ import annotations
@@ -173,6 +184,143 @@ def time_registry(paths: list[str], wave_rows: int) -> dict:
     }
 
 
+def replay_mixed_trace(trace_path: str, workdir: str, *,
+                       buckets: tuple[int, ...], n_fit: int,
+                       budget_models: float, score_slots: int) -> dict:
+    """Replay the checked-in mixed-traffic trace through the fleet tier.
+
+    One deterministic workload — ragged rows, scored/unscored mix,
+    multiple tenants, Zipf-ish popularity over MORE models than the
+    registry budget fits — drives bounded admission (``FleetFrontend``)
+    over a mixed-wave service, and the run is gated on the fleet tier's
+    two contracts before any timing is reported:
+
+    * **bit identity** — every packed prediction AND Pearson r must equal
+      (``np.array_equal``) the per-request reference serve;
+    * **compile economy** — ``compile_count`` == the number of wave
+      buckets actually used, regardless of traffic mix.
+
+    Returns the ``mixed_traffic`` payload row: flush p50/p99, rows/s,
+    backpressure rejections, per-tenant accounting, registry churn.
+    """
+    import numpy as np
+    from repro.serving_encoders import (EncoderRegistry, EncoderService,
+                                        FleetFrontend, reference_serve)
+    from repro.serving_encoders.bundle import EncoderBundle
+    from repro.serving_encoders.registry import bundle_resident_bytes
+    from repro.serving_encoders.traffic import (build_synthetic_fleet,
+                                                load_trace, replay_requests)
+
+    spec = load_trace(trace_path)
+    fleet = build_synthetic_fleet(os.path.join(workdir, "trace_fleet"),
+                                  spec.n_models, n=n_fit, p=spec.p,
+                                  t=spec.t, provenance={"bench": "trace"})
+    models = [name for name, _ in fleet]
+    need = bundle_resident_bytes(EncoderBundle.open(fleet[0][1]),
+                                 buckets[-1], None, score_slots)
+    registry = EncoderRegistry(
+        device_memory_budget=int(budget_models * need),
+        wave_rows=buckets[0])
+    for name, path in fleet:
+        registry.add(name, path)
+    service = EncoderService(registry, wave_buckets=buckets,
+                             score_slots=score_slots, prefetch_next=True)
+    frontend = FleetFrontend(service,
+                             max_pending_rows=8 * buckets[-1])
+    requests = replay_requests(spec, models)
+
+    # Reference FIRST (its own registry/service so nothing is shared):
+    # each request alone — what the packed serve must bit-match.
+    ref_reg = EncoderRegistry(wave_rows=buckets[0])
+    for name, path in fleet:
+        ref_reg.add(name, path)
+    ref_svc = EncoderService(ref_reg, wave_buckets=buckets,
+                             score_slots=score_slots)
+    reference = reference_serve(ref_svc, requests)
+
+    # Replay under bounded admission, timing each flush (the SLO unit:
+    # a flush drains everything the window admitted).
+    results = [None] * len(requests)
+    window, walls, rejections = [], [], 0
+    rows_served = 0
+    t_all = time.perf_counter()
+
+    def flush():
+        nonlocal rows_served
+        if not window:
+            return
+        t0 = time.perf_counter()
+        out = frontend.flush()
+        walls.append((time.perf_counter() - t0) * 1e3)
+        for i, res in zip(window, out):
+            results[i] = res
+        rows_served += sum(requests[i].features.shape[0] for i in window)
+        window.clear()
+
+    from repro.serving_encoders import ServiceError
+    for i, req in enumerate(requests):
+        try:
+            frontend.submit(req)
+            window.append(i)
+        except ServiceError:
+            rejections += 1
+            flush()
+            frontend.submit(req)               # window now empty: admits
+            window.append(i)
+    flush()
+    span = time.perf_counter() - t_all
+
+    mismatches = []
+    for i, (got, want) in enumerate(zip(results, reference)):
+        if got.error is not None or want.error is not None:
+            mismatches.append((i, "unexpected fault"))
+            continue
+        if not np.array_equal(got.predictions, want.predictions):
+            mismatches.append((i, "predictions"))
+        if (got.pearson_r is None) != (want.pearson_r is None) or (
+                got.pearson_r is not None
+                and not np.array_equal(got.pearson_r, want.pearson_r)):
+            mismatches.append((i, "pearson_r"))
+    if mismatches:
+        print(f"FAIL: packed mixed-wave serve diverges from the "
+              f"per-request reference at {mismatches[:5]} "
+              f"({len(mismatches)} total)")
+        raise SystemExit(1)
+    used = len(service.stats.per_bucket)
+    if service.compile_count != used:
+        print(f"FAIL: mixed-trace compile_count={service.compile_count} "
+              f"!= {used} wave buckets used")
+        raise SystemExit(1)
+    print(f"trace replay: {len(requests)} requests bit-identical to the "
+          f"per-request reference ✓ ({service.compile_count} compiles == "
+          f"{used} buckets)")
+    scored = sum(1 for e in spec.entries if e.scored)
+    return {
+        "trace": os.path.relpath(trace_path, REPO),
+        "digest": spec.digest()[:16],
+        "requests": len(requests),
+        "scored_requests": scored,
+        "tenants": len(service.stats.per_tenant),
+        "models": spec.n_models,
+        "budget_models": budget_models,
+        "flushes": len(walls),
+        "rejections": rejections,
+        "p50_ms": round(float(np.percentile(walls, 50)), 3),
+        "p99_ms": round(float(np.percentile(walls, 99)), 3),
+        "rows_per_s": round(rows_served / span, 1),
+        "pad_fraction": round(
+            service.stats.pad_rows
+            / max(service.stats.rows + service.stats.pad_rows, 1), 4),
+        "per_tenant": {k: dict(v) for k, v in
+                       sorted(service.stats.per_tenant.items())},
+        "compile_count": service.compile_count,
+        "registry": {k: registry.stats()[k]
+                     for k in ("loads", "evictions", "hits",
+                               "peak_resident_bytes")},
+        "bit_identical": True,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -184,6 +332,14 @@ def main() -> None:
                     help="bundle fleet directory (default: a tempdir)")
     ap.add_argument("--models", type=int, default=3,
                     help="registry entries (acceptance floor: 3)")
+    ap.add_argument("--replay-trace", nargs="?", default=None,
+                    const=os.path.join(REPO, "benchmarks", "traces",
+                                       "mixed_v1.json"),
+                    help="replay this mixed-traffic trace through the "
+                         "fleet tier (default file when given bare); "
+                         "gates bit-identity vs the per-request "
+                         "reference and writes the mixed_traffic "
+                         "p50/p99 rows")
     args = ap.parse_args()
 
     if args.smoke:
@@ -256,6 +412,17 @@ def main() -> None:
           + f"), {bucketed['compile_count']} compiles ✓")
 
     reg_stats = time_registry(paths, max(wave_sizes))
+    mixed = None
+    if args.replay_trace:
+        mixed = replay_mixed_trace(
+            args.replay_trace, workdir, buckets=buckets,
+            n_fit=min(n, 256), budget_models=2.5, score_slots=4)
+        print(f"mixed traffic [{mixed['trace']}]: "
+              f"p50 {mixed['p50_ms']:.2f} ms, p99 {mixed['p99_ms']:.2f} ms, "
+              f"{mixed['rows_per_s']:.0f} rows/s, "
+              f"{mixed['rejections']} backpressure rejections, "
+              f"{mixed['registry']['evictions']} evictions over "
+              f"{mixed['models']} models")
     payload = {
         "meta": {"n_fit": n, "p": p, "t": t, "models": len(paths),
                  "device": jax.devices()[0].platform,
@@ -267,6 +434,8 @@ def main() -> None:
         "compile_count": service.compile_count,
         "distinct_wave_shapes": distinct,
     }
+    if mixed is not None:
+        payload["mixed_traffic"] = mixed
     with open(out, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")

@@ -185,6 +185,22 @@ program per wave shape, reused forever::
 (materialise → fit → save → serve); ``BENCH_serving.json`` tracks
 latency/throughput vs wave size.
 
+The fleet tier scales that to N workers, one artifact dir, shared page
+cache: each worker process runs a ``FleetRegistry`` (weight shards read
+through read-only mmap, so co-located workers fault each shard from disk
+once between them; per-process residency published into one file-locked
+``residency.json``), the service packs scored AND unscored requests from
+any tenants into the SAME mixed waves (per-row request one-hot → per-slot
+Pearson sums, bit-identical to serving each request alone), and a
+``FleetFrontend`` bounds admission in rows — overflow is a typed
+``ServiceError`` rejection, never an OOM or a stall.  A bundle that
+faults mid-serve (truncated shard, flipped manifest) degrades only its
+own tenants: typed ``BundleError`` per affected request, eviction, and
+the rest of the batch serves on.  ``python -m repro.launch.serve
+--encoders 6 --workers 4`` drives the whole fleet;
+``benchmarks/serving_bench.py --replay-trace`` gates p50/p99 and
+bit-identity under the checked-in deterministic mixed-traffic trace.
+
 Modules:
   config    — ``EncoderConfig``: one config subsuming ridge/banded/sharding
   dispatch  — complexity-driven solver + mesh-layout resolution

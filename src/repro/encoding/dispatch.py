@@ -113,6 +113,24 @@ def estimated_resident_bytes(n: int, p: int, t: int,
     return n * (p + t_shard) * itemsize
 
 
+def mixed_wave_scoring_bytes(wave_rows: int, t: int, score_slots: int,
+                             itemsize: int = 4) -> int:
+    """Extra resident bytes the MIXED serving wave pins beyond the plain
+    predict's activation set: the padded target block (``wave_rows·t``),
+    the per-row request one-hot (``wave_rows·score_slots``), and the
+    in/out per-slot Pearson-sum carries (``2·score_slots·5·t``).
+
+    This is the fleet tier's half of the residency account: the serving
+    registry charges it next to ``estimated_resident_bytes`` so a budget
+    bounds the waves actually flown — scored and unscored alike — not
+    just the weight matrices.
+    """
+    if score_slots <= 0:
+        return 0
+    return (wave_rows * t + wave_rows * score_slots
+            + 2 * 5 * score_slots * t) * itemsize
+
+
 def _chunked_decision(cfg: EncoderConfig, w: RidgeWorkload, resident: int,
                       device_count: int) -> DispatchDecision:
     """Pin the streamed fold-statistics path (out-of-core regime)."""

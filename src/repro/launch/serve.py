@@ -14,48 +14,161 @@ fits one ``BrainEncoder`` per synthetic subject, persists each as an
 ``EncoderBundle``, then serves wave-batched prediction traffic against the
 bundle fleet through ``EncoderRegistry`` + ``EncoderService`` — the
 "fit once, serve many" workflow end to end.
+
+Fleet mode — N workers, ONE artifact dir, shared page cache::
+
+    python -m repro.launch.serve --encoders 6 --bundle-dir /tmp/bundles \
+        --workers 4 --serve-steps 5
+
+``--workers N`` fits the fleet once in the parent, then launches N worker
+*processes* against the same bundle directory.  Each worker runs its own
+``FleetRegistry`` (mmap'd read-only weight reads → the bytes are faulted
+from disk once between co-located workers via the OS page cache) and
+publishes its loads/evictions to the shared file-locked
+``residency.json``; the parent prints the fleet residency view when the
+workers drain.  Per-worker knobs: ``--worker-id`` (set by the parent; set
+it manually to join an existing fleet), ``--max-pending-rows`` (bounded
+admission — overflow is a typed rejection, not a stall), and
+``--replay-trace PATH`` to serve the checked-in deterministic
+mixed-traffic trace instead of random ragged traffic.
 """
 from __future__ import annotations
 
 import argparse
+import os
+import subprocess
+import sys
 import time
+
+
+def _run_fleet_parent(args) -> None:
+    """Fit the fleet once, launch ``--workers`` child processes against
+    the shared bundle dir, then print the fleet residency view."""
+    import json
+
+    from repro.serving_encoders import RESIDENCY_MAP, ResidencyMap
+    from repro.serving_encoders.traffic import (build_synthetic_fleet,
+                                                load_trace)
+
+    # Fit ONCE in the parent so the workers never race on bundle writes —
+    # they open the finished artifacts read-only.
+    if args.replay_trace is None:
+        build_synthetic_fleet(args.bundle_dir, args.encoders,
+                              n=args.n, p=128, t=args.targets)
+    else:
+        spec = load_trace(args.replay_trace)
+        build_synthetic_fleet(args.bundle_dir, spec.n_models,
+                              n=args.n, p=spec.p, t=spec.t)
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__)))))
+    env["PYTHONPATH"] = src + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    base = [sys.executable, "-m", "repro.launch.serve",
+            "--bundle-dir", args.bundle_dir,
+            "--n", str(args.n), "--targets", str(args.targets),
+            "--wave-rows", str(args.wave_rows),
+            "--serve-steps", str(args.serve_steps),
+            "--requests-per-step", str(args.requests_per_step),
+            "--budget-mb", str(args.budget_mb),
+            "--max-pending-rows", str(args.max_pending_rows)]
+    if args.encoders is not None:
+        base += ["--encoders", str(args.encoders)]
+    if args.replay_trace is not None:
+        base += ["--replay-trace", args.replay_trace]
+    procs = [subprocess.Popen(base + ["--worker-id", f"w{i}"], env=env)
+             for i in range(args.workers)]
+    codes = [proc.wait() for proc in procs]
+    rmap = ResidencyMap(os.path.join(args.bundle_dir, RESIDENCY_MAP))
+    print(f"fleet residency after drain: "
+          f"{json.dumps(rmap.snapshot(), sort_keys=True)}")
+    if any(codes):
+        raise SystemExit(f"worker exit codes {codes}")
+    print(f"{args.workers} workers drained cleanly ✓")
 
 
 def _run_encoder_mode(args) -> None:
     import numpy as np
-    from repro.serving_encoders import EncoderRegistry, EncoderService
+    from repro.serving_encoders import (RESIDENCY_MAP, EncoderRegistry,
+                                        EncoderService, FleetFrontend,
+                                        FleetRegistry, ResidencyMap)
+    from repro.serving_encoders.fleet import replay
     from repro.serving_encoders.traffic import (build_synthetic_fleet,
-                                                ragged_requests)
+                                                load_trace, ragged_requests,
+                                                replay_requests)
 
-    p = 128
-    fleet = build_synthetic_fleet(args.bundle_dir, args.encoders,
-                                  n=args.n, p=p, t=args.targets)
+    if args.workers > 1 and args.worker_id is None:
+        _run_fleet_parent(args)
+        return
 
-    registry = EncoderRegistry(
-        device_memory_budget=int(args.budget_mb * 2**20),
-        wave_rows=args.wave_rows)
+    spec = None
+    if args.replay_trace is not None:
+        # The trace pins the fleet's shapes and size — serve exactly the
+        # workload the benchmarks replay.
+        spec = load_trace(args.replay_trace)
+        p, t, n_models = spec.p, spec.t, spec.n_models
+    else:
+        p, t, n_models = 128, args.targets, args.encoders
+    fleet = build_synthetic_fleet(args.bundle_dir, n_models,
+                                  n=args.n, p=p, t=t)
+
+    reg_kw = dict(device_memory_budget=int(args.budget_mb * 2**20),
+                  wave_rows=args.wave_rows)
+    if args.worker_id is not None:
+        rmap = ResidencyMap(os.path.join(args.bundle_dir, RESIDENCY_MAP))
+        registry = FleetRegistry(worker_id=args.worker_id,
+                                 residency_map=rmap, **reg_kw)
+    else:
+        registry = EncoderRegistry(**reg_kw)
     for name, path in fleet:
         registry.add(name, path)
-    service = EncoderService(registry, wave_rows=args.wave_rows)
-
+    service = EncoderService(registry, wave_rows=args.wave_rows,
+                             prefetch_next=True)
+    frontend = FleetFrontend(service,
+                             max_pending_rows=args.max_pending_rows)
+    tag = f"[{args.worker_id}] " if args.worker_id else ""
     names = [name for name, _ in fleet]
-    rng = np.random.default_rng(0)
-    step_ms = []
-    for step in range(args.serve_steps):
-        reqs = ragged_requests(rng, names, p, args.wave_rows,
-                               args.requests_per_step)
+
+    if spec is not None:
+        reqs = replay_requests(spec, names)
         t0 = time.perf_counter()
-        service.serve(reqs)
-        step_ms.append((time.perf_counter() - t0) * 1e3)
-    warm = step_ms[1:] or step_ms              # first step pays the compile
-    print(f"served {args.serve_steps} steps × {args.requests_per_step} "
-          f"requests: p50={np.percentile(warm, 50):.1f} ms "
-          f"p99={np.percentile(warm, 99):.1f} ms per step "
-          f"(first/cold {step_ms[0]:.1f} ms)")
+        results, rejections = replay(frontend, reqs)
+        wall = (time.perf_counter() - t0) * 1e3
+        faults = sum(1 for r in results if r is not None and r.error)
+        print(f"{tag}replayed {len(reqs)} trace requests in {wall:.1f} ms "
+              f"({len(rejections)} backpressure rejections, "
+              f"{faults} faults)")
+    else:
+        # Per-worker seed: distinct traffic per worker, deterministic per
+        # worker id.
+        seed = 0 if args.worker_id is None else \
+            abs(hash(args.worker_id)) % 2**31
+        rng = np.random.default_rng(seed)
+        step_ms = []
+        for step in range(args.serve_steps):
+            for req in ragged_requests(rng, names, p, args.wave_rows,
+                                       args.requests_per_step):
+                try:
+                    frontend.submit(req)
+                except Exception:
+                    frontend.flush()
+                    frontend.submit(req)
+            t0 = time.perf_counter()
+            frontend.flush()
+            step_ms.append((time.perf_counter() - t0) * 1e3)
+        warm = step_ms[1:] or step_ms          # first step pays the compile
+        print(f"{tag}served {args.serve_steps} steps × "
+              f"{args.requests_per_step} requests: "
+              f"p50={np.percentile(warm, 50):.1f} ms "
+              f"p99={np.percentile(warm, 99):.1f} ms per step "
+              f"(first/cold {step_ms[0]:.1f} ms)")
     s = service.stats
-    print(f"waves={s.waves} rows={s.rows} pad_rows={s.pad_rows} "
-          f"compiled_predicts={service.compile_count} (1 per wave shape)")
-    print(f"registry: {registry.stats()}")
+    print(f"{tag}waves={s.waves} rows={s.rows} pad_rows={s.pad_rows} "
+          f"compiled_predicts={service.compile_count} (1 per wave shape) "
+          f"tenants={len(s.per_tenant)}")
+    print(f"{tag}registry: {registry.stats()}")
+    if args.worker_id is not None:
+        registry.close()
 
 
 def main() -> None:
@@ -81,9 +194,24 @@ def main() -> None:
     ap.add_argument("--requests-per-step", type=int, default=8)
     ap.add_argument("--budget-mb", type=float, default=256.0,
                     help="registry device-memory budget (LRU eviction)")
+    # -- fleet mode ----------------------------------------------------------
+    ap.add_argument("--workers", type=int, default=1,
+                    help="fleet mode: launch N worker processes against "
+                         "one bundle dir (shared page cache via mmap'd "
+                         "weights + file-locked residency.json)")
+    ap.add_argument("--worker-id", default=None,
+                    help="run as ONE fleet worker under this id "
+                         "(normally set by the --workers parent)")
+    ap.add_argument("--max-pending-rows", type=int, default=4096,
+                    help="bounded-admission queue depth in rows; overflow "
+                         "is a typed ServiceError rejection (backpressure)")
+    ap.add_argument("--replay-trace", default=None,
+                    help="encoder mode: serve this checked-in mixed-traffic "
+                         "trace (e.g. benchmarks/traces/mixed_v1.json) "
+                         "instead of random ragged traffic")
     args = ap.parse_args()
 
-    if args.encoders is not None:
+    if args.encoders is not None or args.replay_trace is not None:
         _run_encoder_mode(args)
         return
     if args.arch is None:

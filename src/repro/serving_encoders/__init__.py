@@ -1,6 +1,6 @@
 """repro.serving_encoders — fitted-encoder artifacts + prediction serving.
 
-The first subsystem on the *inference* side of the fit/predict divide:
+The inference side of the fit/predict divide:
 
 * ``bundle``   — ``EncoderBundle``: atomic on-disk persistence of a fitted
   ``BrainEncoder`` (sharded W with bf16-as-u16 storage, μ/σ, selected λ,
@@ -8,10 +8,21 @@ The first subsystem on the *inference* side of the fit/predict divide:
   ``BrainEncoder.save(dir)`` / ``BrainEncoder.load(dir)`` round-trip
   through it bit-identically.
 * ``registry`` — ``EncoderRegistry``: many bundles, lazy device residency
-  under a ``device_memory_budget`` with LRU eviction.
-* ``service``  — ``EncoderService``: wave-batched compiled prediction
-  (fixed-shape padded waves, one compilation per wave shape, micro-batched
-  concurrent requests, optional Pearson-r scoring).
+  under a ``device_memory_budget`` with thread-safe LRU eviction and
+  mmap'd read-only weight reads.
+* ``service``  — ``EncoderService``: wave-batched compiled prediction —
+  fixed-shape padded MIXED waves that pack scored and unscored requests
+  from any tenants together (per-row request one-hot → per-slot Pearson
+  sums from one compiled program per wave shape), micro-batched
+  concurrent requests, per-tenant accounting, typed per-request fault
+  degradation.
+* ``traffic``  — synthetic fleets + the deterministic mixed-traffic
+  trace (``TraceSpec``/``load_trace``/``replay_requests``) that tests and
+  ``benchmarks/serving_bench.py`` replay identically.
+* ``fleet``    — the multi-worker tier: ``ResidencyMap`` (file-locked
+  on-disk residency shared across worker processes), ``FleetRegistry``
+  (publishes loads/evictions to the map), ``FleetFrontend`` (bounded
+  admission with typed backpressure rejections).
 
 Fit once, serve many::
 
@@ -20,15 +31,37 @@ Fit once, serve many::
 
     reg = EncoderRegistry(device_memory_budget=512 * 2**20)
     reg.add("sub-01/L12", "bundles/sub-01_L12")
-    service = EncoderService(reg, wave_rows=128)
-    out = service.serve([PredictRequest("sub-01/L12", X_new)])
+    service = EncoderService(reg, wave_buckets=(32, 128))
+    out = service.serve([PredictRequest("sub-01/L12", X_new),
+                         PredictRequest("sub-01/L12", X_val, targets=Y_val)])
+
+Fleet workflow — N workers, one artifact dir, shared page cache::
+
+    # each of N worker processes (launch/serve.py --encoders --workers N):
+    rmap = ResidencyMap(os.path.join(workdir, RESIDENCY_MAP))
+    reg = FleetRegistry(worker_id=f"w{i}", residency_map=rmap,
+                        device_memory_budget=budget)   # mmap'd reads →
+    #   co-located workers fault each weight shard from disk ONCE between
+    #   them (shared OS page cache); device copies stay per-worker.
+    service = EncoderService(reg, wave_buckets=(32, 128),
+                             prefetch_next=True)
+    frontend = FleetFrontend(service, max_pending_rows=4096)
+    # admit until backpressure (typed ServiceError), then flush →
+    # one mixed-wave batch; rmap.snapshot() is the fleet residency view.
 """
 from repro.serving_encoders.bundle import (  # noqa: F401
     BundleError, EncoderBundle, save_bundle,
+)
+from repro.serving_encoders.fleet import (  # noqa: F401
+    RESIDENCY_MAP, FleetFrontend, FleetRegistry, ResidencyMap,
 )
 from repro.serving_encoders.registry import (  # noqa: F401
     EncoderRegistry, LoadedEncoder, RegistryError, bundle_resident_bytes,
 )
 from repro.serving_encoders.service import (  # noqa: F401
     EncoderService, PredictRequest, PredictResult, ServiceError,
+    plan_mixed_waves, reference_serve,
+)
+from repro.serving_encoders.traffic import (  # noqa: F401
+    TraceSpec, load_trace, replay_requests, save_trace, trace_digest,
 )

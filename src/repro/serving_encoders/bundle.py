@@ -380,12 +380,19 @@ class EncoderBundle:
             std.mu_y, std.sd_y = arrays["mu_y"], arrays["sd_y"]
         return std
 
-    def load_encoder(self, *, target_shards: int | None = None):
+    def load_encoder(self, *, target_shards: int | None = None,
+                     mmap: bool = False):
         """Materialise a fitted ``BrainEncoder`` (no refit).
 
         ``target_shards`` > 1 places ``W`` column-sharded over a fresh
         ``(1, target_shards)`` mesh — the serving layout.  ``t`` must
         divide evenly and enough local devices must exist.
+
+        ``mmap=True`` reads the weight shards through read-only memmaps
+        (the fleet registry's default): the bytes flow device-ward through
+        the OS page cache, so N serving processes pointed at one artifact
+        directory warm the disk read once between them — each process
+        still owns its device copy.
         """
         import jax
         import jax.numpy as jnp
@@ -399,7 +406,7 @@ class EncoderBundle:
         # the exact same read path the registry's shard cache uses.
         arrays = self.load_arrays(
             [k for k in self._leaves() if not k.startswith("W/")])
-        blocks = [self.load_weight_shard(i)
+        blocks = [self.load_weight_shard(i, mmap=mmap)
                   for i in range(m["weight_shards"])]
         W = blocks[0] if len(blocks) == 1 else np.concatenate(blocks, axis=1)
         Wj = jnp.asarray(W)

@@ -11,18 +11,37 @@ Accounting reuses ``encoding.dispatch.estimated_resident_bytes`` for the
 activation term: serving a wave of ``wave_rows`` rows holds
 ``wave_rows·(p + t_shard)`` floats resident next to the ``p·t`` weight
 matrix, which is exactly the dispatch estimator evaluated at
-``n = wave_rows``.
+``n = wave_rows``; mixed (scored) waves add
+``dispatch.mixed_wave_scoring_bytes`` for the padded target block, the
+request one-hot, and the per-slot Pearson-sum carries.
+
+**Fleet-safe.**  All bookkeeping (``get`` / ``get_columns`` / eviction /
+counters) runs under one registry lock, so N ``EncoderService`` threads
+can hammer a shared registry without the LRU account drifting or
+``resident_bytes`` overshooting the budget between check and load; the
+observed high-water mark is tracked in ``peak_resident_bytes``.  Weight
+shards are read through read-only mmap (``mmap_weights=True``, the way
+``RunStore`` maps data shards), so N serving *processes* pointed at one
+artifact directory share the OS page cache for the read path — each
+process still owns its device copies.  Any fault while materialising a
+bundle (truncated shard, flipped checkpoint manifest, vanished leaf)
+surfaces as a typed ``BundleError`` so the service can degrade just that
+model's tenants.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import OrderedDict
 
 import numpy as np
 
-from repro.encoding.dispatch import estimated_resident_bytes
-from repro.serving_encoders.bundle import EncoderBundle
+from repro.checkpoint import io as ckpt_io
+from repro.encoding.dispatch import (
+    estimated_resident_bytes, mixed_wave_scoring_bytes,
+)
+from repro.serving_encoders.bundle import BundleError, EncoderBundle
 
 
 class RegistryError(ValueError):
@@ -31,10 +50,14 @@ class RegistryError(ValueError):
 
 
 def bundle_resident_bytes(bundle: EncoderBundle, wave_rows: int,
-                          target_shards: int | None = None) -> int:
+                          target_shards: int | None = None,
+                          score_slots: int = 0) -> int:
     """Device bytes one loaded bundle pins while serving ``wave_rows`` waves:
     the weight matrix + μ/σ vectors + the per-wave activation working set
-    (``dispatch.estimated_resident_bytes`` at ``n = wave_rows``).
+    (``dispatch.estimated_resident_bytes`` at ``n = wave_rows``), plus —
+    when the caller flies MIXED waves — the scoring extras
+    (``dispatch.mixed_wave_scoring_bytes``: padded targets, request
+    one-hot, per-slot Pearson-sum carries).
 
     The μ/σ term is charged unconditionally: ``_serving_arrays`` fills in
     identity vectors for standardizer-less bundles (one compiled signature
@@ -44,6 +67,7 @@ def bundle_resident_bytes(bundle: EncoderBundle, wave_rows: int,
     std = 2 * (p + t) * 4
     act = estimated_resident_bytes(wave_rows, p, t,
                                    target_shards=target_shards or 1)
+    act += mixed_wave_scoring_bytes(wave_rows, t, score_slots)
     return bundle.weight_nbytes() + std + act
 
 
@@ -59,6 +83,7 @@ class LoadedEncoder:
     encoder: "object"
     resident_bytes: int
     charged_wave_rows: int  # wave size the resident_bytes account assumed
+    charged_score_slots: int  # mixed-wave slot count the account assumed
     mu_x: "object"          # (p,) device array
     sd_x: "object"
     mu_y: "object"          # (t,) device array
@@ -137,10 +162,12 @@ class EncoderRegistry:
     """
 
     def __init__(self, *, device_memory_budget: int | None = None,
-                 wave_rows: int = 128, target_shards: int | None = None):
+                 wave_rows: int = 128, target_shards: int | None = None,
+                 mmap_weights: bool = True):
         self.device_memory_budget = device_memory_budget
         self.wave_rows = wave_rows
         self.target_shards = target_shards
+        self.mmap_weights = mmap_weights
         self._bundles: dict[str, EncoderBundle] = {}
         self._loaded: "OrderedDict[str, LoadedEncoder]" = OrderedDict()
         # Shard-granular residency pool (whole-brain serving): keyed by
@@ -149,21 +176,27 @@ class EncoderRegistry:
         self._shards: "OrderedDict[tuple[str, int], LoadedShard]" \
             = OrderedDict()
         self._std_host: dict[str, tuple] = {}   # host μ/σ cache per model
+        # ONE lock over all bookkeeping: the LRU maps, the byte account,
+        # and the counters.  Reentrant because get_columns' load path
+        # nests _std_host_arrays and _evict_until_fits.
+        self._lock = threading.RLock()
         self.hits = 0
         self.loads = 0
         self.evictions = 0
         self.shard_hits = 0
         self.shard_loads = 0
+        self.peak_resident_bytes = 0
 
     # -- registration --------------------------------------------------------
     def add(self, name: str, path: str) -> EncoderBundle:
         """Register a bundle directory (opened + validated eagerly, arrays
         stay on disk)."""
-        if name in self._bundles:
-            raise RegistryError(f"model {name!r} already registered")
-        bundle = EncoderBundle.open(path)
-        self._bundles[name] = bundle
-        return bundle
+        with self._lock:
+            if name in self._bundles:
+                raise RegistryError(f"model {name!r} already registered")
+            bundle = EncoderBundle.open(path)
+            self._bundles[name] = bundle
+            return bundle
 
     def bundle(self, name: str) -> EncoderBundle:
         """Manifest-only access (shapes/dtypes/config) — no array load, no
@@ -174,15 +207,16 @@ class EncoderRegistry:
                                 f"{sorted(self._bundles)}")
         return self._bundles[name]
 
-    def ensure_servable(self, name: str, wave_rows: int | None = None
-                        ) -> None:
+    def ensure_servable(self, name: str, wave_rows: int | None = None,
+                        score_slots: int = 0) -> None:
         """Raise ``RegistryError`` NOW if ``name`` could never be served at
-        this wave size (its lone resident estimate exceeds the budget).
+        this wave size (its lone resident estimate — including the mixed
+        scoring extras when ``score_slots`` > 0 — exceeds the budget).
         Manifest-only — lets a server refuse a doomed batch before doing
         any device work for the other models in it."""
         need = bundle_resident_bytes(self.bundle(name),
                                      max(self.wave_rows, wave_rows or 0),
-                                     self.target_shards)
+                                     self.target_shards, score_slots)
         budget = self.device_memory_budget
         if budget is not None and need > budget:
             raise RegistryError(
@@ -207,8 +241,9 @@ class EncoderRegistry:
 
     @property
     def resident_bytes(self) -> int:
-        return (sum(e.resident_bytes for e in self._loaded.values())
-                + sum(e.resident_bytes for e in self._shards.values()))
+        with self._lock:
+            return (sum(e.resident_bytes for e in self._loaded.values())
+                    + sum(e.resident_bytes for e in self._shards.values()))
 
     @property
     def loaded_shards(self) -> list[tuple[str, int]]:
@@ -216,62 +251,98 @@ class EncoderRegistry:
         return list(self._shards)
 
     # -- residency -----------------------------------------------------------
-    def get(self, name: str, *, wave_rows: int | None = None
-            ) -> LoadedEncoder:
+    def get(self, name: str, *, wave_rows: int | None = None,
+            score_slots: int = 0) -> LoadedEncoder:
         """Resident entry for ``name`` (loading + LRU-evicting as needed).
 
         ``wave_rows`` is the wave size the CALLER is about to serve with —
-        ``EncoderService`` passes its effective per-call value so the
-        activation term in the residency account reflects the waves
-        actually flown, not just the registry's construction-time default
-        (the larger of the two is charged).
+        ``EncoderService`` passes its effective per-call value (and its
+        mixed-wave ``score_slots``) so the activation term in the
+        residency account reflects the waves actually flown, not just the
+        registry's construction-time default (the larger of the two is
+        charged).
+
+        Thread-safe: the whole hit/recharge/evict/load/insert sequence
+        holds the registry lock, so concurrent callers can never stack
+        loads past the budget.  A fault while materialising the bundle
+        (truncated shard, corrupted checkpoint manifest) raises a typed
+        ``BundleError`` and leaves the registry state untouched.
         """
-        if name not in self._bundles:
-            raise RegistryError(f"unknown model {name!r}; registered: "
-                                f"{sorted(self._bundles)}")
-        eff_wave = max(self.wave_rows, wave_rows or 0)
-        budget = self.device_memory_budget
-        if name in self._loaded:
-            self.hits += 1
-            entry = self._loaded[name]
-            self._loaded.move_to_end(name)
-            if eff_wave > entry.charged_wave_rows:
-                # Bigger waves against a resident entry pin a bigger
-                # activation set — re-charge the account and make room.
-                # An unservable wave size refuses up front WITHOUT
-                # flushing the other residents.
-                new_need = bundle_resident_bytes(entry.bundle, eff_wave,
-                                                 self.target_shards)
-                if budget is not None and new_need > budget:
-                    raise RegistryError(
-                        f"bundle {name!r} needs {new_need / 2**20:.1f} MB "
-                        f"resident at wave size {eff_wave}, over the "
-                        f"registry budget {budget / 2**20:.1f} MB")
-                entry.resident_bytes = new_need
-                entry.charged_wave_rows = eff_wave
-                self._evict_until_fits(extra_need=0, keep=name)
+        with self._lock:
+            if name not in self._bundles:
+                raise RegistryError(f"unknown model {name!r}; registered: "
+                                    f"{sorted(self._bundles)}")
+            eff_wave = max(self.wave_rows, wave_rows or 0)
+            budget = self.device_memory_budget
+            if name in self._loaded:
+                self.hits += 1
+                entry = self._loaded[name]
+                self._loaded.move_to_end(name)
+                if eff_wave > entry.charged_wave_rows \
+                        or score_slots > entry.charged_score_slots:
+                    # Bigger waves (or a wider slot one-hot) against a
+                    # resident entry pin a bigger activation set —
+                    # re-charge the account and make room.  An unservable
+                    # wave size refuses up front WITHOUT flushing the
+                    # other residents.
+                    eff_wave = max(eff_wave, entry.charged_wave_rows)
+                    slots = max(score_slots, entry.charged_score_slots)
+                    new_need = bundle_resident_bytes(
+                        entry.bundle, eff_wave, self.target_shards, slots)
+                    if budget is not None and new_need > budget:
+                        raise RegistryError(
+                            f"bundle {name!r} needs {new_need / 2**20:.1f} "
+                            f"MB resident at wave size {eff_wave}, over "
+                            f"the registry budget {budget / 2**20:.1f} MB")
+                    entry.resident_bytes = new_need
+                    entry.charged_wave_rows = eff_wave
+                    entry.charged_score_slots = slots
+                    self._evict_until_fits(extra_need=0, keep=name)
+                    self._note_peak()
+                return entry
+            bundle = self._bundles[name]
+            need = bundle_resident_bytes(bundle, eff_wave,
+                                         self.target_shards, score_slots)
+            if budget is not None and need > budget:
+                raise RegistryError(
+                    f"bundle {name!r} needs {need / 2**20:.1f} MB "
+                    f"resident, over the registry budget "
+                    f"{budget / 2**20:.1f} MB — raise the budget or shard "
+                    f"the targets")
+            # Evict BEFORE loading so the peak never exceeds budget.
+            self._evict_until_fits(extra_need=need)
+            t0 = time.perf_counter()
+            try:
+                encoder = bundle.load_encoder(
+                    target_shards=self.target_shards,
+                    mmap=self.mmap_weights)
+            except BundleError:
+                raise
+            except (ckpt_io.CheckpointError, OSError, ValueError) as e:
+                # Anything the disk path throws mid-materialisation —
+                # truncated .npy, vanished leaf, corrupted checkpoint
+                # manifest — becomes the typed fault the service degrades
+                # on, and no partial entry is ever inserted.
+                raise BundleError(
+                    f"bundle {name!r} failed to materialise: {e}") from e
+            p, t = bundle.shape
+            mu_x, sd_x, mu_y, sd_y = _serving_arrays(encoder, p, t)
+            entry = LoadedEncoder(
+                name=name, bundle=bundle, encoder=encoder,
+                resident_bytes=need, charged_wave_rows=eff_wave,
+                charged_score_slots=score_slots,
+                mu_x=mu_x, sd_x=sd_x, mu_y=mu_y, sd_y=sd_y,
+                load_seconds=time.perf_counter() - t0)
+            self._loaded[name] = entry
+            self.loads += 1
+            self._note_peak()
             return entry
-        bundle = self._bundles[name]
-        need = bundle_resident_bytes(bundle, eff_wave, self.target_shards)
-        if budget is not None and need > budget:
-            raise RegistryError(
-                f"bundle {name!r} needs {need / 2**20:.1f} MB resident, "
-                f"over the registry budget {budget / 2**20:.1f} MB — raise "
-                f"the budget or shard the targets")
-        # Evict BEFORE loading so the peak never exceeds budget.
-        self._evict_until_fits(extra_need=need)
-        t0 = time.perf_counter()
-        encoder = bundle.load_encoder(target_shards=self.target_shards)
-        p, t = bundle.shape
-        mu_x, sd_x, mu_y, sd_y = _serving_arrays(encoder, p, t)
-        entry = LoadedEncoder(
-            name=name, bundle=bundle, encoder=encoder, resident_bytes=need,
-            charged_wave_rows=eff_wave,
-            mu_x=mu_x, sd_x=sd_x, mu_y=mu_y, sd_y=sd_y,
-            load_seconds=time.perf_counter() - t0)
-        self._loaded[name] = entry
-        self.loads += 1
-        return entry
+
+    def _note_peak(self) -> None:
+        resident = (sum(e.resident_bytes for e in self._loaded.values())
+                    + sum(e.resident_bytes for e in self._shards.values()))
+        if resident > self.peak_resident_bytes:
+            self.peak_resident_bytes = resident
 
     # -- shard-granular residency (whole-brain serving) ----------------------
     def _std_host_arrays(self, name: str) -> tuple:
@@ -310,63 +381,76 @@ class EncoderRegistry:
         faults just that shard's file) — a wave that touches one column
         window of a whole-brain bundle never pays for the rest of it.
         Each shard is an independent LRU resident, evicted individually.
+        Thread-safe: the whole plan/hit/evict/load walk holds the registry
+        lock; load faults surface as typed ``BundleError``.
         """
         import jax.numpy as jnp
 
-        bundle = self.bundle(name)
-        lo, hi = col_range
-        idxs = bundle.shards_for_columns(lo, hi)
-        if not idxs:
-            raise RegistryError(f"column window [{lo}, {hi}) of {name!r} "
-                                f"touches no weight shard")
-        eff_wave = max(self.wave_rows, wave_rows or 0)
-        budget = self.device_memory_budget
-        bounds = bundle.weight_shard_bounds()
-        wanted = frozenset((name, i) for i in idxs)
-        out = []
-        for i in idxs:
-            key = (name, i)
-            slo, shi = bounds[i]
-            if key in self._shards:
-                self.shard_hits += 1
-                entry = self._shards[key]
-                self._shards.move_to_end(key)
-                if eff_wave > entry.charged_wave_rows:
-                    new_need = shard_resident_bytes(bundle, shi - slo,
-                                                    eff_wave)
-                    if budget is not None and new_need > budget:
-                        raise RegistryError(
-                            f"shard {i} of {name!r} needs "
-                            f"{new_need / 2**20:.1f} MB resident at wave "
-                            f"size {eff_wave}, over the registry budget "
-                            f"{budget / 2**20:.1f} MB")
-                    entry.resident_bytes = new_need
-                    entry.charged_wave_rows = eff_wave
-                    self._evict_until_fits(extra_need=0, keep_shards=wanted)
+        with self._lock:
+            bundle = self.bundle(name)
+            lo, hi = col_range
+            idxs = bundle.shards_for_columns(lo, hi)
+            if not idxs:
+                raise RegistryError(f"column window [{lo}, {hi}) of "
+                                    f"{name!r} touches no weight shard")
+            eff_wave = max(self.wave_rows, wave_rows or 0)
+            budget = self.device_memory_budget
+            bounds = bundle.weight_shard_bounds()
+            wanted = frozenset((name, i) for i in idxs)
+            out = []
+            for i in idxs:
+                key = (name, i)
+                slo, shi = bounds[i]
+                if key in self._shards:
+                    self.shard_hits += 1
+                    entry = self._shards[key]
+                    self._shards.move_to_end(key)
+                    if eff_wave > entry.charged_wave_rows:
+                        new_need = shard_resident_bytes(bundle, shi - slo,
+                                                        eff_wave)
+                        if budget is not None and new_need > budget:
+                            raise RegistryError(
+                                f"shard {i} of {name!r} needs "
+                                f"{new_need / 2**20:.1f} MB resident at "
+                                f"wave size {eff_wave}, over the registry "
+                                f"budget {budget / 2**20:.1f} MB")
+                        entry.resident_bytes = new_need
+                        entry.charged_wave_rows = eff_wave
+                        self._evict_until_fits(extra_need=0,
+                                               keep_shards=wanted)
+                        self._note_peak()
+                    out.append(entry)
+                    continue
+                need = shard_resident_bytes(bundle, shi - slo, eff_wave)
+                if budget is not None and need > budget:
+                    raise RegistryError(
+                        f"shard {i} of {name!r} needs {need / 2**20:.1f} "
+                        f"MB resident, over the registry budget "
+                        f"{budget / 2**20:.1f} MB — re-save with narrower "
+                        f"weight shards")
+                self._evict_until_fits(extra_need=need, keep_shards=wanted)
+                t0 = time.perf_counter()
+                try:
+                    W = jnp.asarray(bundle.load_weight_shard(i, mmap=True))
+                    mu_x, sd_x, mu_y, sd_y = self._std_host_arrays(name)
+                except BundleError:
+                    raise
+                except (ckpt_io.CheckpointError, OSError, ValueError) as e:
+                    raise BundleError(
+                        f"shard {i} of {name!r} failed to materialise: "
+                        f"{e}") from e
+                entry = LoadedShard(
+                    name=name, shard=i, bounds=(slo, shi), W=W,
+                    mu_x=jnp.asarray(mu_x), sd_x=jnp.asarray(sd_x),
+                    mu_y=jnp.asarray(mu_y[slo:shi]),
+                    sd_y=jnp.asarray(sd_y[slo:shi]),
+                    resident_bytes=need, charged_wave_rows=eff_wave,
+                    load_seconds=time.perf_counter() - t0)
+                self._shards[key] = entry
+                self.shard_loads += 1
+                self._note_peak()
                 out.append(entry)
-                continue
-            need = shard_resident_bytes(bundle, shi - slo, eff_wave)
-            if budget is not None and need > budget:
-                raise RegistryError(
-                    f"shard {i} of {name!r} needs {need / 2**20:.1f} MB "
-                    f"resident, over the registry budget "
-                    f"{budget / 2**20:.1f} MB — re-save with narrower "
-                    f"weight shards")
-            self._evict_until_fits(extra_need=need, keep_shards=wanted)
-            t0 = time.perf_counter()
-            W = jnp.asarray(bundle.load_weight_shard(i, mmap=True))
-            mu_x, sd_x, mu_y, sd_y = self._std_host_arrays(name)
-            entry = LoadedShard(
-                name=name, shard=i, bounds=(slo, shi), W=W,
-                mu_x=jnp.asarray(mu_x), sd_x=jnp.asarray(sd_x),
-                mu_y=jnp.asarray(mu_y[slo:shi]),
-                sd_y=jnp.asarray(sd_y[slo:shi]),
-                resident_bytes=need, charged_wave_rows=eff_wave,
-                load_seconds=time.perf_counter() - t0)
-            self._shards[key] = entry
-            self.shard_loads += 1
-            out.append(entry)
-        return out
+            return out
 
     def _evict_until_fits(self, extra_need: int, keep: str | None = None,
                           keep_shards: frozenset = frozenset()) -> None:
@@ -393,28 +477,32 @@ class EncoderRegistry:
 
     def evict(self, name: str) -> bool:
         """Drop a resident entry — the full-bundle entry AND any of the
-        model's resident column shards (device arrays become
-        collectable)."""
-        hit = False
-        if name in self._loaded:
-            del self._loaded[name]
-            self.evictions += 1
-            hit = True
-        for key in [k for k in self._shards if k[0] == name]:
-            del self._shards[key]
-            self.evictions += 1
-            hit = True
-        return hit
+        model's resident column shards (device arrays become collectable),
+        plus the host μ/σ cache so a repaired bundle re-reads fresh."""
+        with self._lock:
+            hit = False
+            if name in self._loaded:
+                del self._loaded[name]
+                self.evictions += 1
+                hit = True
+            for key in [k for k in self._shards if k[0] == name]:
+                del self._shards[key]
+                self.evictions += 1
+                hit = True
+            self._std_host.pop(name, None)
+            return hit
 
     def stats(self) -> dict:
-        return {"registered": len(self._bundles),
-                "loaded": len(self._loaded),
-                "loaded_shards": len(self._shards),
-                "resident_bytes": self.resident_bytes,
-                "hits": self.hits, "loads": self.loads,
-                "shard_hits": self.shard_hits,
-                "shard_loads": self.shard_loads,
-                "evictions": self.evictions}
+        with self._lock:
+            return {"registered": len(self._bundles),
+                    "loaded": len(self._loaded),
+                    "loaded_shards": len(self._shards),
+                    "resident_bytes": self.resident_bytes,
+                    "peak_resident_bytes": self.peak_resident_bytes,
+                    "hits": self.hits, "loads": self.loads,
+                    "shard_hits": self.shard_hits,
+                    "shard_loads": self.shard_loads,
+                    "evictions": self.evictions}
 
 
 __all__ = ["EncoderRegistry", "RegistryError", "LoadedEncoder",

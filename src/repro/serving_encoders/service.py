@@ -1,58 +1,88 @@
-"""EncoderService — wave-batched prediction serving over a registry.
+"""EncoderService — mixed-wave prediction serving over a registry.
 
 The LLM side of this repo serves decode traffic in fixed-shape *waves*
 (``serving.engine.ServeEngine``: pad/stack → one compiled program reused
 across waves).  This module is the same deployment pattern adapted to
-encoding: concurrent ``PredictRequest``\\ s are micro-batched per model,
-their rows concatenated and cut into fixed ``wave_rows``-row waves (the
-ragged tail zero-padded), and each wave runs ONE compiled program —
-standardize → ``X @ W`` → de-standardize — whose compilation is keyed by
-the wave shape (plus the weight shape/dtype/sharding).  Fixed shapes mean
-one compilation per distinct wave shape, reused forever after: the
-``compile_count`` attribute counts actual traces and the serving CI lane
-asserts it equals the number of distinct shapes served.
+encoding and hardened for the multi-tenant fleet: concurrent
+``PredictRequest``\\ s are micro-batched per model, their rows concatenated
+and cut into fixed-shape waves (the ragged tail zero-padded), and every
+wave runs ONE compiled program per wave shape.  Fixed shapes mean one
+compilation per distinct wave shape, reused forever after: the
+``compile_count`` attribute counts actual traces and the fleet CI lane
+asserts it equals the number of wave buckets actually flown.
 
-Two serving refinements ride on the same fixed-shape contract:
+**Mixed waves** (the fleet front-end).  Scored and unscored requests —
+from any number of tenants — pack into the SAME waves.  The compiled
+program (``_predict_mixed``) takes, next to the padded feature block, a
+per-row request one-hot (``(wave_rows, score_slots)``; the
+``foldstats._FixedShapeUpdate`` masking pattern) and a per-slot Pearson
+sum carry, and emits the wave's predictions plus the updated ``(s, 5, t)``
+running sums — so one program serves the whole traffic mix and the old
+private-wave path for scored requests is retired.
 
-* **Wave-shape bucketing** — ``wave_buckets=(32, 128, 512)`` picks each
-  wave's shape from a small ladder by the rows left to serve (largest
-  bucket while full waves remain, then the smallest bucket that swallows
-  the tail) instead of padding everything to one shape.  Each bucket
-  compiles once; mixed small/large traffic stops paying the big shape's
-  pad fraction.  ``ServiceStats.per_bucket`` records waves/rows/pad per
-  shape so the pad economics are observable (``BENCH_serving.json``).
-* **Fused scoring** — a request that carries ``targets`` is served by a
-  second compiled program that emits, next to the predictions, the five
-  per-target Pearson sums of the wave (``kernels.pearsonr`` running
-  sums, masked to the valid rows).  The host accumulates the ``(5, t)``
-  sums across the request's waves in float64 and finalises r with the
-  kernel's formula (``ops.pearson_r_from_sums``) — score-heavy
-  evaluation traffic never re-reads the ``(rows, t)`` predictions on the
-  host (the paper's §4.1 metric at one extra ``O(t)`` hop).
+Two exactness properties make the packed serve BIT-identical to serving
+each request alone (the replay harness gates this):
+
+* **Row independence.**  Each prediction row is ``x @ W`` standardized /
+  de-standardized elementwise — the compiled program is keyed only by the
+  wave shape, and a row's output never depends on what the other rows
+  hold, so packing requests together (or padding with zeros) cannot
+  change any row's bits.
+* **Sequential sum chaining.**  The per-slot Pearson sums are reduced by
+  a sequential scan over the wave's rows, seeded with the slot's carry
+  from the request's previous wave.  A row whose one-hot weight is zero
+  contributes an exact ``±0`` — and adding ``±0`` to a float accumulator
+  is exact — so a request's final sums are the SAME sequential f32 chain
+  over its own rows whether they sit at wave offset 0 (served alone) or
+  anywhere inside a shared wave, for every wave-bucket ladder and cut.
+  (A lane-parallel ``jnp.sum`` would regroup the chain by absolute row
+  position and break this.)
+
+Wave shapes come from ``wave_buckets`` (2–3 ladder sizes, each compiled
+once, picked per wave by the rows remaining — mixed small/large traffic
+stops paying the big shape's pad fraction) or the single ``wave_rows``;
+``ServiceStats`` records pad economics per bucket AND per tenant
+(rows/bytes/requests/errors — the fleet's accounting unit).
+
+**Graceful degradation.**  A model whose bundle fails to load or
+materialise mid-serve (truncated shard, flipped manifest bytes, eviction
+race) degrades ONLY its own requests: the typed ``BundleError`` /
+``RegistryError`` is surfaced on each affected ``PredictResult.error``,
+the bundle is evicted, and the batch's other tenants are served normally.
+Malformed *requests* still refuse the whole batch up front (pass 1), so a
+bad client cannot waste another tenant's completed device work.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+import threading
+from typing import Callable, Sequence
 
 import numpy as np
 
-from repro.serving_encoders.registry import EncoderRegistry
+from repro.serving_encoders.bundle import BundleError
+from repro.serving_encoders.registry import EncoderRegistry, RegistryError
 
 
 class ServiceError(ValueError):
-    """Malformed request: unknown model handled by the registry; this is
-    for empty/shape-mismatched feature blocks."""
+    """Malformed request: unknown model is handled by the registry; this is
+    for empty/shape-mismatched feature blocks and admission rejections."""
 
 
 @dataclasses.dataclass
 class PredictRequest:
     """One client request: raw (un-standardized) stimulus features for one
-    model, optionally with measured targets to score against."""
+    model, optionally with measured targets to score against.  ``tenant``
+    is the accounting principal (defaults to the model name)."""
 
     model: str
     features: np.ndarray                 # (rows, p) raw features
     targets: np.ndarray | None = None    # (rows, t) → score with Pearson r
+    tenant: str | None = None
+
+    @property
+    def tenant_id(self) -> str:
+        return self.tenant if self.tenant is not None else self.model
 
 
 @dataclasses.dataclass
@@ -60,6 +90,9 @@ class PredictResult:
     model: str
     predictions: np.ndarray | None       # (rows, t) raw-unit predictions
     pearson_r: np.ndarray | None = None  # (t,) when targets were given
+    # Typed load/serve fault (BundleError/RegistryError) that degraded
+    # this request — the fleet's per-tenant failure unit.  None = served.
+    error: Exception | None = None
 
 
 @dataclasses.dataclass
@@ -71,6 +104,10 @@ class ServiceStats:
     # Per wave shape actually flown: {wave_rows: {"waves", "rows",
     # "pad_rows"}} — the observable pad economics of bucketing.
     per_bucket: dict = dataclasses.field(default_factory=dict)
+    # Per tenant: {"rows", "bytes", "requests", "scored", "errors",
+    # "rejected"} — the fleet's accounting unit (bytes = feature + target
+    # payload served for the tenant).
+    per_tenant: dict = dataclasses.field(default_factory=dict)
 
     def record_wave(self, wave_rows: int, real: int) -> None:
         b = self.per_bucket.setdefault(
@@ -81,26 +118,120 @@ class ServiceStats:
         self.waves += 1
         self.pad_rows += wave_rows - real
 
+    def tenant(self, tenant: str) -> dict:
+        return self.per_tenant.setdefault(
+            tenant, {"rows": 0, "bytes": 0, "requests": 0, "scored": 0,
+                     "errors": 0, "rejected": 0})
+
+    def record_request(self, tenant: str, rows: int, nbytes: int,
+                       scored: bool) -> None:
+        acct = self.tenant(tenant)
+        acct["rows"] += rows
+        acct["bytes"] += nbytes
+        acct["requests"] += 1
+        acct["scored"] += int(scored)
+
+    def record_error(self, tenant: str) -> None:
+        self.tenant(tenant)["errors"] += 1
+
+    def record_rejected(self, tenant: str) -> None:
+        self.tenant(tenant)["rejected"] += 1
+
+
+# -- mixed-wave packing ------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WaveSegment:
+    """Rows ``[req_lo, req_hi)`` of request ``req`` land at wave offset
+    ``wave_lo``; ``slot`` is the request's Pearson score slot within this
+    wave (None = unscored)."""
+
+    req: int
+    req_lo: int
+    req_hi: int
+    wave_lo: int
+    slot: int | None
+
+
+@dataclasses.dataclass(frozen=True)
+class MixedWave:
+    rows: int                    # wave shape flown (a bucket size)
+    fill: int                    # real rows (rows - fill are padding)
+    segments: tuple              # WaveSegment, contiguous from offset 0
+
+
+def plan_mixed_waves(req_rows: Sequence[int], scored: Sequence[bool],
+                     next_wave: Callable[[int], int],
+                     score_slots: int) -> list[MixedWave]:
+    """Pack ragged scored/unscored requests into fixed-shape mixed waves.
+
+    Requests flow into waves in arrival order; ``next_wave(remaining)``
+    picks each wave's shape (the bucket-ladder policy).  Every scored
+    request intersecting a wave holds one of the wave's ``score_slots``
+    one-hot slots; when a NEW scored request would need a slot and none is
+    free the wave closes early (its tail rows become padding) — the slot
+    count is static so the compiled program's shape never changes.
+
+    Pure and deterministic: the property harness replays plans against a
+    per-request reference serve, and the fleet bench replays the same
+    traffic trace through the same packer.
+    """
+    if score_slots < 1:
+        raise ServiceError(f"score_slots must be >= 1, got {score_slots}")
+    waves: list[MixedWave] = []
+    remaining = sum(req_rows)
+    r, done = 0, 0                      # cursor: request index, rows consumed
+    while remaining:
+        w = next_wave(remaining)
+        fill, slots = 0, 0
+        segs: list[WaveSegment] = []
+        while fill < w and r < len(req_rows):
+            rows = req_rows[r]
+            if done == rows:                       # exhausted → advance
+                r, done = r + 1, 0
+                continue
+            slot = None
+            if scored[r]:
+                if slots == score_slots:
+                    break                          # close the wave early
+                slot, slots = slots, slots + 1
+            take = min(w - fill, rows - done)
+            segs.append(WaveSegment(r, done, done + take, fill, slot))
+            fill += take
+            done += take
+            remaining -= take
+            if done == rows:
+                r, done = r + 1, 0
+        waves.append(MixedWave(rows=w, fill=fill, segments=tuple(segs)))
+    return waves
+
 
 class EncoderService:
-    """Micro-batching wave server over an ``EncoderRegistry``.
+    """Micro-batching mixed-wave server over an ``EncoderRegistry``.
 
     >>> service = EncoderService(registry, wave_buckets=(32, 128))
     >>> results = service.serve([PredictRequest("sub-01", X1),
     ...                          PredictRequest("sub-02", X2, targets=Y2)])
 
-    Requests for the same model are packed together (their rows
-    concatenated before waving), so many small concurrent requests cost
-    the same compiled program as one large one.  Wave shapes come from
-    ``wave_buckets`` when given (2–3 ladder sizes, each compiled once,
-    picked per wave by the rows remaining) or the single ``wave_rows``
-    otherwise; ``serve(..., wave_rows=...)`` pins one shape per call.
-    Every distinct (program, wave shape) pair compiles exactly once per
-    service lifetime — ``compile_count`` counts actual traces.
+    Requests for the same model are packed together — scored and unscored
+    alike — so many small concurrent requests cost the same compiled
+    program as one large one.  Wave shapes come from ``wave_buckets`` when
+    given (each compiled once, picked per wave by the rows remaining) or
+    the single ``wave_rows`` otherwise; ``serve(..., wave_rows=...)`` pins
+    one shape per call.  Every distinct (program, wave shape) pair
+    compiles exactly once per service lifetime — ``compile_count`` counts
+    actual traces, and mixing scored/unscored traffic never adds one.
+
+    ``score_slots`` bounds how many scored requests share one wave (the
+    static one-hot width); ``prefetch_next=True`` touches the registry for
+    the NEXT queued model on a background thread while the current model's
+    waves are in flight (hot-bundle prefetch — needs the registry's lock,
+    which ``EncoderRegistry`` always holds across mutations).
     """
 
     def __init__(self, registry: EncoderRegistry, *, wave_rows: int = 128,
                  wave_buckets: Sequence[int] | None = None,
+                 score_slots: int = 4, prefetch_next: bool = False,
                  return_predictions: bool = True):
         import jax
         import jax.numpy as jnp
@@ -115,6 +246,11 @@ class EncoderService:
                 raise ServiceError(f"wave_buckets must be positive ints, "
                                    f"got {wave_buckets}")
         self.wave_buckets = wave_buckets
+        if score_slots < 1:
+            raise ServiceError(f"score_slots must be >= 1, "
+                               f"got {score_slots}")
+        self.score_slots = score_slots
+        self.prefetch_next = prefetch_next
         self.return_predictions = return_predictions
         self.compile_count = 0
         self.stats = ServiceStats()
@@ -128,24 +264,42 @@ class EncoderService:
             P = jnp.matmul(Xs, W, preferred_element_type=jnp.float32)
             return P * sd_y + mu_y
 
-        def _predict_score(X, Yt, n_valid, W, mu_x, sd_x, mu_y, sd_y):
-            # The scoring wave: predictions PLUS the five Pearson running
-            # sums of the wave's valid rows, so score-heavy traffic never
-            # pays a second host-side pass over (rows, t) predictions.
-            # Pad rows must be masked — a padded feature row predicts the
-            # de-standardized zero-vector response, NOT zero — while the
-            # zero-padded targets already add nothing to any sum.
+        def _predict_mixed(X, Yt, onehot, sums_in, W, mu_x, sd_x,
+                           mu_y, sd_y):
+            # THE fleet program: predictions for the whole mixed wave plus
+            # the per-slot Pearson running sums, chained through sums_in.
+            # The reduction over rows is a SEQUENTIAL scan (unrolled in
+            # blocks of 8, still one chain): zero-weight rows add exact
+            # ±0, so a request's sums are bit-identical at any wave
+            # offset/cut to serving it alone — the replay-harness gate.
             self.compile_count += 1
-            from repro.kernels import ops
             Xs = (X - mu_x) / sd_x
             P = jnp.matmul(Xs, W, preferred_element_type=jnp.float32)
             P = P * sd_y + mu_y
-            valid = (jnp.arange(X.shape[0]) < n_valid)[:, None]
-            sums = ops.pearson_sums(Yt, jnp.where(valid, P, 0.0))
-            return P, sums
+            m = X.shape[0]
+            m8 = -(-m // 8) * 8
+            pad = ((0, m8 - m), (0, 0))
+            Yp = jnp.pad(Yt, pad)
+            Pp = jnp.pad(P, pad)
+            wp = jnp.pad(onehot, pad)               # pad rows: weight 0
+
+            def step(sums, blk):
+                y8, p8, w8 = blk                    # (8, t) (8, t) (8, s)
+                for i in range(8):                  # sequential, in order
+                    y, q, w = y8[i], p8[i], w8[i]
+                    terms = jnp.stack([y, q, y * y, q * q, y * q])
+                    sums = sums + w[:, None, None] * terms[None]
+                return sums, None
+
+            import jax as _jax
+            sums_out, _ = _jax.lax.scan(
+                step, sums_in,
+                (Yp.reshape(m8 // 8, 8, -1), Pp.reshape(m8 // 8, 8, -1),
+                 wp.reshape(m8 // 8, 8, -1)))
+            return P, sums_out
 
         self._predict = jax.jit(_predict)
-        self._predict_score = jax.jit(_predict_score)
+        self._predict_mixed = jax.jit(_predict_mixed)
 
     # -- wave planning -------------------------------------------------------
     def _plan_waves(self, n_rows: int, wave_rows: int | None) -> list[int]:
@@ -172,6 +326,12 @@ class EncoderService:
         if rem:
             ladder.append(self.wave_buckets[0])
         return sizes + (ladder if sum(ladder) < single[0] else single)
+
+    def _next_wave(self, remaining: int, wave_rows: int | None) -> int:
+        """First wave of the ladder plan for ``remaining`` rows — the
+        incremental form the mixed packer re-plans with after an early
+        (slot-exhausted) wave close."""
+        return self._plan_waves(remaining, wave_rows)[0]
 
     def _pad(self, block: np.ndarray, rows: int) -> np.ndarray:
         pad = rows - block.shape[0]
@@ -237,12 +397,101 @@ class EncoderService:
         return out[:, lo - first_lo:hi - first_lo]
 
     # -- serving -------------------------------------------------------------
-    def serve(self, requests: Sequence[PredictRequest], *,
-              wave_rows: int | None = None) -> list[PredictResult]:
+    def _serve_group(self, model: str, reqs: list[PredictRequest],
+                     blocks: list[np.ndarray], t: int, max_wave: int,
+                     wave_rows: int | None) -> list[PredictResult]:
+        """Fly one model's packed mixed waves; results in ``reqs`` order."""
         import jax.numpy as jnp
 
         from repro.kernels import ops
 
+        entry = self.registry.get(model, wave_rows=max_wave,
+                                  score_slots=self.score_slots)
+        enc_args = (entry.weights, entry.mu_x, entry.sd_x,
+                    entry.mu_y, entry.sd_y)
+        s = self.score_slots
+        scored = [r.targets is not None for r in reqs]
+        targets = [None if r.targets is None
+                   else np.asarray(r.targets, np.float32) for r in reqs]
+        plan = plan_mixed_waves(
+            [b.shape[0] for b in blocks], scored,
+            lambda rem: self._next_wave(rem, wave_rows), s)
+
+        # Per-request running Pearson sums — the f32 chain the compiled
+        # scan continues from wave to wave (exact, see module docstring).
+        req_sums = {j: np.zeros((5, t), np.float32)
+                    for j, sc in enumerate(scored) if sc}
+        flown: list[tuple[MixedWave, object]] = []
+        for wave in plan:
+            X = np.zeros((wave.rows, blocks[0].shape[1]), np.float32)
+            Yt = np.zeros((wave.rows, t), np.float32)
+            onehot = np.zeros((wave.rows, s), np.float32)
+            sums_in = np.zeros((s, 5, t), np.float32)
+            has_scored = False
+            for seg in wave.segments:
+                dst = slice(seg.wave_lo, seg.wave_lo + seg.req_hi - seg.req_lo)
+                X[dst] = blocks[seg.req][seg.req_lo:seg.req_hi]
+                if seg.slot is not None:
+                    has_scored = True
+                    Yt[dst] = targets[seg.req][seg.req_lo:seg.req_hi]
+                    onehot[dst, seg.slot] = 1.0
+                    sums_in[seg.slot] = req_sums[seg.req]
+            P, sums_out = self._predict_mixed(
+                jnp.asarray(X), jnp.asarray(Yt), jnp.asarray(onehot),
+                jnp.asarray(sums_in), *enc_args)
+            self.stats.record_wave(wave.rows, wave.fill)
+            if has_scored:
+                # The chain is a data dependency: the slot carries must
+                # land on host before the request's NEXT wave is built.
+                # Unscored waves stay fully async-enqueued.
+                host_sums = np.asarray(sums_out)
+                for seg in wave.segments:
+                    if seg.slot is not None:
+                        req_sums[seg.req] = host_sums[seg.slot]
+            flown.append((wave, P))
+
+        out_pred = None
+        if self.return_predictions:
+            out_pred = {j: np.empty((b.shape[0], t), np.float32)
+                        for j, b in enumerate(blocks)}
+            for wave, P in flown:
+                host = np.asarray(P)
+                for seg in wave.segments:
+                    out_pred[seg.req][seg.req_lo:seg.req_hi] = \
+                        host[seg.wave_lo:seg.wave_lo + seg.req_hi - seg.req_lo]
+
+        results = []
+        for j, req in enumerate(reqs):
+            r = None
+            if scored[j]:
+                # Finalise from the accumulated chain with the kernel's
+                # formula — identical sums (packed vs alone) → identical r.
+                r = np.asarray(ops.pearson_r_from_sums(
+                    req_sums[j].astype(np.float64), blocks[j].shape[0]))
+            results.append(PredictResult(
+                model=model,
+                predictions=None if out_pred is None else out_pred[j],
+                pearson_r=r))
+            self.stats.rows += blocks[j].shape[0]
+            self.stats.record_request(
+                req.tenant_id, blocks[j].shape[0],
+                blocks[j].nbytes + (targets[j].nbytes if scored[j] else 0),
+                scored[j])
+        return results
+
+    def _prefetch(self, model: str, max_wave: int) -> None:
+        """Hot-bundle prefetch: touch the registry for the next queued
+        model while the current model's waves are in flight.  Faults stay
+        silent here — they surface (typed, per request) when the model is
+        actually served."""
+        try:
+            self.registry.get(model, wave_rows=max_wave,
+                              score_slots=self.score_slots)
+        except Exception:
+            pass
+
+    def serve(self, requests: Sequence[PredictRequest], *,
+              wave_rows: int | None = None) -> list[PredictResult]:
         if wave_rows is not None and wave_rows < 1:
             raise ServiceError(f"wave_rows must be >= 1, got {wave_rows}")
         # The largest shape this call may fly — what the residency account
@@ -266,7 +515,8 @@ class EncoderService:
             p, t = self.registry.bundle(model).shape
             # A model whose bundle could never fit the budget at this wave
             # size dooms the batch — refuse before ANY model's compute.
-            self.registry.ensure_servable(model, wave_rows=max_wave)
+            self.registry.ensure_servable(model, wave_rows=max_wave,
+                                          score_slots=self.score_slots)
             blocks = []
             for i in idxs:
                 feats = np.asarray(requests[i].features, np.float32)
@@ -284,87 +534,54 @@ class EncoderService:
             prepared[model] = blocks
 
         # Pass 2 — load (LRU touch, residency charged at the largest wave
-        # actually flown), wave, and serve each model's packed rows.
+        # actually flown), pack, and fly each model's mixed waves.  A
+        # load/serve fault degrades ONLY that model's requests.
         results: list[PredictResult | None] = [None] * len(requests)
-        for model, idxs in groups.items():
-            block_of = dict(zip(idxs, prepared[model]))
-            entry = self.registry.get(model, wave_rows=max_wave)
-            enc_args = (entry.weights, entry.mu_x, entry.sd_x,
-                        entry.mu_y, entry.sd_y)
-            # Scored requests fly their own waves (their (5, t) Pearson
-            # sums are per request); plain requests pack together.
-            plain = [i for i in idxs if requests[i].targets is None]
-            scored = [i for i in idxs if requests[i].targets is not None]
-
-            # Enqueue every wave before pulling any result to host: JAX's
-            # async dispatch overlaps the compiled programs with the
-            # host-side padding of subsequent chunks.
-            plain_parts, plain_counts = [], []
-            if plain:
-                rows = (np.concatenate([block_of[i] for i in plain])
-                        if len(plain) > 1 else block_of[plain[0]])
-                lo = 0
-                for w in self._plan_waves(rows.shape[0], wave_rows):
-                    chunk = self._pad(rows[lo:lo + w], w)
-                    real = min(w, rows.shape[0] - lo)
-                    plain_parts.append(self._predict(
-                        jnp.asarray(chunk), *enc_args))
-                    plain_counts.append(real)
-                    self.stats.record_wave(w, real)
-                    lo += w
-            per_scored: dict[int, tuple[list, list, list]] = {}
-            for i in scored:
-                block = block_of[i]
-                Yt = np.asarray(requests[i].targets, np.float32)
-                parts, sums, counts = [], [], []
-                lo = 0
-                for w in self._plan_waves(block.shape[0], wave_rows):
-                    real = min(w, block.shape[0] - lo)
-                    P, S = self._predict_score(
-                        jnp.asarray(self._pad(block[lo:lo + w], w)),
-                        jnp.asarray(self._pad(Yt[lo:lo + w], w)),
-                        np.int32(real), *enc_args)
-                    parts.append(P)
-                    sums.append(S)
-                    counts.append(real)
-                    self.stats.record_wave(w, real)
-                    lo += w
-                per_scored[i] = (parts, sums, counts)
-
-            # Pull to host and reassemble in arrival order.
-            host = [np.asarray(o)[:c]
-                    for o, c in zip(plain_parts, plain_counts)]
-            preds = (np.concatenate(host) if len(host) > 1
-                     else host[0] if host else None)
-            pos = 0
-            for i in plain:
-                m = block_of[i].shape[0]
-                results[i] = PredictResult(
-                    model=model,
-                    predictions=(preds[pos:pos + m]
-                                 if self.return_predictions else None))
-                pos += m
-                self.stats.rows += m
-            for i in scored:
-                parts, sums, counts = per_scored[i]
-                n_real = sum(counts)
-                # Accumulate the five per-target sums across the request's
-                # waves in float64, then finalise with the kernel formula
-                # — one O(t) hop instead of an O(rows·t) host re-read.
-                total = np.zeros(np.shape(sums[0]), np.float64)
-                for S in sums:
-                    total += np.asarray(S, np.float64)
-                r = np.asarray(ops.pearson_r_from_sums(total, n_real))
-                pred_i = None
-                if self.return_predictions:
-                    hp = [np.asarray(o)[:c] for o, c in zip(parts, counts)]
-                    pred_i = np.concatenate(hp) if len(hp) > 1 else hp[0]
-                results[i] = PredictResult(model=model, predictions=pred_i,
-                                           pearson_r=r)
-                self.stats.rows += n_real
+        order = list(groups)
+        pending: threading.Thread | None = None
+        for gi, model in enumerate(order):
+            if pending is not None:
+                pending.join()                     # prefetched THIS model
+                pending = None
+            if self.prefetch_next and gi + 1 < len(order):
+                pending = threading.Thread(
+                    target=self._prefetch, args=(order[gi + 1], max_wave),
+                    daemon=True)
+                pending.start()
+            idxs = groups[model]
+            t = self.registry.bundle(model).shape[1]
+            try:
+                group_results = self._serve_group(
+                    model, [requests[i] for i in idxs], prepared[model],
+                    t, max_wave, wave_rows)
+            except (BundleError, RegistryError) as err:
+                # Graceful degradation: evict the faulty bundle, surface
+                # the typed error on each of the model's requests, keep
+                # serving the other tenants.
+                self.registry.evict(model)
+                group_results = []
+                for i in idxs:
+                    self.stats.record_error(requests[i].tenant_id)
+                    group_results.append(PredictResult(
+                        model=model, predictions=None, error=err))
+            for i, res in zip(idxs, group_results):
+                results[i] = res
             self.stats.requests += len(idxs)
+        if pending is not None:
+            pending.join()
         return results                                 # arrival order
 
 
-__all__ = ["EncoderService", "PredictRequest", "PredictResult",
-           "ServiceError", "ServiceStats"]
+def reference_serve(service: EncoderService,
+                    requests: Sequence[PredictRequest], *,
+                    wave_rows: int | None = None) -> list[PredictResult]:
+    """The per-request reference: each request served ALONE (no packing,
+    no wave sharing).  The replay harness and the property tests gate the
+    packed mixed-wave serve bit-identical against this."""
+    return [service.serve([req], wave_rows=wave_rows)[0]
+            for req in requests]
+
+
+__all__ = ["EncoderService", "MixedWave", "PredictRequest", "PredictResult",
+           "ServiceError", "ServiceStats", "WaveSegment", "plan_mixed_waves",
+           "reference_serve"]

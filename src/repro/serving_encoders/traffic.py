@@ -1,9 +1,25 @@
 """Synthetic fleet building + request traffic, shared by the serve CLI
 (``launch/serve.py --encoders``) and ``benchmarks/serving_bench.py`` so the
 materialise → fit → save loop and the request-size distribution cannot
-drift between the two drivers."""
+drift between the two drivers.
+
+The fleet tier adds the **deterministic mixed-traffic trace**: a seeded,
+checked-in request schedule (``benchmarks/traces/mixed_v1.json``) with
+ragged row counts, a scored/unscored mix, multiple tenants, and Zipf-ish
+model popularity over more models than a serving budget fits.  Tests and
+``serving_bench.py --replay-trace`` replay the SAME trace — same packing,
+same admission pressure, same eviction churn — so the p50/p99 gates and
+the bit-identity gate (packed mixed waves vs per-request reference
+serve) always measure the same workload.  The trace file stores only the
+*structure* (model index, tenant, rows, scored flag) plus a sha256
+digest over it; the float payloads are regenerated per entry from the
+trace seed at replay time, so the checked-in file stays small and the
+digest survives numpy version drift."""
 from __future__ import annotations
 
+import dataclasses
+import hashlib
+import json
 import os
 
 
@@ -65,4 +81,136 @@ def ragged_requests(rng, models: list[str], p: int, wave_rows: int,
             for _ in range(count)]
 
 
-__all__ = ["build_synthetic_fleet", "ragged_requests"]
+# -- deterministic mixed-traffic traces --------------------------------------
+
+_TRACE_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEntry:
+    """One request in a trace: WHICH model, WHO is asking, HOW many rows,
+    and whether targets ride along (scored).  Float payloads are not part
+    of the trace — they are regenerated from ``(trace seed, entry index)``
+    at replay time."""
+
+    model_idx: int
+    tenant: str
+    rows: int
+    scored: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    """A checked-in mixed-traffic schedule (see module docstring)."""
+
+    seed: int
+    p: int                       # feature dim every request must carry
+    t: int                       # target dim scored requests carry
+    n_models: int                # fleet size the trace indexes into
+    entries: tuple               # TraceEntry, arrival order
+    zipf_a: float = 1.1
+
+    def digest(self) -> str:
+        return trace_digest(self.entries)
+
+
+def trace_digest(entries) -> str:
+    """sha256 over the trace *structure* (model_idx, tenant, rows,
+    scored) — stable across numpy/platform drift because no float bytes
+    are hashed."""
+    payload = json.dumps(
+        [[e.model_idx, e.tenant, e.rows, int(e.scored)] for e in entries],
+        separators=(",", ":")).encode()
+    return hashlib.sha256(payload).hexdigest()
+
+
+def make_mixed_trace(seed: int, *, n_models: int, n_requests: int, p: int,
+                     t: int, wave_rows: int, scored_frac: float = 0.4,
+                     zipf_a: float = 1.1, n_tenants: int = 4) -> TraceSpec:
+    """Generate a mixed-traffic schedule: ragged row counts in
+    ``[8, 2·wave_rows)``, ``scored_frac`` of requests scored, model
+    popularity Zipf-ish (weight ``1/(rank+1)^a`` — rank-0 dominates, the
+    tail keeps forcing eviction churn when ``n_models`` exceeds what the
+    registry budget fits)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    w = 1.0 / (np.arange(n_models) + 1.0) ** zipf_a
+    w /= w.sum()
+    lo, hi = 8, max(9, 2 * wave_rows)
+    entries = tuple(
+        TraceEntry(model_idx=int(rng.choice(n_models, p=w)),
+                   tenant=f"tenant-{int(rng.integers(n_tenants)):02d}",
+                   rows=int(rng.integers(lo, hi)),
+                   scored=bool(rng.random() < scored_frac))
+        for _ in range(n_requests))
+    return TraceSpec(seed=seed, p=p, t=t, n_models=n_models,
+                     entries=entries, zipf_a=zipf_a)
+
+
+def save_trace(path: str, spec: TraceSpec) -> str:
+    os.makedirs(os.path.dirname(os.path.abspath(path)) or ".",
+                exist_ok=True)
+    doc = {"version": _TRACE_VERSION, "seed": spec.seed, "p": spec.p,
+           "t": spec.t, "n_models": spec.n_models, "zipf_a": spec.zipf_a,
+           "digest": spec.digest(),
+           "entries": [[e.model_idx, e.tenant, e.rows, int(e.scored)]
+                       for e in spec.entries]}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    return path
+
+
+def load_trace(path: str) -> TraceSpec:
+    """Load a checked-in trace, verifying its structure digest — a trace
+    that drifted from what the benchmarks recorded is refused, not
+    silently replayed."""
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("version") != _TRACE_VERSION:
+        raise ValueError(f"trace {path}: unsupported version "
+                         f"{doc.get('version')}")
+    entries = tuple(TraceEntry(model_idx=int(m), tenant=str(tn),
+                               rows=int(r), scored=bool(s))
+                    for m, tn, r, s in doc["entries"])
+    got = trace_digest(entries)
+    if got != doc["digest"]:
+        raise ValueError(f"trace {path}: digest mismatch — file says "
+                         f"{doc['digest'][:12]}…, entries hash to "
+                         f"{got[:12]}… (the trace was edited; regenerate "
+                         f"it with make_mixed_trace + save_trace)")
+    return TraceSpec(seed=int(doc["seed"]), p=int(doc["p"]),
+                     t=int(doc["t"]), n_models=int(doc["n_models"]),
+                     entries=entries, zipf_a=float(doc["zipf_a"]))
+
+
+def replay_requests(spec: TraceSpec, models: list[str]) -> list:
+    """Materialise the trace's ``PredictRequest`` list.
+
+    Each entry's float payload comes from ``default_rng([seed, index])``
+    — independent of every other entry, so any slice of the trace
+    replays the same requests (the reference serve and the packed serve
+    see bit-identical inputs by construction).
+    """
+    import numpy as np
+
+    from repro.serving_encoders.service import PredictRequest
+
+    if len(models) < spec.n_models:
+        raise ValueError(f"trace wants {spec.n_models} models, fleet has "
+                         f"{len(models)}")
+    out = []
+    for i, e in enumerate(spec.entries):
+        rng = np.random.default_rng([spec.seed, i])
+        X = rng.standard_normal((e.rows, spec.p)).astype(np.float32)
+        Y = (rng.standard_normal((e.rows, spec.t)).astype(np.float32)
+             if e.scored else None)
+        out.append(PredictRequest(model=models[e.model_idx], features=X,
+                                  targets=Y, tenant=e.tenant))
+    return out
+
+
+__all__ = ["TraceEntry", "TraceSpec", "build_synthetic_fleet", "load_trace",
+           "make_mixed_trace", "ragged_requests", "replay_requests",
+           "save_trace", "trace_digest"]

@@ -285,12 +285,12 @@ def test_service_micro_batches_and_matches_predict(fitted, tmp_path):
     assert np.array_equal(got, np.asarray(enc.predict(X)))
     # 160 rows → 3 waves of 64 with 32 pad rows.
     assert svc.stats.waves == 3 and svc.stats.pad_rows == 32
-    # One trace for the plain predict, one for the fused scoring wave —
-    # request traffic and model count must not add more.
-    assert svc.compile_count == 2
+    # ONE mixed program serves scored and unscored traffic alike — the
+    # request mix and model count must not add traces.
+    assert svc.compile_count == 1
     svc.serve([PredictRequest("m", Xn[:5]),
                PredictRequest("m", Xn[:5], targets=np.asarray(Y)[:5])])
-    assert svc.compile_count == 2
+    assert svc.compile_count == 1
     # Scoring is fused into the compiled wave (five running sums per
     # wave, finalised from the accumulated sums) and matches the
     # host-side §4.1 metric on the unpadded rows.

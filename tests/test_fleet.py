@@ -1,0 +1,314 @@
+"""The fleet tier: registry thread safety, the shared residency map,
+bounded admission, prefetch, and the deterministic traffic trace."""
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.encoding import BrainEncoder
+from repro.serving_encoders import (
+    EncoderBundle, EncoderRegistry, EncoderService, FleetFrontend,
+    FleetRegistry, PredictRequest, ResidencyMap, ServiceError,
+    reference_serve,
+)
+from repro.serving_encoders.fleet import replay
+from repro.serving_encoders.registry import bundle_resident_bytes
+from repro.serving_encoders.traffic import (
+    load_trace, make_mixed_trace, replay_requests, save_trace, trace_digest,
+)
+
+P, T = 10, 6
+
+
+def _save_fleet(root, k):
+    import jax
+    import jax.numpy as jnp
+
+    paths = []
+    for i in range(k):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(i), 3)
+        X = jax.random.normal(k1, (80, P), jnp.float32)
+        W = jax.random.normal(k2, (P, T), jnp.float32)
+        Y = X @ W + 0.1 * jax.random.normal(k3, (80, T), jnp.float32)
+        path = str(root / f"m{i}")
+        BrainEncoder(n_folds=3).fit(X, Y).save(path)
+        paths.append(path)
+    return paths
+
+
+# -- registry thread safety (the LRU bookkeeping fix) ------------------------
+
+def test_registry_8_thread_stress_never_exceeds_budget(tmp_path):
+    """8 threads hammer get+evict on 6 models under a budget that fits 2:
+    the account must never overshoot (checked continuously AND via the
+    lock-maintained high-water mark) and every get must return a usable
+    entry."""
+    paths = _save_fleet(tmp_path, 6)
+    wave = 32
+    need = bundle_resident_bytes(EncoderBundle.open(paths[0]), wave)
+    budget = int(2.5 * need)               # fits 2, never 3
+    reg = EncoderRegistry(device_memory_budget=budget, wave_rows=wave)
+    for i, path in enumerate(paths):
+        reg.add(f"m{i}", path)
+
+    stop = threading.Event()
+    failures = []
+    overshoots = []
+
+    def watcher():
+        while not stop.is_set():
+            r = reg.resident_bytes
+            if r > budget:
+                overshoots.append(r)
+
+    def hammer(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(40):
+                name = f"m{int(rng.integers(6))}"
+                if rng.random() < 0.15:
+                    reg.evict(name)
+                    continue
+                entry = reg.get(name, wave_rows=wave)
+                assert entry.name == name
+                assert entry.weights.shape == (P, T)
+        except Exception as e:          # pragma: no cover - failure path
+            failures.append(e)
+
+    watch = threading.Thread(target=watcher, daemon=True)
+    watch.start()
+    threads = [threading.Thread(target=hammer, args=(s,)) for s in range(8)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    stop.set()
+    watch.join()
+    assert not failures, failures[:3]
+    assert not overshoots, f"resident_bytes overshot budget: {overshoots[:5]}"
+    assert reg.peak_resident_bytes <= budget
+    assert reg.evictions > 0               # the budget actually bit
+    assert reg.resident_bytes <= budget
+
+
+def test_concurrent_serves_share_one_registry(tmp_path):
+    """Two services (two threads) over ONE registry serve concurrently
+    under a tight budget — results stay bit-identical to serving alone."""
+    paths = _save_fleet(tmp_path, 3)
+    need = bundle_resident_bytes(EncoderBundle.open(paths[0]), 16, None, 2)
+    reg = EncoderRegistry(device_memory_budget=int(2.5 * need),
+                          wave_rows=16)
+    for i, path in enumerate(paths):
+        reg.add(f"m{i}", path)
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((20, P)).astype(np.float32)
+    Y = rng.standard_normal((20, T)).astype(np.float32)
+
+    ref_reg = EncoderRegistry(wave_rows=16)
+    for i, path in enumerate(paths):
+        ref_reg.add(f"m{i}", path)
+    ref = reference_serve(
+        EncoderService(ref_reg, wave_rows=16, score_slots=2),
+        [PredictRequest(f"m{i}", X, targets=Y) for i in range(3)])
+
+    outs = [None, None]
+
+    def worker(idx):
+        svc = EncoderService(reg, wave_rows=16, score_slots=2)
+        for _ in range(5):
+            outs[idx] = svc.serve(
+                [PredictRequest(f"m{i}", X, targets=Y) for i in range(3)])
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(2)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    for out in outs:
+        for got, want in zip(out, ref):
+            assert got.error is None
+            assert np.array_equal(got.predictions, want.predictions)
+            assert np.array_equal(got.pearson_r, want.pearson_r)
+
+
+# -- residency map -----------------------------------------------------------
+
+def test_residency_map_publish_snapshot_retire(tmp_path):
+    rmap = ResidencyMap(str(tmp_path / "residency.json"))
+    rmap.publish("w0", {"m0": 100, "m1": 50}, loads=2)
+    rmap.publish("w1", {"m0": 100}, loads=1, evictions=3)
+    snap = rmap.snapshot()
+    assert snap["workers"]["w0"]["resident_bytes"] == 150
+    assert snap["workers"]["w1"]["evictions"] == 3
+    assert rmap.holders("m0") == ["w0", "w1"]
+    assert rmap.holders("m1") == ["w0"]
+    assert rmap.fleet_resident_bytes() == 250
+    rmap.retire("w0")
+    assert "w0" not in rmap.snapshot()["workers"]
+    assert rmap.holders("m0") == ["w1"]
+
+
+def test_residency_map_concurrent_publishers_stay_coherent(tmp_path):
+    """8 threads publish under the file lock: the final map must hold
+    every worker's LAST row and parse cleanly (no torn writes)."""
+    path = str(tmp_path / "residency.json")
+
+    def publisher(i):
+        rmap = ResidencyMap(path)          # own fd per thread, like a
+        for step in range(15):             # separate worker process
+            rmap.publish(f"w{i}", {"m0": 10 * i + step})
+
+    threads = [threading.Thread(target=publisher, args=(i,))
+               for i in range(8)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    with open(path) as f:
+        snap = json.load(f)                # parses → never torn
+    assert sorted(snap["workers"]) == [f"w{i}" for i in range(8)]
+    for i in range(8):
+        assert snap["workers"][f"w{i}"]["models"]["m0"] == 10 * i + 14
+
+
+def test_fleet_registry_publishes_loads_and_evictions(tmp_path):
+    paths = _save_fleet(tmp_path, 3)
+    rmap = ResidencyMap(str(tmp_path / "residency.json"))
+    need = bundle_resident_bytes(EncoderBundle.open(paths[0]), 32)
+    reg = FleetRegistry(worker_id="w7", residency_map=rmap,
+                        device_memory_budget=int(2.5 * need), wave_rows=32)
+    for i, path in enumerate(paths):
+        reg.add(f"m{i}", path)
+    reg.get("m0")
+    assert rmap.holders("m0") == ["w7"]
+    reg.get("m1")
+    reg.get("m2")                          # evicts m0 under the budget
+    snap = rmap.snapshot()["workers"]["w7"]
+    assert "m0" not in snap["models"] and "m2" in snap["models"]
+    assert snap["evictions"] >= 1
+    assert snap["resident_bytes"] == reg.resident_bytes
+    reg.close()
+    assert rmap.snapshot()["workers"] == {}
+
+
+# -- bounded admission -------------------------------------------------------
+
+def _frontend(tmp_path, max_pending_rows, **svc_kw):
+    paths = _save_fleet(tmp_path, 2)
+    reg = EncoderRegistry(wave_rows=16)
+    for i, path in enumerate(paths):
+        reg.add(f"m{i}", path)
+    svc = EncoderService(reg, wave_rows=16, **svc_kw)
+    return FleetFrontend(svc, max_pending_rows=max_pending_rows), svc
+
+
+def test_frontend_backpressure_rejects_typed(tmp_path):
+    fe, svc = _frontend(tmp_path, max_pending_rows=30)
+    X = np.zeros((20, P), np.float32)
+    fe.submit(PredictRequest("m0", X, tenant="a"))
+    with pytest.raises(ServiceError, match="admission rejected"):
+        fe.submit(PredictRequest("m1", X, tenant="b"))
+    assert fe.rejected == 1
+    assert svc.stats.per_tenant["b"]["rejected"] == 1
+    assert fe.pending_rows == 20           # the queue is untouched
+    out = fe.flush()                       # drain → room again
+    assert len(out) == 1 and out[0].error is None
+    fe.submit(PredictRequest("m1", X, tenant="b"))
+    assert fe.pending_rows == 20
+
+
+def test_frontend_replay_drains_under_pressure(tmp_path):
+    fe, svc = _frontend(tmp_path, max_pending_rows=64)
+    rng = np.random.default_rng(0)
+    reqs = [PredictRequest(f"m{i % 2}",
+                           rng.standard_normal(
+                               (int(rng.integers(5, 40)), P)
+                           ).astype(np.float32),
+                           tenant=f"t{i % 3}")
+            for i in range(12)]
+    results, rejections = replay(fe, reqs)
+    assert all(r is not None and r.error is None for r in results)
+    assert rejections                       # pressure actually happened
+    assert fe.pending_rows == 0
+    assert svc.stats.rows == sum(q.features.shape[0] for q in reqs)
+
+
+def test_prefetch_next_matches_non_prefetch(tmp_path):
+    paths = _save_fleet(tmp_path, 3)
+
+    def serve(prefetch):
+        reg = EncoderRegistry(wave_rows=16)
+        for i, path in enumerate(paths):
+            reg.add(f"m{i}", path)
+        svc = EncoderService(reg, wave_rows=16,
+                             prefetch_next=prefetch)
+        rng = np.random.default_rng(1)
+        X = rng.standard_normal((10, P)).astype(np.float32)
+        out = svc.serve([PredictRequest(f"m{i}", X) for i in range(3)])
+        return out, reg
+
+    plain, _ = serve(False)
+    fetched, reg = serve(True)
+    for a, b in zip(plain, fetched):
+        assert np.array_equal(a.predictions, b.predictions)
+    assert reg.loads == 3 and reg.hits >= 2   # prefetches became hits
+
+
+# -- the deterministic trace -------------------------------------------------
+
+def test_trace_round_trip_and_digest(tmp_path):
+    spec = make_mixed_trace(5, n_models=4, n_requests=20, p=P, t=T,
+                            wave_rows=16)
+    path = save_trace(str(tmp_path / "trace.json"), spec)
+    spec2 = load_trace(path)
+    assert spec2 == spec
+    assert spec2.digest() == spec.digest()
+    # Same seed → same schedule; different seed → different digest.
+    again = make_mixed_trace(5, n_models=4, n_requests=20, p=P, t=T,
+                             wave_rows=16)
+    assert again.digest() == spec.digest()
+    other = make_mixed_trace(6, n_models=4, n_requests=20, p=P, t=T,
+                             wave_rows=16)
+    assert other.digest() != spec.digest()
+
+
+def test_trace_tamper_refused(tmp_path):
+    spec = make_mixed_trace(5, n_models=4, n_requests=10, p=P, t=T,
+                            wave_rows=16)
+    path = save_trace(str(tmp_path / "trace.json"), spec)
+    doc = json.load(open(path))
+    doc["entries"][0][2] += 1              # quietly grow one request
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    with pytest.raises(ValueError, match="digest mismatch"):
+        load_trace(path)
+
+
+def test_trace_replay_is_deterministic_and_zipf(tmp_path):
+    spec = make_mixed_trace(5, n_models=5, n_requests=60, p=P, t=T,
+                            wave_rows=16, zipf_a=1.2)
+    models = [f"m{i}" for i in range(5)]
+    a = replay_requests(spec, models)
+    b = replay_requests(spec, models)
+    for qa, qb in zip(a, b):
+        assert qa.model == qb.model and qa.tenant == qb.tenant
+        assert np.array_equal(qa.features, qb.features)
+        assert (qa.targets is None) == (qb.targets is None)
+    # Zipf-ish popularity: the top model strictly dominates the tail.
+    counts = np.bincount([e.model_idx for e in spec.entries], minlength=5)
+    assert counts[0] > counts[2] and counts[0] > counts[3]
+
+
+def test_checked_in_trace_loads():
+    """The trace the benchmarks replay must stay loadable and digest-
+    clean as checked in."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(repo, "benchmarks", "traces", "mixed_v1.json")
+    spec = load_trace(path)
+    assert spec.n_models > 0 and len(spec.entries) >= 20
+    assert any(e.scored for e in spec.entries)
+    assert any(not e.scored for e in spec.entries)
+    assert len({e.tenant for e in spec.entries}) >= 2
+    assert trace_digest(spec.entries) == spec.digest()

@@ -1,0 +1,198 @@
+"""Fault injection against the serving fleet: graceful degradation.
+
+Every scenario corrupts ONE model's on-disk bundle *after* ``open()``
+validated it (the window real fleets live in: a deploy truncates a shard,
+a disk flips bits, an operator rewrites a manifest mid-serve) and then
+drives a mixed multi-tenant batch through ``EncoderService.serve``.  The
+contract under test:
+
+* the fault surfaces as a TYPED error (``BundleError``/``RegistryError``)
+  on each affected request's ``PredictResult.error`` — never a crash, a
+  stall, or a silently wrong answer;
+* the faulty bundle is evicted (no poisoned resident entry);
+* every OTHER tenant in the same batch is served bit-normally, and the
+  fleet keeps serving on the next batch.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.encoding import BrainEncoder
+from repro.serving_encoders import (
+    BundleError, EncoderBundle, EncoderRegistry, EncoderService,
+    PredictRequest, RegistryError,
+)
+
+P, T = 10, 6
+
+
+def _save_fleet(root, k=3):
+    import jax
+    import jax.numpy as jnp
+
+    paths = []
+    for i in range(k):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(i), 3)
+        X = jax.random.normal(k1, (80, P), jnp.float32)
+        W = jax.random.normal(k2, (P, T), jnp.float32)
+        Y = X @ W + 0.1 * jax.random.normal(k3, (80, T), jnp.float32)
+        path = str(root / f"m{i}")
+        BrainEncoder(n_folds=3).fit(X, Y).save(path)
+        paths.append(path)
+    return paths
+
+
+def _weight_shard_file(path):
+    bundle = EncoderBundle.open(path)
+    leaf = bundle._leaves()["W/000"]
+    return os.path.join(path, "step_0", leaf["file"])
+
+
+def _requests(rng, models):
+    reqs = []
+    for i, m in enumerate(models):
+        rows = int(rng.integers(3, 40))
+        X = rng.standard_normal((rows, P)).astype(np.float32)
+        Y = (rng.standard_normal((rows, T)).astype(np.float32)
+             if i % 2 else None)
+        reqs.append(PredictRequest(model=m, features=X, targets=Y,
+                                   tenant=f"tenant-{i}"))
+    return reqs
+
+
+@pytest.fixture
+def fleet(tmp_path):
+    paths = _save_fleet(tmp_path)
+    reg = EncoderRegistry()
+    names = []
+    for i, path in enumerate(paths):
+        name = f"m{i}"
+        reg.add(name, path)            # open() validates NOW — the fault
+        names.append(name)             # lands after this point
+    return reg, names, paths
+
+
+def _serve_and_partition(svc, reqs, bad_model):
+    results = svc.serve(reqs)
+    bad = [r for q, r in zip(reqs, results) if q.model == bad_model]
+    good = [r for q, r in zip(reqs, results) if q.model != bad_model]
+    assert bad and good
+    return bad, good
+
+
+def _assert_degraded_single_tenant(svc, reg, reqs, bad_model):
+    bad, good = _serve_and_partition(svc, reqs, bad_model)
+    for r in bad:
+        assert isinstance(r.error, (BundleError, RegistryError)), \
+            f"expected a typed fault, got {type(r.error)}: {r.error}"
+        assert r.predictions is None and r.pearson_r is None
+    for r in good:                        # the fleet keeps serving
+        assert r.error is None
+        assert r.predictions is not None and np.isfinite(
+            r.predictions).all()
+    assert bad_model not in reg.loaded_names   # evicted, not poisoned
+    # Per-tenant accounting charges the fault to the affected tenants.
+    errors = {t: a["errors"] for t, a in svc.stats.per_tenant.items()}
+    for q in reqs:
+        want = 1 if q.model == bad_model else 0
+        assert errors.get(q.tenant_id, 0) == want
+    # The NEXT batch (healthy tenants only) serves normally.
+    rng = np.random.default_rng(99)
+    healthy = [m for m in reg.names if m != bad_model]
+    again = svc.serve(_requests(rng, healthy))
+    assert all(r.error is None for r in again)
+
+
+def test_truncated_weight_shard_degrades_one_tenant(fleet):
+    reg, names, paths = fleet
+    shard = _weight_shard_file(paths[1])
+    with open(shard, "r+b") as f:          # drop half the payload
+        f.truncate(os.path.getsize(shard) // 2)
+    svc = EncoderService(reg, wave_buckets=(8, 32))
+    rng = np.random.default_rng(0)
+    _assert_degraded_single_tenant(svc, reg, _requests(rng, names), "m1")
+
+
+def test_corrupted_weight_shard_header_degrades_one_tenant(fleet):
+    reg, names, paths = fleet
+    shard = _weight_shard_file(paths[0])
+    with open(shard, "r+b") as f:          # stomp the .npy magic
+        f.write(b"\x00" * 8)
+    svc = EncoderService(reg, wave_buckets=(8, 32))
+    rng = np.random.default_rng(1)
+    _assert_degraded_single_tenant(svc, reg, _requests(rng, names), "m0")
+
+
+def test_manifest_flip_between_open_and_first_serve(fleet):
+    # The checkpoint manifest is read lazily at FIRST materialisation —
+    # flipping its bytes after open() must surface there, typed.
+    reg, names, paths = fleet
+    manifest = os.path.join(paths[2], "step_0", "manifest.json")
+    raw = bytearray(open(manifest, "rb").read())
+    raw[: len(b"garbage!")] = b"garbage!"
+    with open(manifest, "wb") as f:
+        f.write(raw)
+    svc = EncoderService(reg, wave_buckets=(8, 32))
+    rng = np.random.default_rng(2)
+    _assert_degraded_single_tenant(svc, reg, _requests(rng, names), "m2")
+
+
+def test_deleted_shard_degrades_one_tenant(fleet):
+    reg, names, paths = fleet
+    os.unlink(_weight_shard_file(paths[1]))
+    svc = EncoderService(reg, wave_buckets=(8, 32))
+    rng = np.random.default_rng(3)
+    _assert_degraded_single_tenant(svc, reg, _requests(rng, names), "m1")
+
+
+def test_fault_then_repair_serves_again(fleet):
+    # Eviction on fault means a REPAIRED bundle (bytes restored) serves
+    # on the next get — no stale poisoned entry, no stale μ/σ cache.
+    reg, names, paths = fleet
+    shard = _weight_shard_file(paths[0])
+    original = open(shard, "rb").read()
+    with open(shard, "r+b") as f:
+        f.truncate(10)
+    svc = EncoderService(reg, wave_rows=16)
+    rng = np.random.default_rng(4)
+    reqs = _requests(rng, names)
+    bad, _ = _serve_and_partition(svc, reqs, "m0")
+    assert all(isinstance(r.error, BundleError) for r in bad)
+    with open(shard, "wb") as f:
+        f.write(original)
+    again = svc.serve(reqs)
+    assert all(r.error is None for r in again)
+
+
+def test_fault_during_scored_request_is_typed(fleet):
+    # A scored request against the faulty model gets the SAME typed
+    # degradation — the Pearson path must not turn a load fault into a
+    # crash or a bogus r.
+    reg, names, paths = fleet
+    with open(_weight_shard_file(paths[1]), "r+b") as f:
+        f.truncate(4)
+    svc = EncoderService(reg, wave_rows=16)
+    rng = np.random.default_rng(5)
+    X = rng.standard_normal((12, P)).astype(np.float32)
+    Y = rng.standard_normal((12, T)).astype(np.float32)
+    out = svc.serve([PredictRequest("m1", X, targets=Y, tenant="a"),
+                     PredictRequest("m0", X, targets=Y, tenant="b")])
+    assert isinstance(out[0].error, BundleError)
+    assert out[0].pearson_r is None
+    assert out[1].error is None and out[1].pearson_r is not None
+
+
+def test_malformed_request_still_refuses_batch(fleet):
+    # Request-shape validation is NOT degradation territory: a malformed
+    # request refuses the whole batch up front (pass 1) before any device
+    # work, exactly as before the fleet tier.
+    from repro.serving_encoders import ServiceError
+
+    reg, names, _ = fleet
+    svc = EncoderService(reg, wave_rows=16)
+    good = PredictRequest("m0", np.zeros((4, P), np.float32))
+    bad = PredictRequest("m1", np.zeros((4, P + 1), np.float32))
+    with pytest.raises(ServiceError, match="incompatible"):
+        svc.serve([good, bad])

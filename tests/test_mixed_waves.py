@@ -1,0 +1,202 @@
+"""The mixed-wave packer + its bit-identity contract.
+
+The fleet front-end packs scored AND unscored requests from different
+tenants into the same fixed-shape waves (per-row request one-hot →
+per-slot Pearson sums from one compiled program).  These tests lock the
+two halves down:
+
+* ``plan_mixed_waves`` invariants — complete in-order coverage, slot
+  bounds, early close on slot exhaustion — on a fixed grid;
+* the contract the whole tier stands on: for ANY mix of scored/unscored
+  ragged requests, every wave-bucket ladder, and every packing cut
+  (including the nearly-all-padding tail wave), the packed serve is
+  BIT-identical — predictions and Pearson r — to serving each request
+  alone.  Exhaustive small grid always runs; hypothesis widens the search
+  when the library is installed.
+"""
+import numpy as np
+import pytest
+
+from repro.encoding import BrainEncoder
+from repro.serving_encoders import (
+    EncoderRegistry, EncoderService, PredictRequest, ServiceError,
+    plan_mixed_waves, reference_serve,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+P, T = 12, 7
+
+
+@pytest.fixture(scope="module")
+def fleet_dir(tmp_path_factory):
+    """Two small fitted bundles sharing (p, t) — the packer's tenants."""
+    import jax
+    import jax.numpy as jnp
+
+    root = tmp_path_factory.mktemp("mixed_fleet")
+    for i, name in enumerate(("m0", "m1")):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(i), 3)
+        X = jax.random.normal(k1, (90, P), jnp.float32)
+        W = jax.random.normal(k2, (P, T), jnp.float32)
+        Y = X @ W + 0.1 * jax.random.normal(k3, (90, T), jnp.float32)
+        BrainEncoder(n_folds=3).fit(X, Y).save(str(root / name))
+    return root
+
+
+def _registry(fleet_dir):
+    reg = EncoderRegistry()
+    reg.add("m0", str(fleet_dir / "m0"))
+    reg.add("m1", str(fleet_dir / "m1"))
+    return reg
+
+
+def _requests(row_sizes, scored_flags, models=None, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i, (rows, scored) in enumerate(zip(row_sizes, scored_flags)):
+        X = rng.standard_normal((rows, P)).astype(np.float32)
+        Y = (rng.standard_normal((rows, T)).astype(np.float32)
+             if scored else None)
+        model = (models[i] if models else "m0")
+        reqs.append(PredictRequest(model=model, features=X, targets=Y,
+                                   tenant=f"tenant-{i % 3}"))
+    return reqs
+
+
+def _assert_bit_identical(fleet_dir, reqs, buckets, score_slots=2):
+    packed_svc = EncoderService(_registry(fleet_dir), wave_buckets=buckets,
+                                score_slots=score_slots)
+    ref_svc = EncoderService(_registry(fleet_dir), wave_buckets=buckets,
+                             score_slots=score_slots)
+    packed = packed_svc.serve(reqs)
+    ref = reference_serve(ref_svc, reqs)
+    for i, (got, want) in enumerate(zip(packed, ref)):
+        assert got.error is None and want.error is None
+        assert np.array_equal(got.predictions, want.predictions), \
+            f"request {i}: packed predictions diverge from serving alone"
+        assert (got.pearson_r is None) == (want.pearson_r is None)
+        if got.pearson_r is not None:
+            assert np.array_equal(got.pearson_r, want.pearson_r), \
+                f"request {i}: packed Pearson r diverges from serving alone"
+    # Packing the mix must cost one compile per wave bucket USED — never
+    # one per scored/unscored combination.
+    assert packed_svc.compile_count == len(packed_svc.stats.per_bucket)
+
+
+# -- planner invariants ------------------------------------------------------
+
+def _check_plan(plan, req_rows, scored, score_slots):
+    consumed = [0] * len(req_rows)
+    cursor = 0                               # requests fill in arrival order
+    for wave in plan:
+        assert 0 < wave.fill <= wave.rows
+        pos, slots = 0, set()
+        for seg in wave.segments:
+            assert seg.wave_lo == pos        # contiguous from offset 0
+            assert seg.req >= cursor
+            cursor = seg.req
+            assert seg.req_lo == consumed[seg.req]
+            consumed[seg.req] = seg.req_hi
+            pos += seg.req_hi - seg.req_lo
+            if scored[seg.req]:
+                assert seg.slot is not None and seg.slot not in slots
+                slots.add(seg.slot)
+            else:
+                assert seg.slot is None
+        assert pos == wave.fill
+        assert len(slots) <= score_slots
+    assert consumed == list(req_rows)        # complete coverage
+
+
+@pytest.mark.parametrize("score_slots", [1, 2, 4])
+def test_plan_covers_all_rows_in_order(score_slots):
+    req_rows = [5, 1, 17, 8, 3, 30, 2]
+    scored = [True, False, True, True, False, True, True]
+    plan = plan_mixed_waves(req_rows, scored, lambda rem: 8, score_slots)
+    _check_plan(plan, req_rows, scored, score_slots)
+
+
+def test_plan_slot_exhaustion_closes_wave_early():
+    # 4 one-row scored requests into 16-row waves with 2 slots: the wave
+    # must close after 2 scored requests even though 14 rows are free.
+    plan = plan_mixed_waves([1, 1, 1, 1], [True] * 4, lambda rem: 16, 2)
+    assert [w.fill for w in plan] == [2, 2]
+    assert all(w.rows == 16 for w in plan)   # the tail is padding
+
+
+def test_plan_all_padding_tail():
+    # 17 rows on an 8-ladder: the tail wave carries 1 real row + 7 pad.
+    plan = plan_mixed_waves([17], [True], lambda rem: 8, 1)
+    assert [w.fill for w in plan] == [8, 8, 1]
+    _check_plan(plan, [17], [True], 1)
+
+
+def test_plan_rejects_zero_slots():
+    with pytest.raises(ServiceError, match="score_slots"):
+        plan_mixed_waves([4], [True], lambda rem: 8, 0)
+
+
+# -- bit-identity: fixed grid (always runs) ----------------------------------
+
+LADDERS = [(8,), (8, 32), (4, 16, 64)]
+
+
+@pytest.mark.parametrize("buckets", LADDERS)
+def test_mixed_pack_bit_identical_grid(fleet_dir, buckets):
+    # Ragged sizes straddling every bucket boundary; scored/unscored
+    # interleaved; two models so waves regroup per model.
+    rows = [3, 20, 1, 33, 8, 5]
+    scored = [True, False, True, True, False, True]
+    models = ["m0", "m0", "m1", "m0", "m1", "m0"]
+    reqs = _requests(rows, scored, models, seed=buckets[0])
+    _assert_bit_identical(fleet_dir, reqs, buckets)
+
+
+def test_mixed_pack_bit_identical_all_padding_tail(fleet_dir):
+    # One 9-row scored request on (8,): the tail wave is 1 real row + 7
+    # zero rows — the padding must be absorbed exactly (±0 adds) by the
+    # sequential per-slot sum chain.
+    reqs = _requests([9], [True])
+    _assert_bit_identical(fleet_dir, reqs, (8,))
+
+
+def test_mixed_pack_bit_identical_slot_pressure(fleet_dir):
+    # More scored requests than slots per wave → early closes, carries
+    # chained across many waves.
+    rows = [2, 3, 2, 4, 2, 5]
+    reqs = _requests(rows, [True] * 6)
+    _assert_bit_identical(fleet_dir, reqs, (8, 16), score_slots=1)
+
+
+def test_scored_request_spanning_many_waves(fleet_dir):
+    # One scored request cut across 5 waves: its Pearson sums must chain
+    # through sums_in from wave to wave, staying one sequential f32 chain.
+    reqs = _requests([37], [True])
+    _assert_bit_identical(fleet_dir, reqs, (8,))
+
+
+# -- bit-identity: hypothesis widening (gated on availability) ---------------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        rows=st.lists(st.integers(min_value=1, max_value=40),
+                      min_size=1, max_size=6),
+        scored=st.lists(st.booleans(), min_size=6, max_size=6),
+        which=st.lists(st.integers(min_value=0, max_value=1),
+                       min_size=6, max_size=6),
+        ladder=st.sampled_from(LADDERS),
+        slots=st.integers(min_value=1, max_value=3),
+    )
+    def test_mixed_pack_bit_identical_property(fleet_dir, rows, scored,
+                                               which, ladder, slots):
+        n = len(rows)
+        reqs = _requests(rows, scored[:n],
+                         [f"m{w}" for w in which[:n]], seed=n)
+        _assert_bit_identical(fleet_dir, reqs, ladder, score_slots=slots)
