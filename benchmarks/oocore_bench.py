@@ -123,7 +123,13 @@ def run_variant(variant: str, store_path: str, n_folds: int,
             read_stall_s=round(stream["read_stall_s"], 2),
             compute_stall_s=round(stream["compute_stall_s"], 2),
             bytes_staged=int(stream["bytes_staged"]),
-            compile_count=stream["compile_count"])
+            compile_count=stream["compile_count"],
+            stream_stats=dict(stream))       # full schema'd dict rides along
+    # Per-child obs metrics snapshot (the counters the instrumented fit
+    # published in THIS process — each variant is its own process, so the
+    # numbers are per-variant, not cumulative).
+    from repro import obs
+    res["metrics"] = obs.snapshot()
     return res
 
 

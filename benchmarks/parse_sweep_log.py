@@ -3,6 +3,11 @@
 The dry-run prints every record; this recovers them if the process dies
 before its final JSON flush (the launcher now appends incrementally, but
 logs from older runs remain parseable).
+
+Also accepts ``repro.obs`` JSONL span traces (``--trace-out`` output):
+the file is sniffed per line, and span events are normalised to the same
+record shape (one dict per line, ``kind: "span"``) so downstream tooling
+can mix sweep logs and traces in one pass.
 """
 from __future__ import annotations
 
@@ -18,7 +23,41 @@ COST = re.compile(r"flops=([\d.e+-]+) bytes=([\d.e+-]+)")
 COLL = re.compile(r"^collective_bytes: (\{.*\})")
 
 
+def _is_obs_trace(path: str) -> bool:
+    """Sniff: first non-blank line is a JSON object with name + ts_us."""
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                ev = json.loads(line)
+            except ValueError:
+                return False
+            return isinstance(ev, dict) and "name" in ev and "ts_us" in ev
+    return False
+
+
+def parse_obs_trace(path: str) -> list[dict]:
+    """Normalise a repro.obs JSONL span trace to sweep-record dicts."""
+    records = []
+    for line in open(path):
+        line = line.strip()
+        if not line:
+            continue
+        ev = json.loads(line)
+        rec = {"kind": "instant" if ev.get("instant") else "span",
+               "name": ev["name"], "ts_us": ev["ts_us"],
+               "dur_us": ev.get("dur_us", 0.0),
+               "track": ev.get("track"), "depth": ev.get("depth")}
+        rec.update(ev.get("attrs") or {})
+        records.append(rec)
+    return records
+
+
 def parse(path: str) -> list[dict]:
+    if _is_obs_trace(path):
+        return parse_obs_trace(path)
     records, cur = [], None
     for line in open(path):
         m = HDR.match(line)

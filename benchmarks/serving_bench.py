@@ -313,6 +313,7 @@ def replay_mixed_trace(trace_path: str, workdir: str, *,
             / max(service.stats.rows + service.stats.pad_rows, 1), 4),
         "per_tenant": {k: dict(v) for k, v in
                        sorted(service.stats.per_tenant.items())},
+        "service_stats": service.stats.to_dict(),
         "compile_count": service.compile_count,
         "registry": {k: registry.stats()[k]
                      for k in ("loads", "evictions", "hits",
@@ -431,9 +432,14 @@ def main() -> None:
         "wave_sweep": sweep,
         "bucketed": bucketed,
         "registry": reg_stats,
+        "service_stats": service.stats.to_dict(),
         "compile_count": service.compile_count,
         "distinct_wave_shapes": distinct,
     }
+    # Process-global obs metrics snapshot (waves/rows/tenant counters the
+    # instrumented service publishes) rides along for downstream tooling.
+    from repro import obs
+    payload["metrics"] = obs.snapshot()
     if mixed is not None:
         payload["mixed_traffic"] = mixed
     with open(out, "w") as f:

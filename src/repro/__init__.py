@@ -8,6 +8,8 @@ Public surface:
   ``bmor_fit``, ``banded_ridge_cv``, the §3 ``complexity`` model).
 * ``repro.data`` / ``repro.models`` / ``repro.launch`` — data generators,
   feature-extractor backbones, and drivers.
+* ``repro.obs`` — span tracing, the metrics registry, and the recompile
+  sentinel shared by every tier (disabled-by-default, stdlib only).
 
 Exports are lazy (PEP 562) so that ``import repro`` never initialises JAX
 device state — launchers must be able to set ``XLA_FLAGS`` first.
@@ -33,6 +35,7 @@ _LAZY = {
     "data": ("repro.data", None),
     "launch": ("repro.launch", None),
     "models": ("repro.models", None),
+    "obs": ("repro.obs", None),
 }
 
 __all__ = sorted(_LAZY)

@@ -40,6 +40,8 @@ from typing import Iterable, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 
 def fold_bounds(n: int, n_folds: int) -> list[tuple[int, int]]:
     """Contiguous k-fold boundaries (static, trace-time).
@@ -203,8 +205,12 @@ class _FixedShapeUpdate:
     """
 
     def __init__(self) -> None:
-        self.compile_count = 0
+        self.compiles = obs.CompileCounter("foldstats.chunk_update")
         self._fn = jax.jit(self._update, static_argnames=("use_pallas",))
+
+    @property
+    def compile_count(self) -> int:
+        return self.compiles.count
 
     def __call__(self, stats: FoldStats, X, Y, onehot, slot_fold, *,
                  use_pallas: bool = False) -> FoldStats:
@@ -216,8 +222,9 @@ class _FixedShapeUpdate:
                 use_pallas: bool = False) -> FoldStats:
         # Python side effect at TRACE time only: counts actual program
         # builds, the O(1)-compiles contract tests and the oocore bench
-        # assert on.
-        self.compile_count += 1
+        # assert on.  Under REPRO_OBS_STRICT=1 an open expect() window
+        # turns an excess trace into a RecompileError right here.
+        self.compiles.mark()
         p = X.shape[1]
         dt = jnp.promote_types(X.dtype, Y.dtype)
         # One fused Xᵀ[X | Y] per slot — a single batched GEMM per chunk.
@@ -276,8 +283,19 @@ def chunk_update_compile_count() -> int:
     Take a delta around a stream to measure its compiles; the contract is
     ``delta == 1`` for a fresh ``(chunk_rows, p, t, k)`` signature and
     ``0`` for a repeat, regardless of fold alignment or ragged tails.
+
+    (Thin alias over ``chunk_update_compiles().count`` — the shared
+    ``obs.CompileCounter`` primitive; kept so existing gates read the
+    same number they always did.)
     """
-    return _FIXED_UPDATE.compile_count
+    return _FIXED_UPDATE.compiles.count
+
+
+def chunk_update_compiles() -> "obs.CompileCounter":
+    """The chunk update's :class:`repro.obs.CompileCounter` — open an
+    ``expect(at_most=...)`` window around a stream to arm the recompile
+    sentinel (raises at trace time under ``REPRO_OBS_STRICT=1``)."""
+    return _FIXED_UPDATE.compiles
 
 
 class FoldStatsAccumulator:
@@ -441,12 +459,17 @@ def compute_chunked(chunks: Iterable[tuple[jax.Array, jax.Array]],
     """
     acc = FoldStatsAccumulator(n_total, n_folds, chunk_rows=chunk_rows,
                                use_pallas=use_pallas)
-    try:
-        for X_chunk, Y_chunk in chunks:
-            acc.update(X_chunk, Y_chunk)
-    finally:
-        if hasattr(chunks, "close"):
-            chunks.close()
+    # Recompile sentinel: one fixed shape → at most one fresh trace for
+    # the whole stream (zero when the signature is already warm).
+    with _FIXED_UPDATE.compiles.expect(at_most=1):
+        try:
+            for X_chunk, Y_chunk in chunks:
+                with obs.span("fit.foldstats.chunk_update",
+                              rows=int(X_chunk.shape[0])):
+                    acc.update(X_chunk, Y_chunk)
+        finally:
+            if hasattr(chunks, "close"):
+                chunks.close()
     return acc.finalize()
 
 
@@ -533,17 +556,25 @@ def compute_sharded_chunked(
     """
     ranges = shard_row_ranges(n_total, len(shard_streams))
     parts: list[FoldStats] = []
-    for (lo, hi), stream in zip(ranges, shard_streams):
-        acc = FoldStatsAccumulator(n_total, n_folds, row_start=lo,
-                                   row_stop=hi, chunk_rows=chunk_rows,
-                                   use_pallas=use_pallas)
-        try:
-            for X_chunk, Y_chunk in stream:
-                acc.update(X_chunk, Y_chunk)
-        finally:
-            if hasattr(stream, "close"):
-                stream.close()
-        parts.append(acc.finalize())
+    # Sentinel window: with chunk_rows pinned every shard shares ONE
+    # program signature, so the whole sharded pass compiles at most once.
+    # Left to infer (chunk_rows=None), ragged shard windows may pin
+    # different first-chunk shapes per shard — allow one trace per shard.
+    with _FIXED_UPDATE.compiles.expect(
+            at_most=1 if chunk_rows else len(shard_streams)):
+        for s, ((lo, hi), stream) in enumerate(zip(ranges, shard_streams)):
+            acc = FoldStatsAccumulator(n_total, n_folds, row_start=lo,
+                                       row_stop=hi, chunk_rows=chunk_rows,
+                                       use_pallas=use_pallas)
+            with obs.span("fit.foldstats.shard", shard=s, row_lo=lo,
+                          row_hi=hi):
+                try:
+                    for X_chunk, Y_chunk in stream:
+                        acc.update(X_chunk, Y_chunk)
+                finally:
+                    if hasattr(stream, "close"):
+                        stream.close()
+            parts.append(acc.finalize())
     if mesh is None or len(parts) == 1:
         return combine(parts)
     # Device-mesh finalize: the heavy (k, p, p+t) stacks reduce in ONE
@@ -694,7 +725,8 @@ def validation_scores_from_stats(
 
 __all__: Sequence[str] = (
     "ColumnMoments", "FoldStats", "FoldStatsAccumulator",
-    "chunk_update_compile_count", "combine", "compute", "compute_chunked",
+    "chunk_update_compile_count", "chunk_update_compiles", "combine",
+    "compute", "compute_chunked",
     "compute_sharded_chunked", "fold_bounds", "fold_of_rows",
     "partial_fold_stats", "shard_row_ranges", "validation_scores_from_stats",
     "validation_scores_per_target",

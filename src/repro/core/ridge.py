@@ -395,20 +395,33 @@ def ridge_cv_from_stats(stats: "foldstats.FoldStats",
         raise ValueError("ridge_cv_from_stats is primal-only: the dual "
                          "kernel XXᵀ cannot be built from streamed row "
                          "statistics")
+    from repro import obs
+
     p = stats.G.shape[1]
-    eye = cfg.jitter * jnp.eye(p, dtype=jnp.float32)
-    lams = _lambda_grid(cfg)
     per_lambda_scores = []
-    for f in range(stats.n_folds):
-        G_tr, C_tr = stats.train(f)
-        evals, Q = jnp.linalg.eigh(G_tr + eye)
-        per_lambda_scores.append(foldstats.validation_scores_from_stats(
-            stats, f, Q, evals, C_tr, lams, cfg.scoring))
-    cv_scores = jnp.mean(jnp.stack(per_lambda_scores), axis=0)
-    best = jnp.argmax(cv_scores)
-    evals, Q = jnp.linalg.eigh(stats.G_total + eye)
-    factors = RidgeFactors(basis=Q, evals=evals, primal=True)
-    W = solve(factors, stats.C_total, lams[best])
+    # Tracing note: the eigh/solve spans force their outputs only when a
+    # tracer is installed, so the recorded durations are compute, not
+    # async dispatch — with tracing off nothing is synchronised here.
+    # eye/λ-grid construction lives inside the span: their first-touch
+    # dispatch cost belongs to the factorisation phase it feeds.
+    with obs.span("fit.eigh", folds=stats.n_folds, p=p):
+        eye = cfg.jitter * jnp.eye(p, dtype=jnp.float32)
+        lams = _lambda_grid(cfg)
+        for f in range(stats.n_folds):
+            G_tr, C_tr = stats.train(f)
+            evals, Q = jnp.linalg.eigh(G_tr + eye)
+            per_lambda_scores.append(foldstats.validation_scores_from_stats(
+                stats, f, Q, evals, C_tr, lams, cfg.scoring))
+        cv_scores = jnp.mean(jnp.stack(per_lambda_scores), axis=0)
+        best = jnp.argmax(cv_scores)
+        if obs.current() is not None:
+            jax.block_until_ready(cv_scores)
+    with obs.span("fit.solve", p=p):
+        evals, Q = jnp.linalg.eigh(stats.G_total + eye)
+        factors = RidgeFactors(basis=Q, evals=evals, primal=True)
+        W = solve(factors, stats.C_total, lams[best])
+        if obs.current() is not None:
+            jax.block_until_ready(W)
     return RidgeCVResult(weights=W, best_lambda=lams[best], best_index=best,
                          cv_scores=cv_scores)
 

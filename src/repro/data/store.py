@@ -41,11 +41,11 @@ import json
 import os
 import queue
 import threading
-import time
 from typing import Iterator
 
 import numpy as np
 
+from repro import obs
 from repro.data.fmri import SubjectSpec
 
 MANIFEST_NAME = "manifest.json"
@@ -115,12 +115,26 @@ class PrefetchStats:
     A well-overlapped stream has one of the two ≈ the pipeline imbalance
     and the other ≈ 0; both ≈ 0 means the stream finished before either
     side ever waited.
+
+    Every field is DERIVED from the prefetcher's observability spans
+    (``prefetch.stage`` / ``prefetch.wait`` / ``prefetch.compute_stall``
+    via ``obs.timed``) — the stats and a recorded trace are two views of
+    the same measurements, never parallel bookkeeping.
     """
 
     chunks: int = 0
     bytes_staged: int = 0
     read_stall_s: float = 0.0
     compute_stall_s: float = 0.0
+
+    def to_dict(self) -> dict:
+        """Shared metrics-snapshot schema (``repro.obs``): flat
+        snake_case fields, JSON-serialisable — what benches consume."""
+        return {"schema": obs.SCHEMA_VERSION, "kind": "prefetch",
+                "chunks": int(self.chunks),
+                "bytes_staged": int(self.bytes_staged),
+                "read_stall_s": float(self.read_stall_s),
+                "compute_stall_s": float(self.compute_stall_s)}
 
 
 class ChunkPrefetcher:
@@ -171,6 +185,13 @@ class ChunkPrefetcher:
         self._col_range_x = col_range_x
         self._depth = depth
         self.stats = PrefetchStats()
+        # Hoisted global-metric instruments (one dict lookup each, here,
+        # instead of one per staged chunk on the hot path).
+        _m = obs.get_metrics()
+        self._m_bytes = _m.counter("bytes_staged")
+        self._m_chunks = _m.counter("chunks_staged")
+        self._m_read_stall = _m.counter("read_stall_s")
+        self._m_compute_stall = _m.counter("compute_stall_s")
         self._queue: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
@@ -200,18 +221,26 @@ class ChunkPrefetcher:
     def _put(self, item) -> bool:
         """Stop-aware bounded put; returns False when closed mid-stream.
         Time spent blocked here is compute-stall (queue full = the device
-        side is behind)."""
-        t0 = time.perf_counter()
-        waited = False
-        while not self._stop.is_set():
-            try:
-                self._queue.put(item, timeout=0.05)
-                if waited:
-                    self.stats.compute_stall_s += time.perf_counter() - t0
-                return True
-            except queue.Full:
-                waited = True
-        return False
+        side is behind) — one ``prefetch.compute_stall`` span, from which
+        ``stats.compute_stall_s`` is derived."""
+        try:
+            self._queue.put_nowait(item)
+            return True
+        except queue.Full:
+            pass
+        with obs.timed("prefetch.compute_stall") as t:
+            ok = False
+            while not self._stop.is_set():
+                try:
+                    self._queue.put(item, timeout=0.05)
+                    ok = True
+                    break
+                except queue.Full:
+                    continue
+        if ok:
+            self.stats.compute_stall_s += t.dur_s
+            self._m_compute_stall.inc(t.dur_s)
+        return ok
 
     def _reader(self) -> None:
         try:
@@ -224,12 +253,19 @@ class ChunkPrefetcher:
                     return
                 bx, by = self._bufs[seq % len(self._bufs)]
                 m = X_c.shape[0]
-                np.copyto(bx[:m], X_c)
-                np.copyto(by[:m], Y_c)
+                # The staging copy (memmap page-in + dtype conversion) is
+                # one ``prefetch.stage`` span; bytes_staged derives from
+                # the same region.
+                with obs.timed("prefetch.stage", chunk=seq) as t:
+                    np.copyto(bx[:m], X_c)
+                    np.copyto(by[:m], Y_c)
+                    staged = bx[:m].nbytes + by[:m].nbytes
+                    t.set(bytes=staged)
                 vx, vy = bx[:m].view(), by[:m].view()
                 vx.flags.writeable = False
                 vy.flags.writeable = False
-                self.stats.bytes_staged += bx[:m].nbytes + by[:m].nbytes
+                self.stats.bytes_staged += staged
+                self._m_bytes.inc(staged)
                 if not self._put((vx, vy)):
                     return
                 seq += 1
@@ -242,9 +278,12 @@ class ChunkPrefetcher:
             raise StopIteration
         if self._thread is None:
             self._start()
-        t0 = time.perf_counter()
-        item = self._queue.get()
-        self.stats.read_stall_s += time.perf_counter() - t0
+        # Consumer-side block on an empty queue: one ``prefetch.wait``
+        # span, from which ``stats.read_stall_s`` is derived.
+        with obs.timed("prefetch.wait") as t:
+            item = self._queue.get()
+        self.stats.read_stall_s += t.dur_s
+        self._m_read_stall.inc(t.dur_s)
         if item is self._SENTINEL:
             self.close()
             raise StopIteration
@@ -252,6 +291,8 @@ class ChunkPrefetcher:
             self.close()
             raise item
         self.stats.chunks += 1
+        self._m_chunks.inc()
+        obs.instant("prefetch.yield", chunk=self.stats.chunks - 1)
         return item
 
     def close(self) -> None:

@@ -201,6 +201,42 @@ the rest of the batch serves on.  ``python -m repro.launch.serve
 ``benchmarks/serving_bench.py --replay-trace`` gates p50/p99 and
 bit-identity under the checked-in deterministic mixed-traffic trace.
 
+Observing a fit and a fleet
+---------------------------
+Every tier above is permanently instrumented through ``repro.obs`` —
+spans, metrics, and recompile sentinels — at zero cost until you opt in
+(with no tracer installed a span site is one module attribute load).
+Three switches:
+
+* **Tracing**: install the process-global tracer around any code, or
+  pass ``--trace-out PATH`` to ``launch/encode.py`` /
+  ``launch/wholebrain.py`` / ``launch/serve.py`` (fleet parents and the
+  wholebrain driver fan the flag out per worker/phase child)::
+
+      from repro import obs
+      tracer = obs.install()
+      enc = BrainEncoder(device_memory_budget=1, chunk_rows=4096)
+      enc.fit(store=store)            # fit.dispatch/stats/eigh/solve spans
+      obs.write_trace(tracer, "fit.json")     # .json → open in Perfetto
+      obs.uninstall()
+
+  ``python -m repro.launch.obs_report fit.jsonl`` renders the per-phase
+  time/bytes table and the root-coverage figure (the obs CI lane gates
+  ≥95% of the fit root attributed to its phase children).
+* **Metrics**: ``obs.snapshot()`` renders the process-global counters
+  (``compiles{tier=...}``, ``bytes_staged``, ``waves``,
+  ``tenant_rows{tenant=...}``, ``registry_hits``/``loads``/
+  ``evictions``, fleet admission outcomes) plus the RSS high-water gauge
+  into one schema'd dict (``repro.obs/v1``); ``--metrics-out PATH``
+  writes it on launcher exit.  ``stream_stats_``,
+  ``ServiceStats.to_dict()`` and ``PrefetchStats.to_dict()`` carry the
+  same schema marker, and the ``BENCH_*.json`` rows embed them.
+* **Sentinels**: under ``REPRO_OBS_STRICT=1`` every fixed-shape contract
+  (the chunked fold update, the whole-brain column-block update, the
+  serving wave programs) raises ``obs.RecompileError`` AT TRACE TIME if
+  it retraces beyond its expectation window — the CI oocore, wholebrain,
+  fleet, and obs lanes all run armed.
+
 Modules:
   config    — ``EncoderConfig``: one config subsuming ridge/banded/sharding
   dispatch  — complexity-driven solver + mesh-layout resolution

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import banded, bmor, foldstats, mor, ridge, scoring
 from repro.encoding.config import EncoderConfig
 from repro.encoding.dispatch import DispatchDecision, resolve
@@ -155,26 +156,34 @@ class BrainEncoder:
         dispatch, so small stores transparently get B-MOR/dual/banded
         semantics.
         """
-        if store is not None:
-            if X is not None or Y is not None:
-                raise ValueError("pass either (X, Y) or store=, not both")
-            self._check_store_folds(store)
-            n, p, t = store.shape
-            decision = resolve(self.config, n, p, t, jax.device_count())
-            if decision.method == "colblocked":
-                return self._fit_store_colblocked(store, decision, chunk_rows)
-            if decision.method == "chunked":
-                return self._fit_store_chunked(store, decision, chunk_rows)
-            X, Y = store.load()
-            X, Y = jnp.asarray(X), jnp.asarray(Y)
-        if X is None or Y is None:
-            raise ValueError("fit() needs (X, Y) arrays or store=")
-        n, p = X.shape
-        t = Y.shape[1]
-        decision = resolve(self.config, n, p, t, jax.device_count())
-        fitter = getattr(self, f"_fit_{decision.solver}")
-        self.report_ = fitter(X, Y, decision)
-        return self
+        with obs.span("fit", mode="store" if store is not None
+                      else "arrays"):
+            if store is not None:
+                if X is not None or Y is not None:
+                    raise ValueError("pass either (X, Y) or store=, not both")
+                self._check_store_folds(store)
+                n, p, t = store.shape
+                with obs.span("fit.dispatch", n=n, p=p, t=t):
+                    decision = resolve(self.config, n, p, t,
+                                       jax.device_count())
+                if decision.method == "colblocked":
+                    return self._fit_store_colblocked(store, decision,
+                                                      chunk_rows)
+                if decision.method == "chunked":
+                    return self._fit_store_chunked(store, decision,
+                                                   chunk_rows)
+                X, Y = store.load()
+                X, Y = jnp.asarray(X), jnp.asarray(Y)
+            if X is None or Y is None:
+                raise ValueError("fit() needs (X, Y) arrays or store=")
+            n, p = X.shape
+            t = Y.shape[1]
+            with obs.span("fit.dispatch", n=n, p=p, t=t):
+                decision = resolve(self.config, n, p, t, jax.device_count())
+            fitter = getattr(self, f"_fit_{decision.solver}")
+            with obs.span("fit.solve", solver=decision.solver):
+                self.report_ = fitter(X, Y, decision)
+            return self
 
     def fit_chunks(self, chunks, n_total: int | None = None,
                    chunk_rows: int | None = None) -> "BrainEncoder":
@@ -209,13 +218,16 @@ class BrainEncoder:
                 prefetch_depth=self.config.prefetch_depth)
         if n_total is None:
             raise ValueError("fit_chunks needs n_total for iterator sources")
-        compiles0 = foldstats.chunk_update_compile_count()
-        stats = foldstats.compute_chunked(
-            chunks, n_total, self.config.n_folds, chunk_rows=chunk_rows,
-            use_pallas=self.config.resolve_use_pallas())
-        self._record_stream_stats([stream] if stream is not None else [],
-                                  compiles0)
-        return self._fit_from_stats(stats, n_total)
+        with obs.span("fit", mode="chunks"):
+            compiles0 = foldstats.chunk_update_compile_count()
+            with obs.span("fit.stats", n=n_total):
+                stats = foldstats.compute_chunked(
+                    chunks, n_total, self.config.n_folds,
+                    chunk_rows=chunk_rows,
+                    use_pallas=self.config.resolve_use_pallas())
+            self._record_stream_stats([stream] if stream is not None else [],
+                                      compiles0)
+            return self._fit_from_stats(stats, n_total)
 
     def _check_store_folds(self, store) -> None:
         """The manifest's fold split is part of the store's data contract:
@@ -250,9 +262,12 @@ class BrainEncoder:
         # quadratically in |ȳ|/σ_y (see foldstats.validation_scores_from
         # _stats); refuse clearly pathological un-standardized targets
         # instead of returning silently corrupted scores.
-        mu = np.asarray(jnp.sum(stats.ysum, axis=0)) / n_total
-        var = np.asarray(jnp.sum(stats.ysq, axis=0)) / max(n_total - 1, 1)
-        ratio = float(np.max(np.abs(mu) / np.sqrt(var + 1e-12)))
+        # The host pulls below block on the accumulation's async tail, so
+        # under tracing this span is where the streamed compute drains.
+        with obs.span("fit.finalize", n=n_total, t=t):
+            mu = np.asarray(jnp.sum(stats.ysum, axis=0)) / n_total
+            var = np.asarray(jnp.sum(stats.ysq, axis=0)) / max(n_total - 1, 1)
+            ratio = float(np.max(np.abs(mu) / np.sqrt(var + 1e-12)))
         if ratio > 1e3:
             raise ValueError(
                 f"fit_chunks: target mean/std ratio {ratio:.0f} is too "
@@ -298,10 +313,12 @@ class BrainEncoder:
                               prefetch_depth=self.config.prefetch_depth)
             for lo, hi in foldstats.shard_row_ranges(n_total, n_shards)]
         compiles0 = foldstats.chunk_update_compile_count()
-        stats = foldstats.compute_sharded_chunked(
-            streams, n_total, self.config.n_folds, mesh=mesh,
-            data_axis=self.config.data_axis, chunk_rows=chunk_rows,
-            use_pallas=decision.use_pallas)
+        with obs.span("fit.stats", n=n_total, shards=n_shards,
+                      chunk_rows=chunk_rows):
+            stats = foldstats.compute_sharded_chunked(
+                streams, n_total, self.config.n_folds, mesh=mesh,
+                data_axis=self.config.data_axis, chunk_rows=chunk_rows,
+                use_pallas=decision.use_pallas)
         self._record_stream_stats(streams, compiles0)
         return self._fit_from_stats(stats, n_total, decision)
 
@@ -328,15 +345,19 @@ class BrainEncoder:
             best_lambda=res.best_lambda,
             cv_scores=res.cv_scores,
             lambdas=self.config.lambdas, decision=decision)
-        self.stream_stats_ = {"prefetch": bool(self.config.prefetch),
+        self.stream_stats_ = {"schema": obs.SCHEMA_VERSION, "kind": "stream",
+                              "prefetch": bool(self.config.prefetch),
                               **res.telemetry,
                               "compile_count":
                                   res.telemetry["colblock_compile_delta"]}
         return self
 
     def _record_stream_stats(self, streams, compiles_before: int) -> None:
-        """Aggregate per-stream prefetch telemetry into ``stream_stats_``."""
-        agg = {"prefetch": bool(self.config.prefetch), "chunks": 0,
+        """Aggregate per-stream prefetch telemetry into ``stream_stats_``
+        (the shared ``repro.obs`` snapshot schema: flat snake_case keys
+        plus ``schema``/``kind`` markers)."""
+        agg = {"schema": obs.SCHEMA_VERSION, "kind": "stream",
+               "prefetch": bool(self.config.prefetch), "chunks": 0,
                "bytes_staged": 0, "read_stall_s": 0.0,
                "compute_stall_s": 0.0,
                "use_pallas": self.config.resolve_use_pallas(),
@@ -346,10 +367,11 @@ class BrainEncoder:
             s = getattr(stream, "stats", None)
             if s is None:
                 continue
-            agg["chunks"] += s.chunks
-            agg["bytes_staged"] += s.bytes_staged
-            agg["read_stall_s"] += s.read_stall_s
-            agg["compute_stall_s"] += s.compute_stall_s
+            d = s.to_dict()
+            agg["chunks"] += d["chunks"]
+            agg["bytes_staged"] += d["bytes_staged"]
+            agg["read_stall_s"] += d["read_stall_s"]
+            agg["compute_stall_s"] += d["compute_stall_s"]
         self.stream_stats_ = agg
 
     @property

@@ -63,7 +63,8 @@ def _run_store_mode(args) -> None:
               f"staged={ss['bytes_staged'] / 2**20:.1f} MB "
               f"read_stall={ss['read_stall_s']:.2f}s "
               f"compute_stall={ss['compute_stall_s']:.2f}s "
-              f"accumulation compiles={ss['compile_count']}")
+              f"accumulation compiles={ss['compile_count']} "
+              f"[{ss['schema']}]")
     print(f"{enc.report_.solver_label} fit: λ = {enc.report_.best_lambda}, "
           f"CV scores {enc.report_.cv_scores.round(4)}")
     if args.save_bundle:
@@ -116,8 +117,15 @@ def main() -> None:
                     help="persist the fitted encoder as an EncoderBundle "
                          "directory (+ report.json run provenance) for the "
                          "serving subsystem")
+    from repro.launch.obscli import add_obs_args, obs_session
+    add_obs_args(ap)
     args = ap.parse_args()
 
+    with obs_session(args):
+        _run(args)
+
+
+def _run(args) -> None:
     if args.store is not None:
         _run_store_mode(args)
         return

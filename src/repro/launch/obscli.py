@@ -1,0 +1,60 @@
+"""Shared ``--trace-out`` / ``--metrics-out`` wiring for launch drivers.
+
+Every launcher takes the same two flags:
+
+* ``--trace-out PATH`` — install the process-global ``repro.obs`` tracer
+  for the run and write the span trace on exit: Chrome/Perfetto
+  ``trace_event`` JSON when ``PATH`` ends in ``.json`` (loadable directly
+  at https://ui.perfetto.dev), JSONL otherwise (the format
+  ``launch/obs_report.py`` and ``benchmarks/parse_sweep_log.py`` read).
+* ``--metrics-out PATH`` — start the background RSS gauge poller and
+  write the ``MetricsRegistry`` snapshot JSON on exit.
+
+``obs_session(args)`` is the one context manager a driver wraps its work
+in; with neither flag given it is a no-op (the tracer stays uninstalled,
+so the instrumented hot paths keep their disabled-cost contract).
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+
+from repro import obs
+
+
+def add_obs_args(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--trace-out", default=None,
+                    help="write a span trace here on exit (.json = "
+                         "Perfetto trace_event, else JSONL for "
+                         "launch/obs_report.py)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the obs metrics snapshot JSON here on "
+                         "exit (counters/gauges/histograms incl. the "
+                         "RSS high-water gauge)")
+
+
+@contextlib.contextmanager
+def obs_session(args):
+    """Install tracing/metrics per the parsed flags; flush on exit.
+
+    Yields the installed :class:`repro.obs.Tracer` (or ``None``).  The
+    trace and snapshot are written even when the wrapped driver raises —
+    a crashed run's partial trace is exactly when you want one.
+    """
+    tracer = obs.install() if args.trace_out else None
+    poller = obs.start_rss_poller() if args.metrics_out else None
+    try:
+        yield tracer
+    finally:
+        if poller is not None:
+            poller.stop()
+        if tracer is not None:
+            fmt = obs.write_trace(tracer, args.trace_out)
+            obs.uninstall()
+            print(f"trace written → {args.trace_out} ({fmt})")
+        if args.metrics_out:
+            obs.get_metrics().write_json(args.metrics_out)
+            print(f"metrics snapshot → {args.metrics_out}")
+
+
+__all__ = ["add_obs_args", "obs_session"]

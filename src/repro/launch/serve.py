@@ -76,7 +76,19 @@ def _run_fleet_parent(args) -> None:
         base += ["--encoders", str(args.encoders)]
     if args.replay_trace is not None:
         base += ["--replay-trace", args.replay_trace]
-    procs = [subprocess.Popen(base + ["--worker-id", f"w{i}"], env=env)
+
+    def worker_argv(i: int) -> list[str]:
+        # Observability flags fan out per worker: each process owns its
+        # tracer/registry, so each gets a worker-suffixed output path.
+        argv = base + ["--worker-id", f"w{i}"]
+        for flag, path in (("--trace-out", args.trace_out),
+                           ("--metrics-out", args.metrics_out)):
+            if path is not None:
+                root, ext = os.path.splitext(path)
+                argv += [flag, f"{root}.w{i}{ext}"]
+        return argv
+
+    procs = [subprocess.Popen(worker_argv(i), env=env)
              for i in range(args.workers)]
     codes = [proc.wait() for proc in procs]
     rmap = ResidencyMap(os.path.join(args.bundle_dir, RESIDENCY_MAP))
@@ -162,10 +174,12 @@ def _run_encoder_mode(args) -> None:
               f"p50={np.percentile(warm, 50):.1f} ms "
               f"p99={np.percentile(warm, 99):.1f} ms per step "
               f"(first/cold {step_ms[0]:.1f} ms)")
+    import json as _json
     s = service.stats
     print(f"{tag}waves={s.waves} rows={s.rows} pad_rows={s.pad_rows} "
           f"compiled_predicts={service.compile_count} (1 per wave shape) "
           f"tenants={len(s.per_tenant)}")
+    print(f"{tag}service: {_json.dumps(s.to_dict(), sort_keys=True)}")
     print(f"{tag}registry: {registry.stats()}")
     if args.worker_id is not None:
         registry.close()
@@ -209,10 +223,18 @@ def main() -> None:
                     help="encoder mode: serve this checked-in mixed-traffic "
                          "trace (e.g. benchmarks/traces/mixed_v1.json) "
                          "instead of random ragged traffic")
+    from repro.launch.obscli import add_obs_args, obs_session
+    add_obs_args(ap)
     args = ap.parse_args()
 
     if args.encoders is not None or args.replay_trace is not None:
-        _run_encoder_mode(args)
+        if args.workers > 1 and args.worker_id is None:
+            # The fleet parent does no device work itself — the obs flags
+            # fan out to the workers (suffixed paths), not to the parent.
+            _run_encoder_mode(args)
+        else:
+            with obs_session(args):
+                _run_encoder_mode(args)
         return
     if args.arch is None:
         ap.error("--arch is required in LLM mode (or pass --encoders N)")

@@ -301,11 +301,14 @@ def main() -> None:
                     help="CI shape: downscaled n/folds, FULL-SCALE t")
     ap.add_argument("--workdir", default=None)
     ap.add_argument("--out", default=None)
+    from repro.launch.obscli import add_obs_args, obs_session
+    add_obs_args(ap)
     args = ap.parse_args()
 
     if args.phase:                                 # child mode
-        {"materialise": phase_materialise, "fit": phase_fit,
-         "ab": phase_ab, "serve": phase_serve}[args.phase](args)
+        with obs_session(args):
+            {"materialise": phase_materialise, "fit": phase_fit,
+             "ab": phase_ab, "serve": phase_serve}[args.phase](args)
         return
 
     import tempfile
@@ -323,11 +326,23 @@ def main() -> None:
             REPO, "BENCH_wholebrain_smoke.json" if args.smoke
             else "BENCH_wholebrain.json")
 
+    def obs_extra(tag: str) -> list[str]:
+        # Phase children own the tracer: fan the parent's obs flags out
+        # with a phase-suffixed path per subprocess.
+        extra = []
+        for flag, path in (("--trace-out", args.trace_out),
+                           ("--metrics-out", args.metrics_out)):
+            if path is not None:
+                root, ext = os.path.splitext(path)
+                extra += [flag, f"{root}.{tag}{ext}"]
+        return extra
+
     print(f"[wholebrain] materialising {n}x{_P}x{args.t} subject ...",
           flush=True)
     mat = _spawn("materialise", [
         "--store", store, "--n", str(n), "--t", str(args.t),
-        "--n-folds", str(n_folds), "--rows-per-run", str(rows_per_run)])
+        "--n-folds", str(n_folds), "--rows-per-run", str(rows_per_run)]
+        + obs_extra("materialise"))
     print(f"[wholebrain] materialise: {mat['wall_s']}s "
           f"rss={mat['peak_rss_mb']}MB store={mat['store_gb']}GB",
           flush=True)
@@ -336,7 +351,8 @@ def main() -> None:
     for i, t_block in enumerate(t_blocks):
         extra = ["--store", store, "--t-block", str(t_block),
                  "--n-folds", str(n_folds), "--chunk-rows", str(chunk_rows),
-                 "--cap-mb", str(args.cap_mb)]
+                 "--cap-mb", str(args.cap_mb)] \
+            + obs_extra(f"fit{t_block}")
         if i == 0:
             extra += ["--bundle", bundle]
         fit = _spawn("fit", extra)
@@ -362,14 +378,16 @@ def main() -> None:
                        "--t", str(ab_t), "--t-block", str(ab_tb),
                        "--n-folds", str(n_folds),
                        "--chunk-rows", str(ab_chunk),
-                       "--rows-per-run", str(rows_per_run)])
+                       "--rows-per-run", str(rows_per_run)]
+                + obs_extra("ab"))
     print(f"[wholebrain] fused A/B ({ab_n}x{_P}x{ab_t}, "
           f"{ab['kernel_tier']}): unfused {ab['unfused_s']}s vs fused "
           f"{ab['fused_s']}s, λ match, x passes={ab['row_passes_x']}",
           flush=True)
 
     serve = _spawn("serve", ["--bundle", bundle,
-                             "--cap-mb", str(args.cap_mb)])
+                             "--cap-mb", str(args.cap_mb)]
+                   + obs_extra("serve"))
     print(f"[wholebrain] serve: {serve['wall_s']}s "
           f"rss={serve['peak_rss_mb']}MB paged "
           f"{serve['shards_paged']}/{serve['weight_shards']} shards "

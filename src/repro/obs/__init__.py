@@ -1,0 +1,102 @@
+"""repro.obs — the unified observability layer (tracing, metrics, sentinels).
+
+Zero-dependency (stdlib only), disabled by default, and shared by every
+tier: the fit path (``BrainEncoder``/``foldstats``), the streaming tier
+(``ChunkPrefetcher``), the whole-brain column-blocked driver, and the
+serving fleet (``EncoderService``/``EncoderRegistry``/``FleetFrontend``)
+all emit through the SAME three primitives instead of bespoke stat dicts:
+
+* **Spans** — ``with obs.span("fit.stats", bytes=n): ...`` nests, is
+  thread-safe, stamps a monotonic clock, and exports to JSONL or
+  Chrome/Perfetto ``trace_event`` JSON (``obs.write_trace``).  With no
+  tracer installed the call returns a shared no-op after one module
+  attribute load — hot paths stay permanently instrumented.
+  ``obs.timed`` additionally ALWAYS measures (the streaming tier derives
+  ``PrefetchStats`` stall seconds from the same measurement the span
+  records).  ``obs.instant`` records zero-duration markers
+  (admit/reject/hit).
+* **Metrics** — ``obs.get_metrics()`` returns the process-global
+  :class:`~repro.obs.metrics.MetricsRegistry`; ``obs.snapshot()`` renders
+  every counter/gauge/histogram into one JSON dict (schema below) that
+  ``stream_stats_``, ``ServiceStats.to_dict``, ``PrefetchStats.to_dict``
+  and the ``BENCH_*.json`` rows embed.
+* **Compile sentinels** — :class:`~repro.obs.sentinel.CompileCounter` is
+  the one trace-time compile counter behind
+  ``foldstats.chunk_update_compile_count``,
+  ``wholebrain.colblock_update_compile_count`` and
+  ``EncoderService.compile_count``; ``counter.expect(at_most=N)`` windows
+  raise :class:`~repro.obs.sentinel.RecompileError` at trace time under
+  ``REPRO_OBS_STRICT=1`` when a fixed-shape tier retraces.
+
+Span naming convention: dotted ``<tier>.<phase>[.<subphase>]`` —
+``fit.dispatch`` / ``fit.stats`` / ``fit.eigh`` / ``fit.solve``,
+``prefetch.stage`` / ``prefetch.wait`` / ``prefetch.compute_stall``,
+``wholebrain.block`` / ``wholebrain.xstats``, ``serve.wave.build`` /
+``serve.wave.execute``, ``registry.load`` / ``registry.evict`` /
+``registry.hit``, ``fleet.admit`` / ``fleet.reject`` / ``fleet.flush``.
+
+Metrics-snapshot schema (``obs.snapshot()``; version ``repro.obs/v1``)
+----------------------------------------------------------------------
+
+====================================  =========  ==========================================
+key                                   type       meaning
+====================================  =========  ==========================================
+``schema``                            str        ``"repro.obs/v1"``
+``counters``                          dict       flat ``name{label=v,...} -> float``
+``gauges``                            dict       ``key -> {"value", "peak"}``
+``histograms``                        dict       ``key -> {"count","sum","min","max","mean"}``
+====================================  =========  ==========================================
+
+Well-known instruments (all optional — present once the producing tier ran):
+
+====================================  =========  ==========================================
+instrument                            type       producer
+====================================  =========  ==========================================
+``compiles{tier=...}``                counter    every ``CompileCounter.mark`` (tiers:
+                                                 ``foldstats.chunk_update``,
+                                                 ``wholebrain.colblock_update``,
+                                                 ``wholebrain.gram``, ``service.predict``)
+``bytes_staged``                      counter    prefetcher staging copies (bytes)
+``chunks_staged``                     counter    prefetcher chunks staged
+``read_stall_s`` / ``compute_stall_s``  counter  prefetcher stall seconds (consumer /
+                                                 producer side)
+``wave_pad_rows`` / ``wave_rows``     counter    serving pad vs real rows per wave
+``waves``                             counter    compiled predict waves executed
+``tenant_rows{tenant=...}``           counter    per-tenant served rows
+``registry_hits`` / ``registry_loads``  counter  bundle cache hits / cold loads
+``registry_evictions``                counter    LRU + fault evictions
+``admitted_rows`` / ``rejected_requests``  counter  fleet admission outcomes
+``rss_bytes``                         gauge      resident set (background poller;
+                                                 ``peak`` = observed high-water)
+====================================  =========  ==========================================
+
+Stats ``to_dict()`` payloads (``PrefetchStats``, ``ServiceStats``, and the
+``stream_stats_`` dict) carry ``{"schema": "repro.obs/v1", "kind": ...}``
+plus their flat snake_case fields — benches consume those dicts, never
+raw attributes.
+
+Surfacing: ``launch/encode.py``, ``launch/wholebrain.py`` and
+``launch/serve.py`` accept ``--trace-out PATH`` (``.json`` → Perfetto,
+else JSONL) and ``--metrics-out PATH``; ``launch/obs_report.py`` renders
+a per-phase time/bytes table from a JSONL trace and can gate span
+coverage (``--assert-coverage``).
+"""
+from repro.obs.metrics import (  # noqa: F401
+    REGISTRY, SCHEMA_VERSION, Counter, Gauge, Histogram, MetricsRegistry,
+    get_metrics, read_rss_bytes, snapshot, start_rss_poller,
+)
+from repro.obs.sentinel import (  # noqa: F401
+    CompileCounter, RecompileError, strict_enabled,
+)
+from repro.obs.trace import (  # noqa: F401
+    Tracer, current, install, instant, span, timed, uninstall, write_trace,
+)
+
+__all__ = [
+    "Tracer", "span", "timed", "instant", "install", "uninstall", "current",
+    "write_trace",
+    "MetricsRegistry", "Counter", "Gauge", "Histogram", "REGISTRY",
+    "get_metrics", "snapshot", "start_rss_poller", "read_rss_bytes",
+    "SCHEMA_VERSION",
+    "CompileCounter", "RecompileError", "strict_enabled",
+]

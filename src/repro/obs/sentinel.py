@@ -1,0 +1,97 @@
+"""Compile counting + the recompile sentinel.
+
+Every jitted tier in the repo relies on the same trick: a Python-side
+side effect in the traced function body runs once per DISTINCT trace
+signature, so ``counter.mark()`` inside the jit counts compilations
+exactly.  Three copies of that trick grew independently
+(``foldstats._FixedShapeUpdate``, ``wholebrain._ColumnBlockUpdate``,
+``EncoderService``); :class:`CompileCounter` is the one shared
+primitive they now all route through.
+
+``mark()`` does three things:
+
+1. bumps ``.count`` (the number every existing gate reads — the public
+   aliases ``chunk_update_compile_count`` etc. stay bit-compatible);
+2. bumps the global metric ``compiles{tier=<tier>}``;
+3. enforces the **recompile sentinel**: inside an ``expect(at_most=N)``
+   window, a trace that would push the window's compile delta past N
+   raises :class:`RecompileError` AT TRACE TIME (the stack points at
+   the recompiling call site) when strict mode is on.
+
+Strict mode is ``REPRO_OBS_STRICT=1`` in the environment — the CI
+oocore/wholebrain/fleet lanes set it, turning what used to be scattered
+post-hoc ``compile_count == 1`` assertions into a guard that fires at
+the moment of the violation.  Off by default: an unexpected recompile
+in an exploratory session is a perf bug, not a crash.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+
+from repro.obs.metrics import get_metrics
+
+__all__ = ["CompileCounter", "RecompileError", "strict_enabled"]
+
+
+class RecompileError(RuntimeError):
+    """A jitted tier compiled more times than its expectation window
+    allows (raised at trace time under ``REPRO_OBS_STRICT=1``)."""
+
+
+def strict_enabled() -> bool:
+    return os.environ.get("REPRO_OBS_STRICT", "") == "1"
+
+
+class CompileCounter:
+    """Trace-time compile counter for one jitted tier.
+
+    >>> compiles = CompileCounter("foldstats.chunk_update")
+    >>> @partial(jax.jit, static_argnums=...)
+    ... def _update(...):
+    ...     compiles.mark()          # traced once per distinct signature
+    ...     ...
+    >>> with compiles.expect(at_most=1):     # the fixed-shape contract
+    ...     for chunk in stream: update(chunk)
+
+    ``expect`` windows nest (inner windows shadow outer); the window
+    limit is evaluated inside ``mark``, so a violating compile raises
+    while JAX is still tracing — under strict mode only.
+    """
+
+    def __init__(self, tier: str):
+        self.tier = tier
+        self.count = 0
+        self._limit: int | None = None          # absolute ceiling in-window
+        self._metric = get_metrics().counter("compiles", tier=tier)
+
+    def mark(self) -> None:
+        """Call from INSIDE the traced function body."""
+        self.count += 1
+        self._metric.inc()
+        if (self._limit is not None and self.count > self._limit
+                and strict_enabled()):
+            raise RecompileError(
+                f"{self.tier}: compile #{self.count} exceeds the expectation "
+                f"window (allowed {self._limit}) — a fixed-shape tier is "
+                f"retracing (REPRO_OBS_STRICT=1)")
+
+    @contextlib.contextmanager
+    def expect(self, at_most: int = 1):
+        """Bound compiles inside the ``with`` body to ``at_most`` beyond
+        the current count (sentinel active only under strict mode)."""
+        prev = self._limit
+        self._limit = self.count + at_most
+        try:
+            yield self
+        finally:
+            self._limit = prev
+
+    def delta(self, before: int) -> int:
+        return self.count - before
+
+    def __int__(self) -> int:
+        return self.count
+
+    def __repr__(self) -> str:
+        return f"CompileCounter({self.tier!r}, count={self.count})"

@@ -40,6 +40,7 @@ from typing import Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.serving_encoders.registry import EncoderRegistry
 from repro.serving_encoders.service import (
     EncoderService, PredictRequest, PredictResult, ServiceError,
@@ -253,6 +254,9 @@ class FleetFrontend:
         if self._pending_rows + rows > self.max_pending_rows:
             self.rejected += 1
             self.service.stats.record_rejected(request.tenant_id)
+            obs.get_metrics().counter("rejected_requests").inc()
+            obs.instant("fleet.reject", tenant=request.tenant_id,
+                        rows=rows, pending_rows=self._pending_rows)
             raise ServiceError(
                 f"admission rejected for tenant {request.tenant_id!r}: "
                 f"{rows} rows would put the queue at "
@@ -262,6 +266,8 @@ class FleetFrontend:
         self._pending.append(_Pending(request, idx))
         self._pending_rows += rows
         self.admitted += 1
+        obs.get_metrics().counter("admitted_rows").inc(rows)
+        obs.instant("fleet.admit", tenant=request.tenant_id, rows=rows)
         return idx
 
     def flush(self, *, wave_rows: int | None = None) -> list[PredictResult]:
@@ -270,9 +276,11 @@ class FleetFrontend:
         if not self._pending:
             return []
         batch = [p.request for p in self._pending]
+        rows = self._pending_rows
         self._pending = []
         self._pending_rows = 0
-        return self.service.serve(batch, wave_rows=wave_rows)
+        with obs.span("fleet.flush", requests=len(batch), rows=rows):
+            return self.service.serve(batch, wave_rows=wave_rows)
 
 
 def np_rows(request: PredictRequest) -> int:

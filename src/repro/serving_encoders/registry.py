@@ -37,6 +37,7 @@ from collections import OrderedDict
 
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import io as ckpt_io
 from repro.encoding.dispatch import (
     estimated_resident_bytes, mixed_wave_scoring_bytes,
@@ -186,6 +187,10 @@ class EncoderRegistry:
         self.shard_hits = 0
         self.shard_loads = 0
         self.peak_resident_bytes = 0
+        m = obs.get_metrics()
+        self._m_hits = m.counter("registry_hits")
+        self._m_loads = m.counter("registry_loads")
+        self._m_evictions = m.counter("registry_evictions")
 
     # -- registration --------------------------------------------------------
     def add(self, name: str, path: str) -> EncoderBundle:
@@ -276,6 +281,8 @@ class EncoderRegistry:
             budget = self.device_memory_budget
             if name in self._loaded:
                 self.hits += 1
+                self._m_hits.inc()
+                obs.instant("registry.hit", model=name)
                 entry = self._loaded[name]
                 self._loaded.move_to_end(name)
                 if eff_wave > entry.charged_wave_rows \
@@ -312,21 +319,22 @@ class EncoderRegistry:
             # Evict BEFORE loading so the peak never exceeds budget.
             self._evict_until_fits(extra_need=need)
             t0 = time.perf_counter()
-            try:
-                encoder = bundle.load_encoder(
-                    target_shards=self.target_shards,
-                    mmap=self.mmap_weights)
-            except BundleError:
-                raise
-            except (ckpt_io.CheckpointError, OSError, ValueError) as e:
-                # Anything the disk path throws mid-materialisation —
-                # truncated .npy, vanished leaf, corrupted checkpoint
-                # manifest — becomes the typed fault the service degrades
-                # on, and no partial entry is ever inserted.
-                raise BundleError(
-                    f"bundle {name!r} failed to materialise: {e}") from e
-            p, t = bundle.shape
-            mu_x, sd_x, mu_y, sd_y = _serving_arrays(encoder, p, t)
+            with obs.span("registry.load", model=name, bytes=need):
+                try:
+                    encoder = bundle.load_encoder(
+                        target_shards=self.target_shards,
+                        mmap=self.mmap_weights)
+                except BundleError:
+                    raise
+                except (ckpt_io.CheckpointError, OSError, ValueError) as e:
+                    # Anything the disk path throws mid-materialisation —
+                    # truncated .npy, vanished leaf, corrupted checkpoint
+                    # manifest — becomes the typed fault the service
+                    # degrades on, and no partial entry is ever inserted.
+                    raise BundleError(
+                        f"bundle {name!r} failed to materialise: {e}") from e
+                p, t = bundle.shape
+                mu_x, sd_x, mu_y, sd_y = _serving_arrays(encoder, p, t)
             entry = LoadedEncoder(
                 name=name, bundle=bundle, encoder=encoder,
                 resident_bytes=need, charged_wave_rows=eff_wave,
@@ -335,6 +343,7 @@ class EncoderRegistry:
                 load_seconds=time.perf_counter() - t0)
             self._loaded[name] = entry
             self.loads += 1
+            self._m_loads.inc()
             self._note_peak()
             return entry
 
@@ -403,6 +412,8 @@ class EncoderRegistry:
                 slo, shi = bounds[i]
                 if key in self._shards:
                     self.shard_hits += 1
+                    self._m_hits.inc()
+                    obs.instant("registry.hit", model=name, shard=i)
                     entry = self._shards[key]
                     self._shards.move_to_end(key)
                     if eff_wave > entry.charged_wave_rows:
@@ -430,15 +441,19 @@ class EncoderRegistry:
                         f"weight shards")
                 self._evict_until_fits(extra_need=need, keep_shards=wanted)
                 t0 = time.perf_counter()
-                try:
-                    W = jnp.asarray(bundle.load_weight_shard(i, mmap=True))
-                    mu_x, sd_x, mu_y, sd_y = self._std_host_arrays(name)
-                except BundleError:
-                    raise
-                except (ckpt_io.CheckpointError, OSError, ValueError) as e:
-                    raise BundleError(
-                        f"shard {i} of {name!r} failed to materialise: "
-                        f"{e}") from e
+                with obs.span("registry.load", model=name, shard=i,
+                              bytes=need):
+                    try:
+                        W = jnp.asarray(
+                            bundle.load_weight_shard(i, mmap=True))
+                        mu_x, sd_x, mu_y, sd_y = self._std_host_arrays(name)
+                    except BundleError:
+                        raise
+                    except (ckpt_io.CheckpointError, OSError,
+                            ValueError) as e:
+                        raise BundleError(
+                            f"shard {i} of {name!r} failed to materialise: "
+                            f"{e}") from e
                 entry = LoadedShard(
                     name=name, shard=i, bounds=(slo, shi), W=W,
                     mu_x=jnp.asarray(mu_x), sd_x=jnp.asarray(sd_x),
@@ -448,6 +463,7 @@ class EncoderRegistry:
                     load_seconds=time.perf_counter() - t0)
                 self._shards[key] = entry
                 self.shard_loads += 1
+                self._m_loads.inc()
                 self._note_peak()
                 out.append(entry)
             return out
@@ -468,12 +484,16 @@ class EncoderRegistry:
             if skey is not None:
                 del self._shards[skey]
                 self.evictions += 1
+                self._m_evictions.inc()
+                obs.instant("registry.evict", model=skey[0], shard=skey[1])
                 continue
             victim = next((n for n in self._loaded if n != keep), None)
             if victim is None:
                 return
             del self._loaded[victim]
             self.evictions += 1
+            self._m_evictions.inc()
+            obs.instant("registry.evict", model=victim)
 
     def evict(self, name: str) -> bool:
         """Drop a resident entry — the full-bundle entry AND any of the
@@ -484,10 +504,14 @@ class EncoderRegistry:
             if name in self._loaded:
                 del self._loaded[name]
                 self.evictions += 1
+                self._m_evictions.inc()
+                obs.instant("registry.evict", model=name)
                 hit = True
             for key in [k for k in self._shards if k[0] == name]:
                 del self._shards[key]
                 self.evictions += 1
+                self._m_evictions.inc()
+                obs.instant("registry.evict", model=key[0], shard=key[1])
                 hit = True
             self._std_host.pop(name, None)
             return hit

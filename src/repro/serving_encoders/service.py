@@ -60,6 +60,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.serving_encoders.bundle import BundleError
 from repro.serving_encoders.registry import EncoderRegistry, RegistryError
 
@@ -117,6 +118,10 @@ class ServiceStats:
         b["pad_rows"] += wave_rows - real
         self.waves += 1
         self.pad_rows += wave_rows - real
+        m = obs.get_metrics()
+        m.counter("waves", bucket=wave_rows).inc()
+        m.counter("wave_rows").inc(real)
+        m.counter("wave_pad_rows").inc(wave_rows - real)
 
     def tenant(self, tenant: str) -> dict:
         return self.per_tenant.setdefault(
@@ -130,12 +135,30 @@ class ServiceStats:
         acct["bytes"] += nbytes
         acct["requests"] += 1
         acct["scored"] += int(scored)
+        obs.get_metrics().counter("tenant_rows", tenant=tenant).inc(rows)
 
     def record_error(self, tenant: str) -> None:
         self.tenant(tenant)["errors"] += 1
 
     def record_rejected(self, tenant: str) -> None:
         self.tenant(tenant)["rejected"] += 1
+
+    def to_dict(self) -> dict:
+        """Shared ``repro.obs`` stats schema (kind ``"service"``) — the
+        shape ``launch/serve.py``, the benches, and the fleet workers
+        report, mergeable across processes by summing the flat fields."""
+        return {
+            "schema": obs.SCHEMA_VERSION,
+            "kind": "service",
+            "waves": int(self.waves),
+            "rows": int(self.rows),
+            "pad_rows": int(self.pad_rows),
+            "requests": int(self.requests),
+            "per_bucket": {int(k): dict(v)
+                           for k, v in sorted(self.per_bucket.items())},
+            "per_tenant": {k: dict(v)
+                           for k, v in sorted(self.per_tenant.items())},
+        }
 
 
 # -- mixed-wave packing ------------------------------------------------------
@@ -252,14 +275,15 @@ class EncoderService:
         self.score_slots = score_slots
         self.prefetch_next = prefetch_next
         self.return_predictions = return_predictions
-        self.compile_count = 0
+        self.compiles = obs.CompileCounter("service.predict")
+        self._seen_shapes: set = set()
         self.stats = ServiceStats()
 
         def _predict(X, W, mu_x, sd_x, mu_y, sd_y):
             # Python side effect at TRACE time: runs once per distinct
             # (wave shape, weight shape/dtype/sharding) signature — the
             # compile counter the serving bench/CI lane asserts on.
-            self.compile_count += 1
+            self.compiles.mark()
             Xs = (X - mu_x) / sd_x
             P = jnp.matmul(Xs, W, preferred_element_type=jnp.float32)
             return P * sd_y + mu_y
@@ -272,7 +296,7 @@ class EncoderService:
             # blocks of 8, still one chain): zero-weight rows add exact
             # ±0, so a request's sums are bit-identical at any wave
             # offset/cut to serving it alone — the replay-harness gate.
-            self.compile_count += 1
+            self.compiles.mark()
             Xs = (X - mu_x) / sd_x
             P = jnp.matmul(Xs, W, preferred_element_type=jnp.float32)
             P = P * sd_y + mu_y
@@ -300,6 +324,21 @@ class EncoderService:
 
         self._predict = jax.jit(_predict)
         self._predict_mixed = jax.jit(_predict_mixed)
+
+    @property
+    def compile_count(self) -> int:
+        """Total traces of the two serve programs (thin alias over the
+        shared :class:`repro.obs.CompileCounter`)."""
+        return self.compiles.count
+
+    def _expect_shape(self, key: tuple):
+        """Strict-sentinel window for one wave flight: a shape key seen
+        before must trace 0 new programs; a fresh key is allowed exactly
+        one.  Under ``REPRO_OBS_STRICT=1`` a violation raises at trace
+        time (``obs.RecompileError``) instead of skewing the counter."""
+        fresh = key not in self._seen_shapes
+        self._seen_shapes.add(key)
+        return self.compiles.expect(at_most=1 if fresh else 0)
 
     # -- wave planning -------------------------------------------------------
     def _plan_waves(self, n_rows: int, wave_rows: int | None) -> list[int]:
@@ -379,10 +418,18 @@ class EncoderService:
         parts, counts = [], []
         pos = 0
         for w in self._plan_waves(feats.shape[0], wave_rows):
-            chunk = jnp.asarray(self._pad(feats[pos:pos + w], w))
+            with obs.span("serve.wave.build", rows=w, model=model):
+                chunk = jnp.asarray(self._pad(feats[pos:pos + w], w))
             real = min(w, feats.shape[0] - pos)
-            parts.append([self._predict(chunk, e.W, e.mu_x, e.sd_x,
-                                        e.mu_y, e.sd_y) for e in shards])
+            outs = []
+            with obs.span("serve.wave.execute", rows=w,
+                          shards=len(shards)):
+                for e in shards:
+                    with self._expect_shape(
+                            ("predict", w, p, int(e.W.shape[1]))):
+                        outs.append(self._predict(chunk, e.W, e.mu_x,
+                                                  e.sd_x, e.mu_y, e.sd_y))
+            parts.append(outs)
             counts.append(real)
             self.stats.record_wave(w, real)
             pos += w
@@ -421,33 +468,40 @@ class EncoderService:
         # scan continues from wave to wave (exact, see module docstring).
         req_sums = {j: np.zeros((5, t), np.float32)
                     for j, sc in enumerate(scored) if sc}
+        p = blocks[0].shape[1]
         flown: list[tuple[MixedWave, object]] = []
         for wave in plan:
-            X = np.zeros((wave.rows, blocks[0].shape[1]), np.float32)
-            Yt = np.zeros((wave.rows, t), np.float32)
-            onehot = np.zeros((wave.rows, s), np.float32)
-            sums_in = np.zeros((s, 5, t), np.float32)
-            has_scored = False
-            for seg in wave.segments:
-                dst = slice(seg.wave_lo, seg.wave_lo + seg.req_hi - seg.req_lo)
-                X[dst] = blocks[seg.req][seg.req_lo:seg.req_hi]
-                if seg.slot is not None:
-                    has_scored = True
-                    Yt[dst] = targets[seg.req][seg.req_lo:seg.req_hi]
-                    onehot[dst, seg.slot] = 1.0
-                    sums_in[seg.slot] = req_sums[seg.req]
-            P, sums_out = self._predict_mixed(
-                jnp.asarray(X), jnp.asarray(Yt), jnp.asarray(onehot),
-                jnp.asarray(sums_in), *enc_args)
-            self.stats.record_wave(wave.rows, wave.fill)
-            if has_scored:
-                # The chain is a data dependency: the slot carries must
-                # land on host before the request's NEXT wave is built.
-                # Unscored waves stay fully async-enqueued.
-                host_sums = np.asarray(sums_out)
+            with obs.span("serve.wave.build", rows=wave.rows,
+                          fill=wave.fill, model=model):
+                X = np.zeros((wave.rows, p), np.float32)
+                Yt = np.zeros((wave.rows, t), np.float32)
+                onehot = np.zeros((wave.rows, s), np.float32)
+                sums_in = np.zeros((s, 5, t), np.float32)
+                has_scored = False
                 for seg in wave.segments:
+                    dst = slice(seg.wave_lo,
+                                seg.wave_lo + seg.req_hi - seg.req_lo)
+                    X[dst] = blocks[seg.req][seg.req_lo:seg.req_hi]
                     if seg.slot is not None:
-                        req_sums[seg.req] = host_sums[seg.slot]
+                        has_scored = True
+                        Yt[dst] = targets[seg.req][seg.req_lo:seg.req_hi]
+                        onehot[dst, seg.slot] = 1.0
+                        sums_in[seg.slot] = req_sums[seg.req]
+            with obs.span("serve.wave.execute", rows=wave.rows,
+                          fill=wave.fill, model=model):
+                with self._expect_shape(("mixed", wave.rows, p, t, s)):
+                    P, sums_out = self._predict_mixed(
+                        jnp.asarray(X), jnp.asarray(Yt), jnp.asarray(onehot),
+                        jnp.asarray(sums_in), *enc_args)
+                self.stats.record_wave(wave.rows, wave.fill)
+                if has_scored:
+                    # The chain is a data dependency: the slot carries must
+                    # land on host before the request's NEXT wave is built.
+                    # Unscored waves stay fully async-enqueued.
+                    host_sums = np.asarray(sums_out)
+                    for seg in wave.segments:
+                        if seg.slot is not None:
+                            req_sums[seg.req] = host_sums[seg.slot]
             flown.append((wave, P))
 
         out_pred = None

@@ -22,7 +22,7 @@ from repro.wholebrain.artifact import BundleWriter
 from repro.wholebrain.solver import WholebrainResult, fit_wholebrain
 from repro.wholebrain.stats import (
     ColumnBlockAccumulator, ColumnBlockStats, colblock_update_compile_count,
-    column_blocks,
+    colblock_update_compiles, column_blocks,
 )
 
 __all__ = [
@@ -31,6 +31,7 @@ __all__ = [
     "ColumnBlockStats",
     "WholebrainResult",
     "colblock_update_compile_count",
+    "colblock_update_compiles",
     "column_blocks",
     "fit_wholebrain",
 ]

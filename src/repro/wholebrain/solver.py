@@ -47,10 +47,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import foldstats
 from repro.encoding.config import EncoderConfig
 from repro.wholebrain.stats import (
-    ColumnBlockAccumulator, colblock_update_compile_count, column_blocks,
+    ColumnBlockAccumulator, colblock_update_compile_count,
+    colblock_update_compiles, column_blocks,
 )
 
 
@@ -80,10 +82,11 @@ def _stream_stats(agg: dict, stream) -> None:
     s = getattr(stream, "stats", None)
     if s is None:
         return
-    agg["chunks"] += s.chunks
-    agg["bytes_staged"] += s.bytes_staged
-    agg["read_stall_s"] += s.read_stall_s
-    agg["compute_stall_s"] += s.compute_stall_s
+    d = s.to_dict()
+    agg["chunks"] += d["chunks"]
+    agg["bytes_staged"] += d["bytes_staged"]
+    agg["read_stall_s"] += d["read_stall_s"]
+    agg["compute_stall_s"] += d["compute_stall_s"]
 
 
 def _accumulate(acc, store, chunk_rows: int, col_range, cfg: EncoderConfig,
@@ -177,7 +180,30 @@ def fit_wholebrain(store, cfg: EncoderConfig | None = None, *,
     writer, ``collect=True`` (the default then) assembles the host
     weight matrix.  ``scratch_dir`` hosts the global-mode ``Â`` scratch
     memmap (default: alongside the writer's staging dir, else a tempdir).
+
+    The whole fit runs under a ``fit.wholebrain`` root span (children:
+    ``wholebrain.xstats``, ``wholebrain.block``, ``fit.eigh``,
+    ``fit.solve``) with the strict recompile sentinel armed at one trace
+    per tier for the full run — every block shares the gram and
+    column-block compiled updates.
     """
+    n, p, t = store.shape
+    with obs.span("fit.wholebrain", n=n, p=p, t=t,
+                  lambda_mode=lambda_mode), \
+         foldstats.chunk_update_compiles().expect(at_most=1), \
+         colblock_update_compiles().expect(at_most=1):
+        return _fit_wholebrain(store, cfg, t_block=t_block,
+                               lambda_mode=lambda_mode,
+                               chunk_rows=chunk_rows, writer=writer,
+                               collect=collect, scratch_dir=scratch_dir)
+
+
+def _fit_wholebrain(store, cfg: EncoderConfig | None = None, *,
+                    t_block: int | None = None,
+                    lambda_mode: str = "global",
+                    chunk_rows: int | None = None,
+                    writer=None, collect: bool | None = None,
+                    scratch_dir: str | None = None) -> WholebrainResult:
     cfg = cfg or EncoderConfig()
     if cfg.solver not in ("auto", "ridge"):
         raise ValueError(f"wholebrain fit supports only the ridge solver; "
@@ -218,42 +244,50 @@ def fit_wholebrain(store, cfg: EncoderConfig | None = None, *,
     # own Y columns — row passes over X drop from 1 + ceil(t/t_block) to 1
     # (cached) or ceil(t/t_block) (spilled to the prefetcher re-stream).
     lo0, hi0 = bounds[0]
-    gacc = foldstats.FoldStatsAccumulator(n, k, chunk_rows=chunk_rows,
-                                          use_pallas=use_pallas)
-    bacc0 = ColumnBlockAccumulator(n, k, t_pad, chunk_rows=chunk_rows,
-                                   use_pallas=use_pallas)
-    dtype_x = getattr(store, "dtype_x", np.dtype(np.float32))
-    x_cache = None
-    if len(bounds) > 1 and _XChunkCache.fits(n, p, dtype_x.itemsize,
-                                             cfg.device_memory_budget):
-        x_cache = _XChunkCache(n, p, dtype_x)
-    stream = store.iter_chunks(chunk_rows, col_range=(lo0, hi0),
-                               prefetch=cfg.prefetch,
-                               prefetch_depth=cfg.prefetch_depth)
-    try:
-        for Xc, Yc in stream:
-            gacc.update(Xc, Yc[:, :0])
-            bacc0.update(Xc, Yc)
-            if x_cache is not None:
-                x_cache.append(np.asarray(Xc))
-    finally:
-        if hasattr(stream, "close"):
-            stream.close()
-    _stream_stats(agg, stream)
-    gstats = gacc.finalize()
-    block0_stats = bacc0.finalize()
+    with obs.span("wholebrain.xstats", rows=n, fused_block=0) as xsp:
+        gacc = foldstats.FoldStatsAccumulator(n, k, chunk_rows=chunk_rows,
+                                              use_pallas=use_pallas)
+        bacc0 = ColumnBlockAccumulator(n, k, t_pad, chunk_rows=chunk_rows,
+                                       use_pallas=use_pallas)
+        dtype_x = getattr(store, "dtype_x", np.dtype(np.float32))
+        x_cache = None
+        if len(bounds) > 1 and _XChunkCache.fits(n, p, dtype_x.itemsize,
+                                                 cfg.device_memory_budget):
+            x_cache = _XChunkCache(n, p, dtype_x)
+        xsp.set(cached=x_cache is not None)
+        stream = store.iter_chunks(chunk_rows, col_range=(lo0, hi0),
+                                   prefetch=cfg.prefetch,
+                                   prefetch_depth=cfg.prefetch_depth)
+        try:
+            for Xc, Yc in stream:
+                gacc.update(Xc, Yc[:, :0])
+                bacc0.update(Xc, Yc)
+                if x_cache is not None:
+                    x_cache.append(np.asarray(Xc))
+        finally:
+            if hasattr(stream, "close"):
+                stream.close()
+        _stream_stats(agg, stream)
+        xsp.set(bytes_staged=agg["bytes_staged"])
+        gstats = gacc.finalize()
+        block0_stats = bacc0.finalize()
 
     # -- hoisted factorisations: k downdated eighs + the refit, once ---------
     # (the paper's Eq. 5 mutualisation extended across blocks: these depend
     # only on X, so every target block reuses them).
-    eye = cfg.jitter * jnp.eye(p, dtype=jnp.float32)
-    lams = jnp.asarray(cfg.lambdas, dtype=jnp.float32)
-    fold_eigs = []
-    for f in range(k):
-        G_tr, _ = gstats.train(f)
-        evals_f, Q_f = jnp.linalg.eigh(G_tr + eye)
-        fold_eigs.append((evals_f, Q_f))
-    evals_R, Q_R = jnp.linalg.eigh(gstats.G_total + eye)
+    with obs.span("fit.eigh", folds=k, p=p):
+        eye = cfg.jitter * jnp.eye(p, dtype=jnp.float32)
+        lams = jnp.asarray(cfg.lambdas, dtype=jnp.float32)
+        fold_eigs = []
+        for f in range(k):
+            G_tr, _ = gstats.train(f)
+            evals_f, Q_f = jnp.linalg.eigh(G_tr + eye)
+            fold_eigs.append((evals_f, Q_f))
+        evals_R, Q_R = jnp.linalg.eigh(gstats.G_total + eye)
+        # Forcing only under tracing: honest eigh wall attribution without
+        # changing the async dispatch semantics of an untraced fit.
+        if obs.current() is not None:
+            jax.block_until_ready(Q_R)
 
     W_full = np.empty((p, t), np.float32) if collect else None
     scratch = None
@@ -279,78 +313,81 @@ def fit_wholebrain(store, cfg: EncoderConfig | None = None, *,
         # re-stream the full rows through the prefetcher.)
         restreamed_x = 0
         for bi, (lo, hi) in enumerate(bounds):
-            w = hi - lo
-            if bi == 0:
-                bstats = block0_stats
-            else:
-                bacc = ColumnBlockAccumulator(n, k, t_pad,
-                                              chunk_rows=chunk_rows,
-                                              use_pallas=use_pallas)
-                if x_cache is not None:
-                    # Y-only store pass (zero feature-shard bytes) zipped
-                    # with the cache's replay of the identical chunk
-                    # partition.
-                    stream = store.iter_chunks(
-                        chunk_rows, col_range=(lo, hi), col_range_x=(0, 0),
-                        prefetch=cfg.prefetch,
-                        prefetch_depth=cfg.prefetch_depth)
-                    try:
-                        for Xc, (_, Yc) in zip(x_cache.chunks(), stream):
-                            bacc.update(Xc, Yc)
-                    finally:
-                        if hasattr(stream, "close"):
-                            stream.close()
-                    _stream_stats(agg, stream)
-                    bstats = bacc.finalize()
+            with obs.span("wholebrain.block", block=bi, lo=lo, hi=hi) as bsp:
+                bytes0 = agg["bytes_staged"]
+                w = hi - lo
+                if bi == 0:
+                    bstats = block0_stats
                 else:
-                    restreamed_x += 1
-                    bstats = _accumulate(bacc, store, chunk_rows, (lo, hi),
-                                         cfg, agg)
-            _check_target_scale(bstats, n, lo, hi)
-            # Grafted onto the shared statistics this is a full FoldStats
-            # restricted (bitwise) to the block's columns.
-            full = foldstats.FoldStats(
-                G=gstats.G, C=bstats.C, xsum=gstats.xsum,
-                ysum=bstats.ysum, ysq=bstats.ysq, count=gstats.count)
-            fold_scores = []
-            for f in range(k):
-                evals_f, Q_f = fold_eigs[f]
-                _, C_tr = full.train(f)
-                s_rt = foldstats.validation_scores_per_target(
-                    full, f, Q_f, evals_f, C_tr, lams, cfg.scoring)
+                    bacc = ColumnBlockAccumulator(n, k, t_pad,
+                                                  chunk_rows=chunk_rows,
+                                                  use_pallas=use_pallas)
+                    if x_cache is not None:
+                        # Y-only store pass (zero feature-shard bytes) zipped
+                        # with the cache's replay of the identical chunk
+                        # partition.
+                        stream = store.iter_chunks(
+                            chunk_rows, col_range=(lo, hi), col_range_x=(0, 0),
+                            prefetch=cfg.prefetch,
+                            prefetch_depth=cfg.prefetch_depth)
+                        try:
+                            for Xc, (_, Yc) in zip(x_cache.chunks(), stream):
+                                bacc.update(Xc, Yc)
+                        finally:
+                            if hasattr(stream, "close"):
+                                stream.close()
+                        _stream_stats(agg, stream)
+                        bstats = bacc.finalize()
+                    else:
+                        restreamed_x += 1
+                        bstats = _accumulate(bacc, store, chunk_rows, (lo, hi),
+                                             cfg, agg)
+                _check_target_scale(bstats, n, lo, hi)
+                # Grafted onto the shared statistics this is a full FoldStats
+                # restricted (bitwise) to the block's columns.
+                full = foldstats.FoldStats(
+                    G=gstats.G, C=bstats.C, xsum=gstats.xsum,
+                    ysum=bstats.ysum, ysq=bstats.ysq, count=gstats.count)
+                fold_scores = []
+                for f in range(k):
+                    evals_f, Q_f = fold_eigs[f]
+                    _, C_tr = full.train(f)
+                    s_rt = foldstats.validation_scores_per_target(
+                        full, f, Q_f, evals_f, C_tr, lams, cfg.scoring)
+                    if lambda_mode == "global":
+                        # Host f64 accumulation in global column order — the
+                        # aggregate is independent of the blocking.
+                        score_sum[f] += np.asarray(
+                            s_rt[:, :w], np.float64).sum(axis=1)
+                    else:
+                        fold_scores.append(jnp.mean(s_rt[:, :w], axis=1))
+                C_total_b = full.C_total                      # (p, t_pad)
                 if lambda_mode == "global":
-                    # Host f64 accumulation in global column order — the
-                    # aggregate is independent of the blocking.
-                    score_sum[f] += np.asarray(
-                        s_rt[:, :w], np.float64).sum(axis=1)
+                    # Stash the refit eigenbasis projection of the block — the
+                    # only per-block quantity the final solve needs, computed
+                    # HERE so λ selection costs no second pass over the rows.
+                    Ahat = jnp.matmul(Q_R.T, C_total_b,
+                                      preferred_element_type=jnp.float32)
+                    scratch[:, lo:hi] = np.asarray(Ahat)[:, :w]
                 else:
-                    fold_scores.append(jnp.mean(s_rt[:, :w], axis=1))
-            C_total_b = full.C_total                      # (p, t_pad)
-            if lambda_mode == "global":
-                # Stash the refit eigenbasis projection of the block — the
-                # only per-block quantity the final solve needs, computed
-                # HERE so λ selection costs no second pass over the rows.
-                Ahat = jnp.matmul(Q_R.T, C_total_b,
-                                  preferred_element_type=jnp.float32)
-                scratch[:, lo:hi] = np.asarray(Ahat)[:, :w]
-            else:
-                # ridge_cv_from_stats on the block-restricted statistics,
-                # with the factorisations hoisted: same ops, same bits.
-                cv_b = jnp.mean(jnp.stack(fold_scores), axis=0)
-                best_b = int(jnp.argmax(cv_b))
-                lam_b = float(np.asarray(lams)[best_b])
-                z = jnp.matmul(Q_R.T, C_total_b,
-                               preferred_element_type=jnp.float32)
-                z = z / (evals_R + lams[best_b])[:, None]
-                Wb = jnp.matmul(Q_R, z,
-                                preferred_element_type=jnp.float32)[:, :w]
-                per_block_lams.append(lam_b)
-                per_block_curves.append(np.asarray(cv_b, np.float64))
-                Wb = np.asarray(Wb)
-                if collect:
-                    W_full[:, lo:hi] = Wb
-                if writer is not None:
-                    writer.append(Wb)
+                    # ridge_cv_from_stats on the block-restricted statistics,
+                    # with the factorisations hoisted: same ops, same bits.
+                    cv_b = jnp.mean(jnp.stack(fold_scores), axis=0)
+                    best_b = int(jnp.argmax(cv_b))
+                    lam_b = float(np.asarray(lams)[best_b])
+                    z = jnp.matmul(Q_R.T, C_total_b,
+                                   preferred_element_type=jnp.float32)
+                    z = z / (evals_R + lams[best_b])[:, None]
+                    Wb = jnp.matmul(Q_R, z,
+                                    preferred_element_type=jnp.float32)[:, :w]
+                    per_block_lams.append(lam_b)
+                    per_block_curves.append(np.asarray(cv_b, np.float64))
+                    Wb = np.asarray(Wb)
+                    if collect:
+                        W_full[:, lo:hi] = Wb
+                    if writer is not None:
+                        writer.append(Wb)
+                bsp.set(bytes_staged=agg["bytes_staged"] - bytes0)
 
         scratch_bytes = 0
         if lambda_mode == "global":
@@ -360,19 +397,20 @@ def fit_wholebrain(store, cfg: EncoderConfig | None = None, *,
             # -- weight pass: read each block's Â back, diagonal solve -------
             # (padded back to t_pad so the final GEMM stays a bitwise
             # column slice of the unblocked solve, even on a ragged tail).
-            scratch.flush()
-            for lo, hi in bounds:
-                w = hi - lo
-                Ab = np.zeros((p, t_pad), np.float32)
-                Ab[:, :w] = scratch[:, lo:hi]
-                z = jnp.asarray(Ab) / (evals_R + lams[best])[:, None]
-                Wb = jnp.matmul(Q_R, z,
-                                preferred_element_type=jnp.float32)[:, :w]
-                Wb = np.asarray(Wb)
-                if collect:
-                    W_full[:, lo:hi] = Wb
-                if writer is not None:
-                    writer.append(Wb)
+            with obs.span("fit.solve", p=p, blocks=len(bounds)):
+                scratch.flush()
+                for lo, hi in bounds:
+                    w = hi - lo
+                    Ab = np.zeros((p, t_pad), np.float32)
+                    Ab[:, :w] = scratch[:, lo:hi]
+                    z = jnp.asarray(Ab) / (evals_R + lams[best])[:, None]
+                    Wb = jnp.matmul(Q_R, z,
+                                    preferred_element_type=jnp.float32)[:, :w]
+                    Wb = np.asarray(Wb)
+                    if collect:
+                        W_full[:, lo:hi] = Wb
+                    if writer is not None:
+                        writer.append(Wb)
             scratch_bytes = p * t * 4
             best_lambda = np.asarray([lam], np.float64)
             curves = cv_scores[None, :]

@@ -34,6 +34,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import foldstats
 
 
@@ -90,8 +91,12 @@ class _ColumnBlockUpdate:
     """
 
     def __init__(self) -> None:
-        self.compile_count = 0
+        self.compiles = obs.CompileCounter("wholebrain.colblock_update")
         self._fn = jax.jit(self._update, static_argnames=("use_pallas",))
+
+    @property
+    def compile_count(self) -> int:
+        return self.compiles.count
 
     def __call__(self, stats: ColumnBlockStats, X, Y, onehot, slot_fold, *,
                  use_pallas: bool = False) -> ColumnBlockStats:
@@ -102,8 +107,9 @@ class _ColumnBlockUpdate:
                 onehot: jax.Array, slot_fold: jax.Array,
                 use_pallas: bool = False) -> ColumnBlockStats:
         # Python side effect at TRACE time only — the compile counter the
-        # wholebrain CI lane gates at exactly 1 across ALL blocks.
-        self.compile_count += 1
+        # wholebrain CI lane gates at exactly 1 across ALL blocks (shared
+        # obs.CompileCounter; expect() windows arm the strict sentinel).
+        self.compiles.mark()
         dt = jnp.promote_types(X.dtype, Y.dtype)
         w = onehot                                          # (m, s) f32 0/1
         if use_pallas:
@@ -153,8 +159,17 @@ def colblock_update_compile_count() -> int:
     Take a delta around a blocked fit to measure its compiles; the
     contract is ``delta == 1`` for a fresh ``(chunk_rows, p, t_pad, k)``
     signature however many blocks are streamed, and ``0`` for a repeat.
+
+    (Thin alias over ``colblock_update_compiles().count`` — the shared
+    ``obs.CompileCounter`` primitive.)
     """
-    return _COLBLOCK_UPDATE.compile_count
+    return _COLBLOCK_UPDATE.compiles.count
+
+
+def colblock_update_compiles() -> "obs.CompileCounter":
+    """The column-block update's :class:`repro.obs.CompileCounter`
+    (``expect()`` windows arm the strict recompile sentinel)."""
+    return _COLBLOCK_UPDATE.compiles
 
 
 class ColumnBlockAccumulator(foldstats.FoldStatsAccumulator):
@@ -204,4 +219,4 @@ class ColumnBlockAccumulator(foldstats.FoldStatsAccumulator):
 
 
 __all__ = ["ColumnBlockAccumulator", "ColumnBlockStats", "column_blocks",
-           "colblock_update_compile_count"]
+           "colblock_update_compile_count", "colblock_update_compiles"]
