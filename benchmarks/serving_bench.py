@@ -21,6 +21,12 @@ request traffic:
   share ``(p, t)``, so model count must NOT multiply compilations; the
   bucketed service once per bucket used).  The bench exits non-zero
   otherwise; the CI serving lane runs ``--smoke``.
+* **Fault injection** (``--inject-faults``) — seeded transient faults on
+  bundle loads must retry through (``FaultPolicy`` on virtual time)
+  bit-identically with zero give-ups; a permanent one-model burst must
+  give up into the typed per-request degradation leaving every other
+  model's results untouched.  Retry/give-up counter deltas land in the
+  ``fault_injection`` row.
 * **Mixed-traffic trace replay** (``--replay-trace``) — the fleet tier's
   acceptance gate: the checked-in seeded trace
   (``benchmarks/traces/mixed_v1.json``: ragged rows, scored/unscored mix,
@@ -322,6 +328,100 @@ def replay_mixed_trace(trace_path: str, workdir: str, *,
     }
 
 
+def fault_injection_row(fleet, p: int, wave_rows: int, *, seed: int) -> dict:
+    """Serve one deterministic batch three ways — clean, with injected
+    transient bundle-load faults (must retry through bit-identically),
+    and with a permanent fault burst (must give up into the typed
+    per-request degradation) — and record the retry/give-up economics.
+
+    The injector is seeded and the retry policy runs on virtual time
+    (``FaultPolicy.with_virtual_time``), so the row is exactly
+    reproducible: no sleeps, no wall-clock dependence.
+    """
+    import numpy as np
+    from repro import obs
+    from repro.resilience.faultsim import FaultInjector, flaky_bundle
+    from repro.resilience.policy import FaultPolicy
+    from repro.serving_encoders import EncoderRegistry, EncoderService
+    from repro.serving_encoders.traffic import ragged_requests
+
+    models = [name for name, _ in fleet]
+
+    def build(policy=None, injector=None, only=None):
+        reg = EncoderRegistry(wave_rows=wave_rows, fault_policy=policy)
+        for name, path in fleet:
+            reg.add(name, path)
+            if injector is not None and (only is None or name in only):
+                reg._bundles[name] = flaky_bundle(reg._bundles[name],
+                                                  injector)
+        return EncoderService(reg, wave_rows=wave_rows)
+
+    def counter_deltas(before, ops=("io_retries", "io_giveups")):
+        after = obs.snapshot()["counters"]
+        return {op: sum(v - before.get(k, 0) for k, v in after.items()
+                        if k.startswith(op)) for op in ops}
+
+    reqs = ragged_requests(np.random.default_rng(seed), models, p,
+                           wave_rows, 8)
+    clean = build().serve(reqs, wave_rows=wave_rows)
+
+    # Transient burst: the first load fails once, a later one twice —
+    # both inside max_attempts, so every request must come back
+    # bit-identical to the clean serve with zero give-ups.
+    inj = FaultInjector(seed=11)
+    inj.plan("bundle.load_encoder", 1)
+    inj.plan("bundle.load_encoder", 4, times=2)
+    policy = FaultPolicy(max_attempts=3, seed=11).with_virtual_time()
+    before = dict(obs.snapshot()["counters"])
+    faulty = build(policy, inj).serve(reqs, wave_rows=wave_rows)
+    transient = counter_deltas(before)
+    for i, (got, want) in enumerate(zip(faulty, clean)):
+        if got.error is not None or want.error is not None or \
+                not np.array_equal(got.predictions, want.predictions):
+            print(f"FAIL: request {i} diverged under injected transient "
+                  f"faults")
+            raise SystemExit(1)
+    if transient["io_retries"] < 3 or transient["io_giveups"]:
+        print(f"FAIL: transient-fault serve recorded {transient} "
+              f"(expected >=3 retries, 0 give-ups)")
+        raise SystemExit(1)
+
+    # Permanent burst: ONE model's loads fail past max_attempts — the
+    # registry gives up into a typed BundleError and the service degrades
+    # only that model's requests; everything else stays bit-identical.
+    dead_model = reqs[0].model
+    inj2 = FaultInjector(seed=12)
+    inj2.plan("bundle.load_encoder", 1, times=99)
+    before = dict(obs.snapshot()["counters"])
+    degraded = build(policy, inj2, only={dead_model}).serve(
+        reqs, wave_rows=wave_rows)
+    permanent = counter_deltas(before)
+    faults = survivors = 0
+    for req, got, want in zip(reqs, degraded, clean):
+        if req.model == dead_model:
+            faults += 1
+            if got.error is None:
+                print(f"FAIL: {dead_model} request served despite a "
+                      f"permanent load fault")
+                raise SystemExit(1)
+        else:
+            survivors += 1
+            if got.error is not None or \
+                    not np.array_equal(got.predictions, want.predictions):
+                print(f"FAIL: {req.model} degraded alongside {dead_model}")
+                raise SystemExit(1)
+    if permanent["io_giveups"] < 1:
+        print(f"FAIL: permanent burst recorded no give-up: {permanent}")
+        raise SystemExit(1)
+    print(f"fault injection: {transient['io_retries']} retries "
+          f"bit-identical, permanent burst degraded {faults} "
+          f"request(s) of {dead_model} ({survivors} unaffected) ✓")
+    return {"requests": len(reqs), "wave_rows": wave_rows,
+            "transient": transient, "bit_identical": True,
+            "permanent": permanent, "degraded_model": dead_model,
+            "degraded_requests": faults, "unaffected_requests": survivors}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -341,6 +441,11 @@ def main() -> None:
                          "gates bit-identity vs the per-request "
                          "reference and writes the mixed_traffic "
                          "p50/p99 rows")
+    ap.add_argument("--inject-faults", action="store_true",
+                    help="seeded transient/permanent fault injection on "
+                         "bundle loads: gates retry bit-identity + typed "
+                         "give-up degradation, writes the fault_injection "
+                         "row")
     args = ap.parse_args()
 
     if args.smoke:
@@ -413,6 +518,9 @@ def main() -> None:
           + f"), {bucketed['compile_count']} compiles ✓")
 
     reg_stats = time_registry(paths, max(wave_sizes))
+    injected = None
+    if args.inject_faults:
+        injected = fault_injection_row(fleet, p, wave_sizes[0], seed=99)
     mixed = None
     if args.replay_trace:
         mixed = replay_mixed_trace(
@@ -440,6 +548,8 @@ def main() -> None:
     # instrumented service publishes) rides along for downstream tooling.
     from repro import obs
     payload["metrics"] = obs.snapshot()
+    if injected is not None:
+        payload["fault_injection"] = injected
     if mixed is not None:
         payload["mixed_traffic"] = mixed
     with open(out, "w") as f:

@@ -47,6 +47,8 @@ import numpy as np
 
 from repro import obs
 from repro.data.fmri import SubjectSpec
+from repro.resilience import cleanup
+from repro.resilience.policy import FaultPolicy, classify_default, retry_call
 
 MANIFEST_NAME = "manifest.json"
 _MANIFEST_VERSION = 1
@@ -179,7 +181,7 @@ class ChunkPrefetcher:
             raise ValueError(f"prefetch depth must be >= 1, got {depth}")
         self._store = store
         self._chunk_rows = chunk_rows
-        self._dtype = dtype
+        self._dtype = _normalize_dtype(dtype)
         self._row_range = row_range
         self._col_range = col_range
         self._col_range_x = col_range_x
@@ -243,32 +245,84 @@ class ChunkPrefetcher:
         return ok
 
     def _reader(self) -> None:
+        """Walk the synchronous iterator, staging each chunk into the pool.
+
+        Resilience: when the backing store carries a ``fault_policy``, a
+        transient mid-stream failure does not kill the stream — the
+        reader backs off (deterministic jitter, see
+        ``repro.resilience.policy``) and RESTARTS the synchronous
+        iterator at the first unconsumed chunk.  Chunks are uniformly
+        ``chunk_rows`` rows except the ragged tail, so chunk ``seq``
+        always starts at global row ``lo + seq·chunk_rows`` and the
+        restarted stream yields the identical remaining sequence —
+        bit-identity survives the retry.  The attempt counter resets on
+        every staged chunk, so only *consecutive* failures exhaust the
+        policy; a give-up (or any permanent error) propagates to the
+        consumer exactly as before.
+        """
+        from repro.resilience.policy import classify_default
+
+        policy = getattr(self._store, "fault_policy", None)
+        lo, hi = (self._row_range if self._row_range is not None
+                  else (0, self._store.n_total))
+        metrics = obs.get_metrics()
+        seq = 0
+        attempt = 0
+        burst_start = None
         try:
-            seq = 0
-            for X_c, Y_c in self._store.iter_chunks(
-                    self._chunk_rows, dtype=self._dtype,
-                    row_range=self._row_range, col_range=self._col_range,
-                    col_range_x=self._col_range_x):
-                if self._stop.is_set():
-                    return
-                bx, by = self._bufs[seq % len(self._bufs)]
-                m = X_c.shape[0]
-                # The staging copy (memmap page-in + dtype conversion) is
-                # one ``prefetch.stage`` span; bytes_staged derives from
-                # the same region.
-                with obs.timed("prefetch.stage", chunk=seq) as t:
-                    np.copyto(bx[:m], X_c)
-                    np.copyto(by[:m], Y_c)
-                    staged = bx[:m].nbytes + by[:m].nbytes
-                    t.set(bytes=staged)
-                vx, vy = bx[:m].view(), by[:m].view()
-                vx.flags.writeable = False
-                vy.flags.writeable = False
-                self.stats.bytes_staged += staged
-                self._m_bytes.inc(staged)
-                if not self._put((vx, vy)):
-                    return
-                seq += 1
+            while True:
+                try:
+                    for X_c, Y_c in self._store._iter_chunks_sync(
+                            self._chunk_rows, self._dtype,
+                            lo + seq * self._chunk_rows, hi,
+                            self._col_range, self._col_range_x):
+                        if self._stop.is_set():
+                            return
+                        bx, by = self._bufs[seq % len(self._bufs)]
+                        m = X_c.shape[0]
+                        # The staging copy (memmap page-in + dtype
+                        # conversion) is one ``prefetch.stage`` span;
+                        # bytes_staged derives from the same region.
+                        with obs.timed("prefetch.stage", chunk=seq) as t:
+                            np.copyto(bx[:m], X_c)
+                            np.copyto(by[:m], Y_c)
+                            staged = bx[:m].nbytes + by[:m].nbytes
+                            t.set(bytes=staged)
+                        vx, vy = bx[:m].view(), by[:m].view()
+                        vx.flags.writeable = False
+                        vy.flags.writeable = False
+                        self.stats.bytes_staged += staged
+                        self._m_bytes.inc(staged)
+                        if not self._put((vx, vy)):
+                            return
+                        seq += 1
+                        attempt = 0
+                        burst_start = None
+                    break
+                except BaseException as exc:         # noqa: BLE001
+                    if self._stop.is_set():
+                        return
+                    if policy is None or not classify_default(exc):
+                        raise
+                    attempt += 1
+                    now = policy.clock()
+                    if burst_start is None:
+                        burst_start = now
+                    out_of_time = (policy.deadline_s is not None and
+                                   now - burst_start >= policy.deadline_s)
+                    if attempt >= policy.max_attempts or out_of_time:
+                        metrics.counter("io_giveups",
+                                        op="prefetch.read").inc()
+                        obs.instant("retry.giveup", op="prefetch.read",
+                                    attempt=attempt)
+                        raise
+                    metrics.counter("io_retries", op="prefetch.read").inc()
+                    delay = policy.delay_for("prefetch.read", attempt)
+                    with obs.span("retry.backoff", op="prefetch.read",
+                                  attempt=attempt,
+                                  delay_s=round(delay, 6)):
+                        if delay > 0.0:
+                            policy.sleep(delay)
             self._put(self._SENTINEL)
         except BaseException as exc:                 # noqa: BLE001
             self._put(exc)
@@ -345,7 +399,8 @@ class RunStore:
 
     def __init__(self, root: str, *, n_folds: int, dtype_x: np.dtype,
                  dtype_y: np.dtype, p: int | None, t: int | None,
-                 runs: list[RunEntry], writable: bool):
+                 runs: list[RunEntry], writable: bool,
+                 fault_policy: FaultPolicy | None = None):
         self.root = root
         self.n_folds = n_folds
         self.dtype_x = np.dtype(dtype_x)
@@ -354,6 +409,8 @@ class RunStore:
         self.t = t
         self.runs = runs
         self._writable = writable
+        #: transient-fault retry policy for shard reads (None = no retry).
+        self.fault_policy = fault_policy
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -361,6 +418,9 @@ class RunStore:
                dtype: np.dtype | str = np.float32) -> "RunStore":
         """Start an empty, writable store at ``root`` (created if missing)."""
         os.makedirs(root, exist_ok=True)
+        # A crashed writer leaves `*.tmp-*` shard stubs / a manifest tmp
+        # behind; reap them (age-gated) before validating emptiness.
+        cleanup.reap_stale_staging(root)
         if os.path.exists(os.path.join(root, MANIFEST_NAME)):
             raise StoreError(f"store already exists at {root}; use open()")
         store = cls(root, n_folds=n_folds, dtype_x=np.dtype(dtype),
@@ -370,8 +430,14 @@ class RunStore:
         return store
 
     @classmethod
-    def open(cls, root: str) -> "RunStore":
-        """Open read-only and validate the manifest against the shards."""
+    def open(cls, root: str, *, fault_policy: FaultPolicy | None = None
+             ) -> "RunStore":
+        """Open read-only and validate the manifest against the shards.
+
+        ``fault_policy`` arms transient-fault retry on every subsequent
+        shard mmap and on the prefetcher's chunk stream (see
+        ``repro.resilience``); omitted, reads fail fast as before.
+        """
         path = os.path.join(root, MANIFEST_NAME)
         if not os.path.exists(path):
             raise StoreError(f"no {MANIFEST_NAME} under {root}")
@@ -384,7 +450,8 @@ class RunStore:
         store = cls(root, n_folds=m["n_folds"],
                     dtype_x=_dtype_from_name(m["dtype_x"]),
                     dtype_y=_dtype_from_name(m["dtype_y"]),
-                    p=m["p"], t=m["t"], runs=runs, writable=False)
+                    p=m["p"], t=m["t"], runs=runs, writable=False,
+                    fault_policy=fault_policy)
         store._validate()
         return store
 
@@ -457,8 +524,15 @@ class RunStore:
         entry = RunEntry(run_id=run_id, row_offset=self.n_total,
                          n_rows=X.shape[0])
         x_path, y_path = _shard_paths(self.root, run_id)
-        np.save(x_path, X.view(_storage_dtype(self.dtype_x)))
-        np.save(y_path, Y.view(_storage_dtype(self.dtype_y)))
+        # Crash-safe shard landing: stage as `<shard>.tmp-<pid>` then
+        # atomic-rename, manifest LAST — a killed writer leaves only a
+        # reapable tmp stub, never a manifest pointing at a torn shard.
+        for path, arr, dt in ((x_path, X, self.dtype_x),
+                              (y_path, Y, self.dtype_y)):
+            tmp = f"{path}.tmp-{os.getpid()}"
+            with open(tmp, "wb") as f:
+                np.save(f, arr.view(_storage_dtype(dt)))
+            os.replace(tmp, path)
         self.runs.append(entry)
         self._write_manifest()
         return entry
@@ -475,6 +549,10 @@ class RunStore:
         import jax
         from repro.data import fmri
 
+        # Best-effort sweep of staging left by a previous crashed
+        # materialisation into the same root (age-gated; live writers
+        # are younger than the gate).
+        cleanup.reap_stale_staging(self.root)
         rows_per_run = rows_per_run or spec.n
         key = jax.random.PRNGKey(seed)
         lo = 0
@@ -505,10 +583,17 @@ class RunStore:
         n, p, t = self.shape
         return n * (p * self.dtype_x.itemsize + t * self.dtype_y.itemsize)
 
-    def _mmap(self, r: RunEntry) -> tuple[np.ndarray, np.ndarray]:
+    def _mmap_raw(self, r: RunEntry) -> tuple[np.ndarray, np.ndarray]:
+        """The raw (no-retry) shard mapping — the fault-injection seam."""
         x_path, y_path = _shard_paths(self.root, r.run_id)
         return (np.load(x_path, mmap_mode="r").view(self.dtype_x),
                 np.load(y_path, mmap_mode="r").view(self.dtype_y))
+
+    def _mmap(self, r: RunEntry) -> tuple[np.ndarray, np.ndarray]:
+        if self.fault_policy is None:
+            return self._mmap_raw(r)
+        return retry_call(lambda: self._mmap_raw(r), self.fault_policy,
+                          "store.mmap")
 
     def iter_chunks(self, chunk_rows: int, *, dtype: np.dtype | str | None
                     = None, row_range: tuple[int, int] | None = None,

@@ -237,6 +237,66 @@ Three switches:
   it retraces beyond its expectation window — the CI oocore, wholebrain,
   fleet, and obs lanes all run armed.
 
+Surviving failures
+------------------
+A whole-brain fit is hours of streaming and a fleet runs unattended, so
+the crash-safe tier (``repro.resilience``) assumes the process WILL die
+and the disk WILL hiccup — and makes both survivable without changing a
+single result bit:
+
+* **Checkpoint/resume**: pass ``journal=`` to ``fit_wholebrain`` (or
+  ``--journal`` to ``launch/wholebrain.py``) and every completed column
+  block — plus the shared X-statistics pass — is committed to an
+  atomic-rename ledger (payload → fsync → rename, ``ledger.json``
+  rewritten last, torn ``*.tmp-*`` leftovers reaped on attach).  A
+  killed fit re-attached to the same journal replays the committed
+  blocks from disk (exact f32 stats, f64 score contributions added in
+  block order) and streams only the remainder, so λ AND W come out
+  BIT-identical to an uninterrupted run; a finished fit deletes its
+  journal.  ``journal_signature`` pins the problem shape — a journal
+  from a different fit raises ``JournalError`` instead of corrupting::
+
+      from repro.wholebrain import fit_wholebrain
+      res = fit_wholebrain(store, cfg, t_block=16_384,
+                           journal="runs/sub-01.journal")
+      res.telemetry["resumed"], res.telemetry["blocks_replayed"]
+
+* **Transient-I/O retry**: ``RunStore.open(root, fault_policy=...)``
+  arms every shard mmap, chunk read, and prefetcher stage with
+  ``FaultPolicy`` retries — bounded attempts, exponential backoff with
+  deterministic seeded jitter, optional per-op deadline, and a typed
+  transient/permanent classifier (a permanent fault raises first time).
+  The prefetcher's reader restarts its stream at the next unconsumed
+  chunk, so a retried read is invisible downstream: λ, W, and the
+  compile counts are unchanged (``tests/test_resilience.py`` injects
+  mid-fit faults and gates exactly that).  ``EncoderRegistry`` takes the
+  same ``fault_policy=`` for bundle/shard loads; exhausted retries
+  surface as the usual typed ``StoreError``/``BundleError``.  Retries
+  and give-ups are ``io_retries{op=...}`` / ``io_giveups{op=...}``
+  counters with ``retry.backoff`` spans.
+
+* **Fleet liveness**: every residency publish stamps a heartbeat lease
+  (``ResidencyMap.heartbeat`` refreshes it between loads);
+  ``expire_dead(ttl_s)`` reaps workers whose stamp went stale, so a
+  SIGKILLed worker's claims vanish instead of pinning phantom residency
+  forever.  ``holders(model, ttl_s=...)`` filters the stale rows on
+  read.  A batch that dies with its worker is re-admitted by the
+  frontend (``WorkerLost`` → pending restored in admission order,
+  ``requests_replayed`` counted) and ``fleet.replay`` drains through the
+  loss.  The map's file lock acquire is bounded too — a wedged peer
+  yields a typed ``FleetError`` after ``lock_timeout_s``, never a hang.
+
+* **Crashed-writer hygiene**: ``BundleWriter`` and store
+  materialisation sweep stale staging leftovers (``.tmpbundle_*``,
+  ``*.tmp-*``, …) past an age gate before writing
+  (``resilience.reap_stale_staging``, ``staging_reaped`` counter).
+
+All of it is driven by the seeded deterministic harness in
+``repro.resilience.faultsim`` (fail the Nth read, truncate a payload,
+kill after block N) — the CI ``faults`` lane runs the injection matrix,
+a real ``--kill-after-block`` crash-resume smoke gating W shard bytes,
+and a 2-worker drain with one worker SIGKILLed mid-trace.
+
 Modules:
   config    — ``EncoderConfig``: one config subsuming ridge/banded/sharding
   dispatch  — complexity-driven solver + mesh-layout resolution

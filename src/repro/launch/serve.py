@@ -77,25 +77,74 @@ def _run_fleet_parent(args) -> None:
     if args.replay_trace is not None:
         base += ["--replay-trace", args.replay_trace]
 
-    def worker_argv(i: int) -> list[str]:
+    def worker_argv(wid: str) -> list[str]:
         # Observability flags fan out per worker: each process owns its
         # tracer/registry, so each gets a worker-suffixed output path.
-        argv = base + ["--worker-id", f"w{i}"]
+        argv = base + ["--worker-id", wid]
         for flag, path in (("--trace-out", args.trace_out),
                            ("--metrics-out", args.metrics_out)):
             if path is not None:
                 root, ext = os.path.splitext(path)
-                argv += [flag, f"{root}.w{i}{ext}"]
+                argv += [flag, f"{root}.{wid}{ext}"]
         return argv
 
-    procs = [subprocess.Popen(worker_argv(i), env=env)
-             for i in range(args.workers)]
+    kill_idx = args.kill_worker
+    if kill_idx >= args.workers:
+        raise SystemExit(f"--kill-worker {kill_idx} but only "
+                         f"{args.workers} workers")
+    procs = []
+    for i in range(args.workers):
+        argv = worker_argv(f"w{i}")
+        if i == kill_idx:
+            argv += ["--self-kill-after-flush", "1"]
+        procs.append(subprocess.Popen(argv, env=env))
     codes = [proc.wait() for proc in procs]
     rmap = ResidencyMap(os.path.join(args.bundle_dir, RESIDENCY_MAP))
+
+    killed_id = None
+    if kill_idx >= 0:
+        # The liveness gate: one worker SIGKILLs itself mid-trace.  Its
+        # lease (residency row) survives it; a replacement under a FRESH
+        # id re-runs the victim's workload so the drain still completes;
+        # expire_dead must then reap exactly the dead id's stale claim.
+        import signal
+        if codes[kill_idx] != -signal.SIGKILL:
+            raise SystemExit(f"worker w{kill_idx} should have died by "
+                             f"SIGKILL mid-trace, exited {codes[kill_idx]}")
+        codes[kill_idx] = 0
+        killed_id = f"w{kill_idx}"
+        restart = subprocess.Popen(worker_argv(f"w{kill_idx}r"), env=env)
+        rc = restart.wait()
+        if rc:
+            raise SystemExit(f"restarted worker w{kill_idx}r exited {rc}")
+
     print(f"fleet residency after drain: "
           f"{json.dumps(rmap.snapshot(), sort_keys=True)}")
     if any(codes):
         raise SystemExit(f"worker exit codes {codes}")
+
+    if killed_id is not None:
+        rows = rmap.snapshot()["workers"]
+        if killed_id not in rows:
+            raise SystemExit(f"{killed_id} died without leaving a lease — "
+                             f"nothing proves expiry works")
+        survivors = sorted(w for w in rows if w != killed_id)
+        if survivors:
+            raise SystemExit(f"cleanly-drained workers left rows behind: "
+                             f"{survivors}")
+        # Deterministic TTL: the parent observes the dead stamp strictly
+        # in its past, so half the observed age expires exactly that row.
+        now = time.time()
+        age = now - rows[killed_id]["heartbeat"]
+        dead = rmap.expire_dead(age / 2, now=now)
+        if dead != [killed_id]:
+            raise SystemExit(f"expire_dead reaped {dead}, "
+                             f"expected [{killed_id!r}]")
+        if rmap.snapshot()["workers"]:
+            raise SystemExit("stale lease survived expire_dead")
+        print(f"lease gate: {killed_id} SIGKILLed after 1 flush, "
+              f"w{kill_idx}r re-ran its trace, stale lease "
+              f"(age {age:.2f}s) expired ✓")
     print(f"{args.workers} workers drained cleanly ✓")
 
 
@@ -141,6 +190,23 @@ def _run_encoder_mode(args) -> None:
     tag = f"[{args.worker_id}] " if args.worker_id else ""
     names = [name for name, _ in fleet]
 
+    if args.self_kill_after_flush > 0:
+        # Fault-injection hook for the fleet liveness gate: die by real
+        # SIGKILL right after the Nth flush lands — the residency row
+        # (lease) published during that flush is left stale on disk.
+        import signal
+        inner_flush = frontend.flush
+        flushes = [0]
+
+        def _flush_then_die(**kw):
+            out = inner_flush(**kw)
+            flushes[0] += 1
+            if flushes[0] >= args.self_kill_after_flush:
+                os.kill(os.getpid(), signal.SIGKILL)
+            return out
+
+        frontend.flush = _flush_then_die
+
     if spec is not None:
         reqs = replay_requests(spec, names)
         t0 = time.perf_counter()
@@ -168,6 +234,11 @@ def _run_encoder_mode(args) -> None:
             t0 = time.perf_counter()
             frontend.flush()
             step_ms.append((time.perf_counter() - t0) * 1e3)
+            if args.worker_id is not None:
+                # Explicit lease refresh between serving windows — a
+                # steady-state worker whose residency stops changing
+                # would otherwise look dead to expire_dead.
+                registry.heartbeat()
         warm = step_ms[1:] or step_ms          # first step pays the compile
         print(f"{tag}served {args.serve_steps} steps × "
               f"{args.requests_per_step} requests: "
@@ -223,6 +294,13 @@ def main() -> None:
                     help="encoder mode: serve this checked-in mixed-traffic "
                          "trace (e.g. benchmarks/traces/mixed_v1.json) "
                          "instead of random ragged traffic")
+    ap.add_argument("--kill-worker", type=int, default=-1,
+                    help="fleet liveness gate: SIGKILL this worker index "
+                         "after its first flush, restart it under a fresh "
+                         "id, and assert expire_dead reaps the stale lease")
+    ap.add_argument("--self-kill-after-flush", type=int, default=0,
+                    help="(internal worker hook) raise SIGKILL on self "
+                         "right after the Nth flush")
     from repro.launch.obscli import add_obs_args, obs_session
     add_obs_args(ap)
     args = ap.parse_args()

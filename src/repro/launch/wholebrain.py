@@ -39,6 +39,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import shutil
 import subprocess
 import sys
 import time
@@ -110,7 +111,8 @@ def phase_fit(args) -> None:
     if args.bundle:
         with BundleWriter(args.bundle, p=p, t=t, overwrite=True) as w:
             res = fit_wholebrain(store, cfg, t_block=decision.target_block,
-                                 writer=w, collect=False)
+                                 writer=w, collect=False,
+                                 journal=args.journal or None)
             report = EncodingReport(
                 weights=None, best_lambda=res.best_lambda,
                 cv_scores=res.cv_scores, lambdas=cfg.lambdas,
@@ -212,6 +214,110 @@ def phase_ab(args) -> None:
              "roofline": roof})
 
 
+def phase_crashfit(args) -> None:
+    """One blocked fit at crash-gate scale, journalled and optionally
+    killed (``--kill-after-block``) or fed injected transient read
+    faults (``--inject-read-faults``).
+
+    Three invocations compose the parent's crash-resume gate: an
+    uninterrupted reference, a child that ``os._exit``\\ s right after
+    journalling block N (modelling SIGKILL — no cleanup handlers run),
+    and a resume against the same journal that must replay blocks
+    0..N and re-stream only the rest.  The child reports λ plus the
+    resume/retry telemetry; bit-identity of the weight shards is the
+    PARENT's check (raw ``.npy`` bytes across the two bundles).
+    """
+    import jax
+    import numpy as np
+
+    from repro import obs
+    from repro.data import fmri
+    from repro.data.store import MANIFEST_NAME, RunStore
+    from repro.encoding.config import EncoderConfig
+    from repro.encoding.dispatch import resolve
+    from repro.encoding.estimator import EncodingReport
+    from repro.wholebrain import BundleWriter, fit_wholebrain
+    from repro.wholebrain.solver import journal_signature
+
+    if not os.path.exists(os.path.join(args.store, MANIFEST_NAME)):
+        spec = fmri.SubjectSpec(n=args.n, p=_P, t=args.t)
+        RunStore.create(args.store, n_folds=args.n_folds)\
+            .materialize_synthetic(spec, rows_per_run=args.rows_per_run)
+
+    fault_policy = None
+    injector = None
+    if args.inject_read_faults:
+        from repro.resilience import faultsim
+        from repro.resilience.policy import FaultPolicy
+        # Virtual time: retries are deterministic and the child never
+        # actually sleeps — backoff delays only accumulate in a counter.
+        fault_policy = FaultPolicy(max_attempts=3, seed=7).with_virtual_time()
+        injector = faultsim.FaultInjector(seed=7)
+        injector.plan("store.mmap", 1)        # first fold-matrix mmap
+        injector.plan("store.chunk", 2)       # mid block 0's stream
+        injector.plan("store.chunk", 7)       # a later block's re-stream
+    store = RunStore.open(args.store, fault_policy=fault_policy)
+    if injector is not None:
+        from repro.resilience import faultsim
+        store = faultsim.wrap_store(store, injector)
+
+    cfg = EncoderConfig(n_folds=args.n_folds, chunk_rows=args.chunk_rows,
+                        target_block=args.t_block)
+    journal = args.journal or None
+    if journal is not None and args.kill_after_block >= 0:
+        from repro.resilience import faultsim
+        from repro.resilience.journal import FitJournal
+        sig = journal_signature(store, cfg, t_block=args.t_block)
+        journal = faultsim.KillAfterBlock(
+            FitJournal.attach(journal, sig), args.kill_after_block)
+
+    n, p, t = store.shape
+    decision = resolve(cfg, n, p, t, jax.device_count())
+    t0 = time.time()
+    with BundleWriter(args.bundle, p=p, t=t, overwrite=True) as w:
+        res = fit_wholebrain(store, cfg, t_block=args.t_block,
+                             writer=w, collect=False, journal=journal)
+        report = EncodingReport(
+            weights=None, best_lambda=res.best_lambda,
+            cv_scores=res.cv_scores, lambdas=cfg.lambdas,
+            decision=decision)
+        w.commit(config=cfg, report=report,
+                 lambda_by_target=res.lambda_by_target,
+                 provenance={"source": "launch.wholebrain:crashfit"})
+    tel = res.telemetry
+    # Fixed-shape contract survives both resume and injected faults: the
+    # column-block update compiles exactly once; the Gram accumulation
+    # compiles once on a fresh fit and ZERO times on resume (the X-stats
+    # pass is replayed from the journal, never re-run).
+    want_gram = 0 if tel["resumed"] else 1
+    if (tel["gram_compile_delta"] != want_gram
+            or tel["colblock_compile_delta"] != 1):
+        raise SystemExit(
+            f"fixed-shape contract broken under "
+            f"{'resume' if tel['resumed'] else 'faults/clean run'}: gram "
+            f"compiled {tel['gram_compile_delta']}× (want {want_gram}), "
+            f"column-block update {tel['colblock_compile_delta']}×")
+    counters = obs.snapshot().get("counters", {})
+    retries = int(sum(v for k, v in counters.items()
+                      if k.startswith("io_retries")))
+    giveups = int(sum(v for k, v in counters.items()
+                      if k.startswith("io_giveups")))
+    if args.inject_read_faults and giveups:
+        raise SystemExit(f"injected transient faults escalated to "
+                         f"{giveups} give-ups")
+    _result({"phase": "crashfit", "wall_s": round(time.time() - t0, 2),
+             "n_blocks": tel["n_blocks"],
+             "resumed": tel["resumed"],
+             "blocks_replayed": tel["blocks_replayed"],
+             "blocks_streamed": tel["blocks_streamed"],
+             "row_passes_x": tel["row_passes_x"],
+             "bytes_staged": tel["bytes_staged"],
+             "gram_compiles": tel["gram_compile_delta"],
+             "colblock_compiles": tel["colblock_compile_delta"],
+             "io_retries": retries, "io_giveups": giveups,
+             "best_lambda": float(np.asarray(res.best_lambda)[0])})
+
+
 def phase_serve(args) -> None:
     import numpy as np
 
@@ -264,7 +370,7 @@ def phase_serve(args) -> None:
              "compile_count": svc.compile_count})
 
 
-def _spawn(phase: str, extra: list[str]) -> dict:
+def _spawn(phase: str, extra: list[str], *, expect_code: int = 0) -> dict:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
@@ -273,12 +379,107 @@ def _spawn(phase: str, extra: list[str]) -> dict:
         [sys.executable, "-m", "repro.launch.wholebrain",
          "--phase", phase] + extra,
         capture_output=True, text=True, env=env)
-    if proc.returncode != 0:
-        raise SystemExit(f"{phase} child failed:\n{proc.stdout}\n"
+    if proc.returncode != expect_code:
+        raise SystemExit(f"{phase} child exited {proc.returncode} "
+                         f"(expected {expect_code}):\n{proc.stdout}\n"
                          f"{proc.stderr}")
+    if expect_code != 0:
+        return {}            # a killed child never prints a result line
     line = [ln for ln in proc.stdout.splitlines()
             if ln.startswith("WHOLEBRAIN_RESULT ")][-1]
     return json.loads(line[len("WHOLEBRAIN_RESULT "):])
+
+
+_CRASH_EXIT = 42             # KillAfterBlock's os._exit code
+
+
+def run_crash_gate(workdir, *, n_folds: int, rows_per_run: int,
+                   smoke: bool, kill_after_block: int, obs_extra) -> dict:
+    """The crash-resume gate: reference fit → killed fit → resumed fit.
+
+    Asserts the resume replayed exactly the journalled blocks, streamed
+    only the remainder (strictly fewer bytes staged than the reference),
+    selected a bit-equal λ, and wrote weight shards whose raw ``.npy``
+    bytes match the uninterrupted bundle's.  A fourth fit with injected
+    transient read faults must retry through them with identical λ and
+    unchanged compile counts.
+    """
+    import filecmp
+
+    cg_n, cg_t, cg_tb, cg_chunk = ((128, 512, 128, 64) if smoke
+                                   else (256, 1024, 256, 64))
+    store = os.path.join(workdir, f"crash_subject_{cg_n}x{_P}x{cg_t}")
+    base = ["--store", store, "--n", str(cg_n), "--t", str(cg_t),
+            "--t-block", str(cg_tb), "--n-folds", str(n_folds),
+            "--chunk-rows", str(cg_chunk),
+            "--rows-per-run", str(rows_per_run)]
+    bundle_ref = os.path.join(workdir, "crash_bundle_ref")
+    bundle_res = os.path.join(workdir, "crash_bundle_resumed")
+    jdir = os.path.join(workdir, "crash_journal")
+    # Idempotent on a reused workdir: a previous run's artifacts would
+    # otherwise spoof the "killed child published nothing" assertion.
+    for stale in (bundle_ref, bundle_res, jdir):
+        if os.path.isdir(stale):
+            shutil.rmtree(stale)
+
+    ref = _spawn("crashfit", base + ["--bundle", bundle_ref]
+                 + obs_extra("crashref"))
+    n_blocks = ref["n_blocks"]
+    if not 0 <= kill_after_block < n_blocks - 1:
+        raise SystemExit(f"--kill-after-block {kill_after_block} leaves "
+                         f"nothing to resume ({n_blocks} blocks)")
+    _spawn("crashfit", base + [
+        "--bundle", bundle_res, "--journal", jdir,
+        "--kill-after-block", str(kill_after_block)],
+        expect_code=_CRASH_EXIT)
+    if not os.path.isdir(jdir):
+        raise SystemExit("killed child left no journal to resume from")
+    if os.path.isdir(bundle_res):
+        raise SystemExit("killed child published a bundle — the atomic "
+                         "commit boundary leaked")
+    res = _spawn("crashfit", base + ["--bundle", bundle_res,
+                                     "--journal", jdir]
+                 + obs_extra("crashresume"))
+
+    want_replayed = kill_after_block + 1
+    if (not res["resumed"] or res["blocks_replayed"] != want_replayed
+            or res["blocks_streamed"] != n_blocks - want_replayed):
+        raise SystemExit(f"resume accounting wrong: {res} (expected "
+                         f"{want_replayed} replayed of {n_blocks})")
+    if res["bytes_staged"] >= ref["bytes_staged"]:
+        raise SystemExit(f"resume re-streamed as much as a fresh fit "
+                         f"({res['bytes_staged']} vs "
+                         f"{ref['bytes_staged']} bytes)")
+    if res["best_lambda"] != ref["best_lambda"]:
+        raise SystemExit(f"λ diverged across crash-resume: "
+                         f"{res['best_lambda']} vs {ref['best_lambda']}")
+    step_ref = os.path.join(bundle_ref, "step_0")
+    step_res = os.path.join(bundle_res, "step_0")
+    shards = sorted(f for f in os.listdir(step_ref) if f.startswith("W__"))
+    if not shards or shards != sorted(
+            f for f in os.listdir(step_res) if f.startswith("W__")):
+        raise SystemExit("resumed bundle's weight shard set differs")
+    for fname in shards:
+        if not filecmp.cmp(os.path.join(step_ref, fname),
+                           os.path.join(step_res, fname), shallow=False):
+            raise SystemExit(f"weight shard {fname} not bit-identical "
+                             f"after crash-resume")
+    if os.path.isdir(jdir):
+        raise SystemExit("journal survived a successful resume")
+
+    faulty = _spawn("crashfit", base + [
+        "--bundle", os.path.join(workdir, "crash_bundle_faulty"),
+        "--inject-read-faults"] + obs_extra("crashfaulty"))
+    if faulty["best_lambda"] != ref["best_lambda"]:
+        raise SystemExit(f"λ diverged under injected read faults: "
+                         f"{faulty['best_lambda']} vs "
+                         f"{ref['best_lambda']}")
+    if faulty["io_retries"] < 3 or faulty["io_giveups"]:
+        raise SystemExit(f"fault injection did not exercise the retry "
+                         f"path: {faulty}")
+    return {"kill_after_block": kill_after_block, "n_blocks": n_blocks,
+            "w_shards_bitwise": len(shards), "ref": ref, "resumed": res,
+            "faulty": faulty}
 
 
 def main() -> None:
@@ -301,6 +502,18 @@ def main() -> None:
                     help="CI shape: downscaled n/folds, FULL-SCALE t")
     ap.add_argument("--workdir", default=None)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--journal", default=None,
+                    help="progress-journal dir: makes the fit resumable "
+                         "(repro.resilience.FitJournal)")
+    ap.add_argument("--kill-after-block", type=int, default=-1,
+                    help="crash gate: the killed child os._exits right "
+                         "after journalling this block index (parent "
+                         "default: block 1)")
+    ap.add_argument("--inject-read-faults", action="store_true",
+                    help="(crashfit child) seeded transient faults on "
+                         "chunk reads + fold-matrix mmaps")
+    ap.add_argument("--crash-only", action="store_true",
+                    help="run ONLY the crash-resume gate (CI faults lane)")
     from repro.launch.obscli import add_obs_args, obs_session
     add_obs_args(ap)
     args = ap.parse_args()
@@ -308,7 +521,8 @@ def main() -> None:
     if args.phase:                                 # child mode
         with obs_session(args):
             {"materialise": phase_materialise, "fit": phase_fit,
-             "ab": phase_ab, "serve": phase_serve}[args.phase](args)
+             "ab": phase_ab, "serve": phase_serve,
+             "crashfit": phase_crashfit}[args.phase](args)
         return
 
     import tempfile
@@ -322,9 +536,15 @@ def main() -> None:
     store = os.path.join(workdir, f"subject_{n}x{_P}x{args.t}")
     bundle = os.path.join(workdir, "bundle")
     if args.out is None:
+        # Smoke runs with an explicit workdir keep their artifact there
+        # (CI lanes read it from $RUNNER_TEMP); real runs land at the root.
+        out_root = workdir if args.smoke and args.workdir else REPO
         args.out = os.path.join(
-            REPO, "BENCH_wholebrain_smoke.json" if args.smoke
+            out_root, "BENCH_wholebrain_crash.json" if args.crash_only
+            else "BENCH_wholebrain_smoke.json" if args.smoke
             else "BENCH_wholebrain.json")
+
+    kab = args.kill_after_block if args.kill_after_block >= 0 else 1
 
     def obs_extra(tag: str) -> list[str]:
         # Phase children own the tracer: fan the parent's obs flags out
@@ -336,6 +556,24 @@ def main() -> None:
                 root, ext = os.path.splitext(path)
                 extra += [flag, f"{root}.{tag}{ext}"]
         return extra
+
+    if args.crash_only:
+        crash = run_crash_gate(workdir, n_folds=n_folds,
+                               rows_per_run=rows_per_run, smoke=args.smoke,
+                               kill_after_block=kab, obs_extra=obs_extra)
+        print(f"[wholebrain] crash-resume: killed after block "
+              f"{crash['kill_after_block']}, resumed "
+              f"{crash['resumed']['blocks_replayed']} replayed + "
+              f"{crash['resumed']['blocks_streamed']} streamed of "
+              f"{crash['n_blocks']}, {crash['w_shards_bitwise']} W shards "
+              f"bit-identical; faulty run retried "
+              f"{crash['faulty']['io_retries']}× with λ parity", flush=True)
+        with open(args.out, "w") as f:
+            json.dump({"smoke": args.smoke, "crash_resume": crash}, f,
+                      indent=2)
+            f.write("\n")
+        print(f"# wrote {args.out}")
+        return
 
     print(f"[wholebrain] materialising {n}x{_P}x{args.t} subject ...",
           flush=True)
@@ -385,6 +623,17 @@ def main() -> None:
           f"{ab['fused_s']}s, λ match, x passes={ab['row_passes_x']}",
           flush=True)
 
+    crash = run_crash_gate(workdir, n_folds=n_folds,
+                           rows_per_run=rows_per_run, smoke=args.smoke,
+                           kill_after_block=kab, obs_extra=obs_extra)
+    print(f"[wholebrain] crash-resume: killed after block "
+          f"{crash['kill_after_block']}, resumed "
+          f"{crash['resumed']['blocks_replayed']} replayed + "
+          f"{crash['resumed']['blocks_streamed']} streamed of "
+          f"{crash['n_blocks']}, {crash['w_shards_bitwise']} W shards "
+          f"bit-identical; faulty run retried "
+          f"{crash['faulty']['io_retries']}× with λ parity", flush=True)
+
     serve = _spawn("serve", ["--bundle", bundle,
                              "--cap-mb", str(args.cap_mb)]
                    + obs_extra("serve"))
@@ -396,7 +645,8 @@ def main() -> None:
     payload = {"n": n, "p": _P, "t": args.t, "n_folds": n_folds,
                "chunk_rows": chunk_rows, "rss_cap_mb": args.cap_mb,
                "smoke": args.smoke, "materialise": mat,
-               "fit_vs_t_block": fits, "fused_ab": ab, "serve": serve}
+               "fit_vs_t_block": fits, "fused_ab": ab,
+               "crash_resume": crash, "serve": serve}
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")

@@ -66,6 +66,19 @@ instrument                            type       producer
 ``registry_hits`` / ``registry_loads``  counter  bundle cache hits / cold loads
 ``registry_evictions``                counter    LRU + fault evictions
 ``admitted_rows`` / ``rejected_requests``  counter  fleet admission outcomes
+``io_retries{op=...}``                counter    transient faults retried by
+                                                 ``resilience.retry_call`` (ops:
+                                                 ``store.mmap``, ``prefetch.read``,
+                                                 ``registry.load_encoder`` /
+                                                 ``load_shard`` / ``load_std``)
+``io_giveups{op=...}``                counter    retry budget exhausted — the original
+                                                 error re-raised (typed at the caller)
+``staging_reaped``                    counter    stale staging orphans swept by
+                                                 ``resilience.reap_stale_staging``
+``lease_expirations``                 counter    dead-worker leases reaped by
+                                                 ``ResidencyMap.expire_dead``
+``requests_replayed``                 counter    requests re-admitted after a
+                                                 ``WorkerLost`` flush
 ``rss_bytes``                         gauge      resident set (background poller;
                                                  ``peak`` = observed high-water)
 ====================================  =========  ==========================================

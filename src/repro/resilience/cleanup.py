@@ -1,0 +1,75 @@
+"""Orphaned-staging reaper: sweep up what crashed writers left behind.
+
+Every atomic-rename writer in the repo stages under a well-known
+temporary name next to its target (``.tmpbundle_*`` for
+``BundleWriter``, ``*.tmp-<pid>`` for shard/array writes,
+``manifest.json.tmp`` for the store manifest, ``.old_*`` for replaced
+bundles).  A process killed mid-write leaves that staging entry behind;
+it is never referenced by any manifest, so it is garbage — but silently
+accumulating garbage fills disks and masks real corruption.
+
+:func:`reap_stale_staging` deletes such entries **age-gated**: only
+entries whose mtime is older than ``max_age_s`` go (a *live* concurrent
+writer's staging dir is younger than that), and every reaped entry is
+counted in the ``staging_reaped`` obs counter plus an
+``obs.instant("cleanup.reap")`` marker, so a bench or CI run can assert
+how much the sweep collected.
+"""
+from __future__ import annotations
+
+import fnmatch
+import os
+import shutil
+import time
+
+from repro import obs
+
+__all__ = ["STAGING_PATTERNS", "reap_stale_staging"]
+
+#: glob patterns every atomic-rename writer in the repo stages under.
+STAGING_PATTERNS = (
+    ".tmpbundle_*",        # BundleWriter staging dirs
+    ".tmpresidency_*",     # ResidencyMap atomic-JSON staging
+    "*.tmp-*",             # shard/array tmp-then-rename files
+    "manifest.json.tmp",   # RunStore manifest staging
+    ".old_*",              # replaced-bundle graveyard dirs
+)
+
+
+def reap_stale_staging(root: str, *, max_age_s: float = 3600.0,
+                       patterns: tuple[str, ...] = STAGING_PATTERNS,
+                       now: float | None = None) -> list[str]:
+    """Delete stale staging entries directly under ``root``.
+
+    Returns the (possibly empty) list of reaped entry names.  Missing
+    ``root`` is a no-op; entries that vanish mid-sweep (a concurrent
+    reaper) are skipped silently — the sweep is best-effort and never
+    raises for reapable garbage.
+    """
+    if not os.path.isdir(root):
+        return []
+    if now is None:
+        now = time.time()
+    reaped: list[str] = []
+    for name in sorted(os.listdir(root)):
+        if not any(fnmatch.fnmatch(name, pat) for pat in patterns):
+            continue
+        path = os.path.join(root, name)
+        try:
+            age = now - os.lstat(path).st_mtime
+        except OSError:
+            continue                        # vanished mid-sweep
+        if age < max_age_s:
+            continue                        # possibly a live writer
+        try:
+            if os.path.isdir(path) and not os.path.islink(path):
+                shutil.rmtree(path, ignore_errors=True)
+            else:
+                os.unlink(path)
+        except OSError:
+            continue
+        reaped.append(name)
+        obs.instant("cleanup.reap", path=name, age_s=round(age, 1))
+    if reaped:
+        obs.get_metrics().counter("staging_reaped").inc(len(reaped))
+    return reaped

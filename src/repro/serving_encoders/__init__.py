@@ -53,7 +53,8 @@ from repro.serving_encoders.bundle import (  # noqa: F401
     BundleError, EncoderBundle, save_bundle,
 )
 from repro.serving_encoders.fleet import (  # noqa: F401
-    RESIDENCY_MAP, FleetFrontend, FleetRegistry, ResidencyMap,
+    RESIDENCY_MAP, FleetError, FleetFrontend, FleetRegistry, ResidencyMap,
+    WorkerLost,
 )
 from repro.serving_encoders.registry import (  # noqa: F401
     EncoderRegistry, LoadedEncoder, RegistryError, bundle_resident_bytes,

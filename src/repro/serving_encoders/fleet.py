@@ -36,6 +36,7 @@ import dataclasses
 import json
 import os
 import tempfile
+import time
 from typing import Sequence
 
 import numpy as np
@@ -49,6 +50,16 @@ from repro.serving_encoders.service import (
 RESIDENCY_MAP = "residency.json"
 
 
+class FleetError(RuntimeError):
+    """Fleet coordination fault (lock-acquire timeout, lease violation)."""
+
+
+class WorkerLost(FleetError):
+    """The worker serving a batch died mid-flight.  Raised by transports /
+    the fault-injection harness; ``FleetFrontend.flush`` re-admits the
+    batch instead of dropping it, and ``replay`` retries the drain."""
+
+
 class ResidencyMap:
     """File-lock-guarded on-disk residency map shared by fleet workers.
 
@@ -56,17 +67,34 @@ class ResidencyMap:
 
         {"workers": {"<worker>": {"models": {"<model>": bytes},
                                   "resident_bytes": int,
-                                  "loads": int, "evictions": int}}}
+                                  "loads": int, "evictions": int,
+                                  "heartbeat": float}}}
 
     Every mutation runs read-modify-write under an exclusive ``flock`` on
     ``<path>.lock`` and lands via tmp + ``os.replace`` — concurrent
     workers serialize on the lock and a crashed writer never leaves a
     torn map.  The map is *bookkeeping only*: losing it costs telemetry,
     never correctness.
+
+    **Leases, not assertions.**  Each worker row is heartbeat-stamped
+    (``publish``/``heartbeat`` refresh the stamp); a row whose stamp is
+    older than a TTL is a DEAD worker's stale claim — ``expire_dead``
+    reaps such rows and ``holders(ttl_s=...)`` ignores them, so routing
+    never trusts a holder that stopped proving it is alive.
+
+    **Bounded lock wait.**  A worker killed while holding the fcntl lock
+    releases it with its fd (the OS guarantees that), but a *wedged*
+    holder would block every peer forever — ``lock_timeout_s`` bounds the
+    acquire with a typed :class:`FleetError` instead.  ``clock``/``sleep``
+    are injectable so lease/lock tests run on virtual time.
     """
 
-    def __init__(self, path: str):
+    def __init__(self, path: str, *, lock_timeout_s: float = 30.0,
+                 clock=time.time, sleep=time.sleep):
         self.path = path
+        self.lock_timeout_s = lock_timeout_s
+        self._clock = clock
+        self._sleep = sleep
         self._lockpath = path + ".lock"
         os.makedirs(os.path.dirname(os.path.abspath(path)) or ".",
                     exist_ok=True)
@@ -74,12 +102,28 @@ class ResidencyMap:
     def _locked(self):
         import fcntl
 
+        timeout = self.lock_timeout_s
+        clock = self._clock
+        sleep = self._sleep
+        lockpath = self._lockpath
+
         class _Lock:
             def __enter__(_self):
-                _self.fd = os.open(self._lockpath,
-                                   os.O_CREAT | os.O_RDWR, 0o644)
-                fcntl.flock(_self.fd, fcntl.LOCK_EX)
-                return _self.fd
+                _self.fd = os.open(lockpath, os.O_CREAT | os.O_RDWR, 0o644)
+                deadline = clock() + timeout
+                while True:
+                    try:
+                        fcntl.flock(_self.fd, fcntl.LOCK_EX | fcntl.LOCK_NB)
+                        return _self.fd
+                    except OSError:
+                        if clock() >= deadline:
+                            os.close(_self.fd)
+                            obs.instant("fleet.lock_timeout", path=lockpath)
+                            raise FleetError(
+                                f"could not acquire residency lock "
+                                f"{lockpath} within {timeout}s — a peer "
+                                f"worker is wedged while holding it")
+                        sleep(0.01)
 
             def __exit__(_self, *exc):
                 import fcntl as _f
@@ -117,15 +161,51 @@ class ResidencyMap:
 
     def publish(self, worker: str, models: dict, *, loads: int = 0,
                 evictions: int = 0) -> None:
-        """Replace ``worker``'s residency row with ``{model: bytes}``."""
+        """Replace ``worker``'s residency row with ``{model: bytes}``.
+        The row is heartbeat-stamped: publishing IS proof of life."""
         with self._locked():
             data = self._read()
             data["workers"][worker] = {
                 "models": {m: int(b) for m, b in sorted(models.items())},
                 "resident_bytes": int(sum(models.values())),
                 "loads": int(loads), "evictions": int(evictions),
+                "heartbeat": float(self._clock()),
             }
             self._write(data)
+
+    def heartbeat(self, worker: str) -> None:
+        """Refresh ``worker``'s lease stamp without touching its models.
+        A worker with no row yet gets an empty one — heartbeating before
+        the first load still claims the lease."""
+        with self._locked():
+            data = self._read()
+            row = data["workers"].setdefault(
+                worker, {"models": {}, "resident_bytes": 0,
+                         "loads": 0, "evictions": 0})
+            row["heartbeat"] = float(self._clock())
+            self._write(data)
+
+    def expire_dead(self, ttl_s: float, *, now: float | None = None
+                    ) -> list[str]:
+        """Reap every worker row whose heartbeat is older than ``ttl_s``
+        (returned sorted).  Rows written by pre-lease code (no stamp)
+        count as dead.  Each expiry bumps the ``lease_expirations``
+        counter — a restarted fleet can assert the reap happened."""
+        if now is None:
+            now = self._clock()
+        with self._locked():
+            data = self._read()
+            dead = sorted(
+                w for w, row in data["workers"].items()
+                if now - row.get("heartbeat", float("-inf")) > ttl_s)
+            for w in dead:
+                del data["workers"][w]
+            if dead:
+                self._write(data)
+        for w in dead:
+            obs.get_metrics().counter("lease_expirations").inc()
+            obs.instant("fleet.lease_expired", worker=w)
+        return dead
 
     def retire(self, worker: str) -> None:
         """Drop a worker's row (clean shutdown)."""
@@ -139,12 +219,19 @@ class ResidencyMap:
         reads see either the old or the new atomic file)."""
         return self._read()
 
-    def holders(self, model: str) -> list[str]:
+    def holders(self, model: str, *, ttl_s: float | None = None
+                ) -> list[str]:
         """Workers currently holding ``model`` resident — the routing
-        hint: their page cache (and device copy) is warm."""
+        hint: their page cache (and device copy) is warm.  With
+        ``ttl_s``, only workers whose lease is fresh count — a dead
+        holder's stale claim is never routed to."""
         snap = self._read()
-        return sorted(w for w, row in snap["workers"].items()
-                      if model in row.get("models", {}))
+        now = self._clock()
+        return sorted(
+            w for w, row in snap["workers"].items()
+            if model in row.get("models", {})
+            and (ttl_s is None
+                 or now - row.get("heartbeat", float("-inf")) <= ttl_s))
 
     def fleet_resident_bytes(self) -> int:
         snap = self._read()
@@ -202,6 +289,12 @@ class FleetRegistry(EncoderRegistry):
             self._publish()
         return hit
 
+    def heartbeat(self) -> None:
+        """Refresh this worker's lease (call between serving windows —
+        every publish also stamps it, so only an *idle* worker needs
+        explicit heartbeats to keep its claims routable)."""
+        self.residency_map.heartbeat(self.worker_id)
+
     def close(self) -> None:
         """Retire this worker's row from the shared map."""
         self.residency_map.retire(self.worker_id)
@@ -242,6 +335,7 @@ class FleetFrontend:
         self._pending_rows = 0
         self.admitted = 0
         self.rejected = 0
+        self.replayed = 0    # requests re-admitted after a lost worker
 
     @property
     def pending_rows(self) -> int:
@@ -272,15 +366,42 @@ class FleetFrontend:
 
     def flush(self, *, wave_rows: int | None = None) -> list[PredictResult]:
         """Serve everything admitted since the last flush (one mixed-wave
-        batch; results in submission order) and empty the queue."""
+        batch; results in submission order) and empty the queue.
+
+        If the worker dies with the batch in flight (:class:`WorkerLost`),
+        the batch is RE-ADMITTED — the queue is restored exactly as it
+        was, ``requests_replayed`` counts the survivors, and the error
+        propagates so the caller can retry the flush (``replay`` does).
+        """
         if not self._pending:
             return []
-        batch = [p.request for p in self._pending]
+        pending = self._pending
+        batch = [p.request for p in pending]
         rows = self._pending_rows
         self._pending = []
         self._pending_rows = 0
         with obs.span("fleet.flush", requests=len(batch), rows=rows):
-            return self.service.serve(batch, wave_rows=wave_rows)
+            try:
+                return self.service.serve(batch, wave_rows=wave_rows)
+            except WorkerLost:
+                # The requests died with the worker — put them back in
+                # admission order instead of dropping them on the floor.
+                self._pending = pending
+                self._pending_rows = rows
+                self.replayed += len(batch)
+                obs.get_metrics().counter("requests_replayed").inc(len(batch))
+                obs.instant("fleet.replay", requests=len(batch), rows=rows)
+                raise
+
+    def replay(self, requests: Sequence[PredictRequest], *,
+               wave_rows: int | None = None, max_flush_attempts: int = 3
+               ) -> tuple[list[PredictResult | None], list[Exception]]:
+        """Drain a traffic sequence through bounded admission, surviving
+        lost workers: requests whose flush dies with a worker stay
+        admitted and the flush is retried (up to ``max_flush_attempts``
+        per window) — see the module-level :func:`replay`."""
+        return replay(self, requests, wave_rows=wave_rows,
+                      max_flush_attempts=max_flush_attempts)
 
 
 def np_rows(request: PredictRequest) -> int:
@@ -288,18 +409,29 @@ def np_rows(request: PredictRequest) -> int:
 
 
 def replay(frontend: FleetFrontend, requests: Sequence[PredictRequest], *,
-           wave_rows: int | None = None
+           wave_rows: int | None = None, max_flush_attempts: int = 3
            ) -> tuple[list[PredictResult | None], list[Exception]]:
     """Replay a traffic sequence through bounded admission: submit until
     backpressure, flush, resubmit — the drain loop every harness uses.
-    Returns (results in arrival order — ``None`` only if a request was
-    rejected twice, i.e. it alone overflows the queue — , rejections)."""
+    A flush that dies with its worker (:class:`WorkerLost`) leaves the
+    window re-admitted in the frontend (see ``flush``); the drain retries
+    it up to ``max_flush_attempts`` times before giving up, so a worker
+    lost mid-trace costs a retry, not the requests.  Returns (results in
+    arrival order — ``None`` only if a request was rejected twice, i.e.
+    it alone overflows the queue — , rejections)."""
     results: list[PredictResult | None] = [None] * len(requests)
     rejections: list[Exception] = []
     window: list[int] = []
 
     def drain():
-        for i, res in zip(window, frontend.flush(wave_rows=wave_rows)):
+        for attempt in range(max_flush_attempts):
+            try:
+                flushed = frontend.flush(wave_rows=wave_rows)
+                break
+            except WorkerLost:
+                if attempt + 1 >= max_flush_attempts:
+                    raise
+        for i, res in zip(window, flushed):
             results[i] = res
         window.clear()
 
@@ -320,4 +452,4 @@ def replay(frontend: FleetFrontend, requests: Sequence[PredictRequest], *,
 
 
 __all__ = ["FleetFrontend", "FleetRegistry", "ResidencyMap", "RESIDENCY_MAP",
-           "replay"]
+           "FleetError", "WorkerLost", "replay"]

@@ -42,6 +42,7 @@ from repro.checkpoint import io as ckpt_io
 from repro.encoding.dispatch import (
     estimated_resident_bytes, mixed_wave_scoring_bytes,
 )
+from repro.resilience.policy import FaultPolicy, retry_call
 from repro.serving_encoders.bundle import BundleError, EncoderBundle
 
 
@@ -164,11 +165,16 @@ class EncoderRegistry:
 
     def __init__(self, *, device_memory_budget: int | None = None,
                  wave_rows: int = 128, target_shards: int | None = None,
-                 mmap_weights: bool = True):
+                 mmap_weights: bool = True,
+                 fault_policy: FaultPolicy | None = None):
         self.device_memory_budget = device_memory_budget
         self.wave_rows = wave_rows
         self.target_shards = target_shards
         self.mmap_weights = mmap_weights
+        #: transient-fault retry for bundle/shard materialisation; retries
+        #: and give-ups surface as ``io_retries{op=registry.*}`` counters,
+        #: exhausted retries still raise the typed ``BundleError``.
+        self.fault_policy = fault_policy
         self._bundles: dict[str, EncoderBundle] = {}
         self._loaded: "OrderedDict[str, LoadedEncoder]" = OrderedDict()
         # Shard-granular residency pool (whole-brain serving): keyed by
@@ -321,9 +327,11 @@ class EncoderRegistry:
             t0 = time.perf_counter()
             with obs.span("registry.load", model=name, bytes=need):
                 try:
-                    encoder = bundle.load_encoder(
-                        target_shards=self.target_shards,
-                        mmap=self.mmap_weights)
+                    encoder = retry_call(
+                        lambda: bundle.load_encoder(
+                            target_shards=self.target_shards,
+                            mmap=self.mmap_weights),
+                        self.fault_policy, "registry.load_encoder")
                 except BundleError:
                     raise
                 except (ckpt_io.CheckpointError, OSError, ValueError) as e:
@@ -444,9 +452,12 @@ class EncoderRegistry:
                 with obs.span("registry.load", model=name, shard=i,
                               bytes=need):
                     try:
-                        W = jnp.asarray(
-                            bundle.load_weight_shard(i, mmap=True))
-                        mu_x, sd_x, mu_y, sd_y = self._std_host_arrays(name)
+                        W = jnp.asarray(retry_call(
+                            lambda: bundle.load_weight_shard(i, mmap=True),
+                            self.fault_policy, "registry.load_shard"))
+                        mu_x, sd_x, mu_y, sd_y = retry_call(
+                            lambda: self._std_host_arrays(name),
+                            self.fault_policy, "registry.load_std")
                     except BundleError:
                         raise
                     except (ckpt_io.CheckpointError, OSError,

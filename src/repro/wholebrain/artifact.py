@@ -30,6 +30,7 @@ import tempfile
 import numpy as np
 
 from repro.checkpoint import io as ckpt_io
+from repro.resilience import cleanup
 from repro.serving_encoders.bundle import (
     BUNDLE_MANIFEST, _BUNDLE_VERSION, BundleError, _shard_key, config_to_dict,
 )
@@ -62,6 +63,10 @@ class BundleWriter:
         self.overwrite = overwrite
         parent = os.path.dirname(os.path.abspath(bundle_dir)) or "."
         os.makedirs(parent, exist_ok=True)
+        # A writer killed before commit leaves its hidden staging dir
+        # behind; sweep stale ones (age-gated — a CONCURRENT writer's
+        # staging is younger) before adding our own.
+        cleanup.reap_stale_staging(parent)
         self._tmp = tempfile.mkdtemp(dir=parent, prefix=".tmpbundle_")
         self._step = os.path.join(self._tmp, "step_0")
         os.makedirs(self._step)

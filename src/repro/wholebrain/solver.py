@@ -89,22 +89,6 @@ def _stream_stats(agg: dict, stream) -> None:
     agg["compute_stall_s"] += d["compute_stall_s"]
 
 
-def _accumulate(acc, store, chunk_rows: int, col_range, cfg: EncoderConfig,
-                agg: dict):
-    """One prefetched row pass over ``store`` restricted to ``col_range``."""
-    stream = store.iter_chunks(chunk_rows, col_range=col_range,
-                               prefetch=cfg.prefetch,
-                               prefetch_depth=cfg.prefetch_depth)
-    try:
-        for Xc, Yc in stream:
-            acc.update(Xc, Yc)
-    finally:
-        if hasattr(stream, "close"):
-            stream.close()
-    _stream_stats(agg, stream)
-    return acc.finalize()
-
-
 class _XChunkCache:
     """Chunk-granular host cache of the ``X`` rows seen in one stream.
 
@@ -150,6 +134,28 @@ class _XChunkCache:
         return budget is None or n * p * itemsize <= budget // 4
 
 
+def journal_signature(store, cfg: EncoderConfig | None = None, *,
+                      t_block: int | None = None,
+                      lambda_mode: str = "global",
+                      chunk_rows: int | None = None) -> dict:
+    """The ``FitJournal`` signature ``fit_wholebrain`` would compute for
+    these arguments — every input that shapes the bits of λ/W.  Callers
+    that attach a journal themselves (e.g. to wrap it with the
+    fault-injection harness's ``KillAfterBlock``) MUST build it from
+    here so the solver accepts the attached journal."""
+    cfg = cfg or EncoderConfig()
+    n, p, t = store.shape
+    t_block = t_block or getattr(cfg, "target_block", None)
+    return {
+        "n": int(n), "p": int(p), "t": int(t), "k": int(cfg.n_folds),
+        "t_block": int(t_block), "lambda_mode": lambda_mode,
+        "chunk_rows": int(min(chunk_rows or cfg.chunk_rows, n)),
+        "lambdas": [float(l) for l in cfg.lambdas],
+        "scoring": cfg.scoring,
+        "use_pallas": bool(cfg.resolve_use_pallas()),
+    }
+
+
 def _check_target_scale(bstats, n_total: int, lo: int, hi: int) -> None:
     """The row tier's un-standardized-target refusal, per block (see
     ``BrainEncoder._fit_from_stats``): statistics-based CV scoring loses
@@ -170,7 +176,8 @@ def fit_wholebrain(store, cfg: EncoderConfig | None = None, *,
                    lambda_mode: str = "global",
                    chunk_rows: int | None = None,
                    writer=None, collect: bool | None = None,
-                   scratch_dir: str | None = None) -> WholebrainResult:
+                   scratch_dir: str | None = None,
+                   journal=None) -> WholebrainResult:
     """Column-blocked streaming CV ridge over a ``RunStore``.
 
     ``writer`` (any object with ``append(W_block)``, e.g.
@@ -180,6 +187,15 @@ def fit_wholebrain(store, cfg: EncoderConfig | None = None, *,
     writer, ``collect=True`` (the default then) assembles the host
     weight matrix.  ``scratch_dir`` hosts the global-mode ``Â`` scratch
     memmap (default: alongside the writer's staging dir, else a tempdir).
+
+    ``journal`` makes the fit resumable (``repro.resilience``): a
+    directory path (or an attached ``FitJournal`` whose signature matches
+    :func:`journal_signature`) where the X-stats pass and every completed
+    column block are committed as they finish.  A fit killed mid-stream
+    and re-run with the same journal replays the committed statistics —
+    never re-accumulating them — streams only the remaining blocks, and
+    produces λ and W **bit-identical** to an uninterrupted run.  On
+    success the journal directory is deleted.
 
     The whole fit runs under a ``fit.wholebrain`` root span (children:
     ``wholebrain.xstats``, ``wholebrain.block``, ``fit.eigh``,
@@ -195,7 +211,8 @@ def fit_wholebrain(store, cfg: EncoderConfig | None = None, *,
         return _fit_wholebrain(store, cfg, t_block=t_block,
                                lambda_mode=lambda_mode,
                                chunk_rows=chunk_rows, writer=writer,
-                               collect=collect, scratch_dir=scratch_dir)
+                               collect=collect, scratch_dir=scratch_dir,
+                               journal=journal)
 
 
 def _fit_wholebrain(store, cfg: EncoderConfig | None = None, *,
@@ -203,7 +220,8 @@ def _fit_wholebrain(store, cfg: EncoderConfig | None = None, *,
                     lambda_mode: str = "global",
                     chunk_rows: int | None = None,
                     writer=None, collect: bool | None = None,
-                    scratch_dir: str | None = None) -> WholebrainResult:
+                    scratch_dir: str | None = None,
+                    journal=None) -> WholebrainResult:
     cfg = cfg or EncoderConfig()
     if cfg.solver not in ("auto", "ridge"):
         raise ValueError(f"wholebrain fit supports only the ridge solver; "
@@ -235,42 +253,84 @@ def _fit_wholebrain(store, cfg: EncoderConfig | None = None, *,
            "compute_stall_s": 0.0}
     fixed0 = foldstats.chunk_update_compile_count()
     colblock0 = colblock_update_compile_count()
+    dtype_x = getattr(store, "dtype_x", np.dtype(np.float32))
 
-    # -- fused first pass: the X-only statistics (G/xsum/count, zero-width
-    # Y window — same compiled signature as a standalone X pass) ride the
-    # FIRST target block's stream, so they cost no row pass of their own.
-    # When the (n, p) feature rows fit the cache policy they are also
-    # captured chunk-by-chunk, and every later block re-streams only its
-    # own Y columns — row passes over X drop from 1 + ceil(t/t_block) to 1
-    # (cached) or ceil(t/t_block) (spilled to the prefetcher re-stream).
-    lo0, hi0 = bounds[0]
-    with obs.span("wholebrain.xstats", rows=n, fused_block=0) as xsp:
-        gacc = foldstats.FoldStatsAccumulator(n, k, chunk_rows=chunk_rows,
-                                              use_pallas=use_pallas)
-        bacc0 = ColumnBlockAccumulator(n, k, t_pad, chunk_rows=chunk_rows,
-                                       use_pallas=use_pallas)
-        dtype_x = getattr(store, "dtype_x", np.dtype(np.float32))
+    # -- progress journal (repro.resilience): attach / validate ---------------
+    jrn = None
+    if journal is not None:
+        from repro.resilience.journal import FitJournal, JournalError
+        signature = journal_signature(store, cfg, t_block=t_block,
+                                      lambda_mode=lambda_mode,
+                                      chunk_rows=chunk_rows)
+        if isinstance(journal, (str, os.PathLike)):
+            jrn = FitJournal.attach(os.fspath(journal), signature)
+        else:
+            jrn = journal
+            if getattr(jrn, "signature", None) != signature:
+                raise JournalError(
+                    f"attached journal signature {jrn.signature} does not "
+                    f"match this fit's {signature}")
+    done: set[int] = jrn.completed_blocks() if jrn is not None else set()
+    resumed = jrn is not None and jrn.has_xstats
+    # Highest block index that will actually STREAM this run — a rebuilt
+    # X cache only pays off if more streamed blocks follow.
+    last_streamed = max((i for i in range(len(bounds)) if i not in done),
+                       default=-1)
+
+    if not resumed:
+        # -- fused first pass: the X-only statistics (G/xsum/count,
+        # zero-width Y window — same compiled signature as a standalone X
+        # pass) ride the FIRST target block's stream, so they cost no row
+        # pass of their own.  When the (n, p) feature rows fit the cache
+        # policy they are also captured chunk-by-chunk, and every later
+        # block re-streams only its own Y columns — row passes over X drop
+        # from 1 + ceil(t/t_block) to 1 (cached) or ceil(t/t_block)
+        # (spilled to the prefetcher re-stream).
+        lo0, hi0 = bounds[0]
+        with obs.span("wholebrain.xstats", rows=n, fused_block=0) as xsp:
+            gacc = foldstats.FoldStatsAccumulator(n, k, chunk_rows=chunk_rows,
+                                                  use_pallas=use_pallas)
+            bacc0 = ColumnBlockAccumulator(n, k, t_pad, chunk_rows=chunk_rows,
+                                           use_pallas=use_pallas)
+            x_cache = None
+            if len(bounds) > 1 and _XChunkCache.fits(n, p, dtype_x.itemsize,
+                                                     cfg.device_memory_budget):
+                x_cache = _XChunkCache(n, p, dtype_x)
+            xsp.set(cached=x_cache is not None)
+            stream = store.iter_chunks(chunk_rows, col_range=(lo0, hi0),
+                                       prefetch=cfg.prefetch,
+                                       prefetch_depth=cfg.prefetch_depth)
+            try:
+                for Xc, Yc in stream:
+                    gacc.update(Xc, Yc[:, :0])
+                    bacc0.update(Xc, Yc)
+                    if x_cache is not None:
+                        x_cache.append(np.asarray(Xc))
+            finally:
+                if hasattr(stream, "close"):
+                    stream.close()
+            _stream_stats(agg, stream)
+            xsp.set(bytes_staged=agg["bytes_staged"])
+            gstats = gacc.finalize()
+            block0_stats = bacc0.finalize()
+        if jrn is not None:
+            jrn.put_xstats(np.asarray(gstats.G), np.asarray(gstats.xsum),
+                           np.asarray(gstats.count))
+    else:
+        # -- resume: REPLAY the journaled X statistics (never
+        # re-accumulate — the f32 arrays on disk are the exact bytes the
+        # killed fit produced, so the recomputed eighs, and everything
+        # downstream of them, match bitwise).  The X chunk cache died
+        # with the old process; the first streamed block rebuilds it.
+        with obs.span("wholebrain.xstats", rows=n, replayed=True):
+            G_j, xsum_j, count_j = jrn.load_xstats()
+            zero_y = jnp.zeros((k, 0), jnp.float32)
+            gstats = foldstats.FoldStats(
+                G=jnp.asarray(G_j), C=jnp.zeros((k, p, 0), jnp.float32),
+                xsum=jnp.asarray(xsum_j), ysum=zero_y, ysq=zero_y,
+                count=jnp.asarray(count_j))
+        block0_stats = None
         x_cache = None
-        if len(bounds) > 1 and _XChunkCache.fits(n, p, dtype_x.itemsize,
-                                                 cfg.device_memory_budget):
-            x_cache = _XChunkCache(n, p, dtype_x)
-        xsp.set(cached=x_cache is not None)
-        stream = store.iter_chunks(chunk_rows, col_range=(lo0, hi0),
-                                   prefetch=cfg.prefetch,
-                                   prefetch_depth=cfg.prefetch_depth)
-        try:
-            for Xc, Yc in stream:
-                gacc.update(Xc, Yc[:, :0])
-                bacc0.update(Xc, Yc)
-                if x_cache is not None:
-                    x_cache.append(np.asarray(Xc))
-        finally:
-            if hasattr(stream, "close"):
-                stream.close()
-        _stream_stats(agg, stream)
-        xsp.set(bytes_staged=agg["bytes_staged"])
-        gstats = gacc.finalize()
-        block0_stats = bacc0.finalize()
 
     # -- hoisted factorisations: k downdated eighs + the refit, once ---------
     # (the paper's Eq. 5 mutualisation extended across blocks: these depend
@@ -310,13 +370,35 @@ def _fit_wholebrain(store, cfg: EncoderConfig | None = None, *,
         # -- per-block pass: stream the block's columns, score every fold ----
         # (block 0 was accumulated in the fused first pass above; later
         # blocks read X from the chunk cache when it was captured, else
-        # re-stream the full rows through the prefetcher.)
+        # re-stream the full rows through the prefetcher.  Journaled
+        # blocks from a killed fit are REPLAYED — their committed scores/
+        # projections are re-applied in block order, bitwise.)
         restreamed_x = 0
+        blocks_replayed = 0
         for bi, (lo, hi) in enumerate(bounds):
+            if jrn is not None and bi in done:
+                with obs.span("wholebrain.block", block=bi, lo=lo, hi=hi,
+                              replayed=True):
+                    rec = jrn.load_block(bi)
+                    blocks_replayed += 1
+                    if lambda_mode == "global":
+                        # Same f64 addends in the same block order as the
+                        # killed fit — the running sum stays bitwise equal.
+                        score_sum += rec["scores"]
+                        scratch[:, lo:hi] = rec["ahat"]
+                    else:
+                        per_block_lams.append(rec["lam"])
+                        per_block_curves.append(rec["curve"])
+                        Wb = rec["W"]
+                        if collect:
+                            W_full[:, lo:hi] = Wb
+                        if writer is not None:
+                            writer.append(Wb)
+                continue
             with obs.span("wholebrain.block", block=bi, lo=lo, hi=hi) as bsp:
                 bytes0 = agg["bytes_staged"]
                 w = hi - lo
-                if bi == 0:
+                if bi == 0 and block0_stats is not None:
                     bstats = block0_stats
                 else:
                     bacc = ColumnBlockAccumulator(n, k, t_pad,
@@ -340,8 +422,32 @@ def _fit_wholebrain(store, cfg: EncoderConfig | None = None, *,
                         bstats = bacc.finalize()
                     else:
                         restreamed_x += 1
-                        bstats = _accumulate(bacc, store, chunk_rows, (lo, hi),
-                                             cfg, agg)
+                        # Re-streaming the full rows anyway — capture the
+                        # X chunks when more streamed blocks follow and
+                        # the cache policy admits them (the resume path's
+                        # cache rebuild; a no-op pre-crash, where a
+                        # fitting cache was captured in the fused pass).
+                        capture = None
+                        if bi < last_streamed and _XChunkCache.fits(
+                                n, p, dtype_x.itemsize,
+                                cfg.device_memory_budget):
+                            capture = _XChunkCache(n, p, dtype_x)
+                        stream = store.iter_chunks(
+                            chunk_rows, col_range=(lo, hi),
+                            prefetch=cfg.prefetch,
+                            prefetch_depth=cfg.prefetch_depth)
+                        try:
+                            for Xc, Yc in stream:
+                                bacc.update(Xc, Yc)
+                                if capture is not None:
+                                    capture.append(np.asarray(Xc))
+                        finally:
+                            if hasattr(stream, "close"):
+                                stream.close()
+                        _stream_stats(agg, stream)
+                        bstats = bacc.finalize()
+                        if capture is not None:
+                            x_cache = capture
                 _check_target_scale(bstats, n, lo, hi)
                 # Grafted onto the shared statistics this is a full FoldStats
                 # restricted (bitwise) to the block's columns.
@@ -349,6 +455,7 @@ def _fit_wholebrain(store, cfg: EncoderConfig | None = None, *,
                     G=gstats.G, C=bstats.C, xsum=gstats.xsum,
                     ysum=bstats.ysum, ysq=bstats.ysq, count=gstats.count)
                 fold_scores = []
+                contrib = np.zeros((k, r), np.float64)   # this block's Σ_cols
                 for f in range(k):
                     evals_f, Q_f = fold_eigs[f]
                     _, C_tr = full.train(f)
@@ -357,8 +464,9 @@ def _fit_wholebrain(store, cfg: EncoderConfig | None = None, *,
                     if lambda_mode == "global":
                         # Host f64 accumulation in global column order — the
                         # aggregate is independent of the blocking.
-                        score_sum[f] += np.asarray(
+                        contrib[f] = np.asarray(
                             s_rt[:, :w], np.float64).sum(axis=1)
+                        score_sum[f] += contrib[f]
                     else:
                         fold_scores.append(jnp.mean(s_rt[:, :w], axis=1))
                 C_total_b = full.C_total                      # (p, t_pad)
@@ -368,7 +476,10 @@ def _fit_wholebrain(store, cfg: EncoderConfig | None = None, *,
                     # HERE so λ selection costs no second pass over the rows.
                     Ahat = jnp.matmul(Q_R.T, C_total_b,
                                       preferred_element_type=jnp.float32)
-                    scratch[:, lo:hi] = np.asarray(Ahat)[:, :w]
+                    Ahat_w = np.asarray(Ahat)[:, :w]
+                    scratch[:, lo:hi] = Ahat_w
+                    if jrn is not None:
+                        jrn.put_block(bi, scores=contrib, ahat=Ahat_w)
                 else:
                     # ridge_cv_from_stats on the block-restricted statistics,
                     # with the factorisations hoisted: same ops, same bits.
@@ -383,6 +494,10 @@ def _fit_wholebrain(store, cfg: EncoderConfig | None = None, *,
                     per_block_lams.append(lam_b)
                     per_block_curves.append(np.asarray(cv_b, np.float64))
                     Wb = np.asarray(Wb)
+                    if jrn is not None:
+                        jrn.put_block(bi, lam=lam_b,
+                                      curve=np.asarray(cv_b, np.float64),
+                                      W=Wb)
                     if collect:
                         W_full[:, lo:hi] = Wb
                     if writer is not None:
@@ -442,13 +557,19 @@ def _fit_wholebrain(store, cfg: EncoderConfig | None = None, *,
         "colblock_compile_delta": (colblock_update_compile_count()
                                    - colblock0),
         "scratch_bytes": scratch_bytes if lambda_mode == "global" else 0,
-        # 1 fused first pass + any blocks that had to re-stream the
-        # feature shards because the X chunk cache was not captured.
-        "row_passes_x": 1 + restreamed_x,
+        # 1 fused first pass (absent on resume) + any blocks that had to
+        # re-stream the feature shards because the X chunk cache was not
+        # captured (or died with the killed fit).
+        "row_passes_x": (0 if resumed else 1) + restreamed_x,
         "row_passes_y": 1,
         "x_cache_bytes": 0 if x_cache is None else x_cache.nbytes,
         "use_pallas": use_pallas,
+        "resumed": resumed,
+        "blocks_replayed": blocks_replayed,
+        "blocks_streamed": len(bounds) - blocks_replayed,
     }
+    if jrn is not None:
+        jrn.finish()
     return WholebrainResult(
         best_lambda=best_lambda, cv_scores=np.asarray(curves, np.float64),
         lambdas=cfg.lambdas, lambda_mode=lambda_mode, t_block=t_block,
@@ -456,4 +577,4 @@ def _fit_wholebrain(store, cfg: EncoderConfig | None = None, *,
         weights=W_full, telemetry=telemetry)
 
 
-__all__ = ["WholebrainResult", "fit_wholebrain"]
+__all__ = ["WholebrainResult", "fit_wholebrain", "journal_signature"]

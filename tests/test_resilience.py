@@ -1,0 +1,655 @@
+"""Resilience tier: retry policy, fault injection, crash-resume, leases.
+
+Everything here is driven by the seeded deterministic harness in
+``repro.resilience.faultsim`` — no real sleeps, no wall-clock races:
+
+* ``FaultPolicy``/``retry_call`` — deterministic jittered backoff on a
+  virtual clock, typed transient/permanent classification, deadline and
+  attempt exhaustion re-raising the ORIGINAL exception.
+* ``FitJournal`` — crash-consistent ledger round-trip, signature pinning,
+  torn-payload reaping, and the headline contract: a fit interrupted
+  right after block N resumes from the journal and produces λ AND W
+  bit-identical to an uninterrupted run, replaying (never re-streaming)
+  the committed blocks.
+* Streaming tier under injected faults — transient chunk-read and
+  shard-mmap failures mid-fit change neither λ, W, nor the compile
+  count; the prefetcher's restarting reader keeps the stream
+  bit-identical, frees its buffers, and joins its thread on both
+  retry-success and give-up.
+* Fleet liveness — heartbeat-stamped leases on an injected clock,
+  ``expire_dead``/``holders(ttl_s=...)`` ignoring stale claims, the
+  bounded (typed ``FleetError``) lock acquire, and ``WorkerLost``
+  re-admission + ``replay`` drain.
+* ``reap_stale_staging`` — age-gated orphan sweep.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.data.store import RunStore
+from repro.encoding import EncoderConfig
+from repro.resilience import (
+    NO_RETRY, FaultPolicy, FitJournal, JournalError, TransientFault,
+    classify_default, reap_stale_staging, retry_call,
+)
+from repro.resilience.faultsim import (
+    FaultInjector, InjectedFault, InjectedPermanentFault, flaky_bundle,
+    truncate_file, wrap_store,
+)
+from repro.serving_encoders.fleet import (
+    FleetError, FleetFrontend, ResidencyMap, WorkerLost, replay,
+)
+from repro.serving_encoders.service import PredictRequest, ServiceError
+from repro.wholebrain import fit_wholebrain
+from repro.wholebrain.solver import journal_signature
+
+
+def _counters(prefix: str) -> float:
+    return sum(v for k, v in obs.snapshot()["counters"].items()
+               if k.startswith(prefix))
+
+
+def _make_store(make_run_store, seed=0, n=96, p=8, t=40, k=3):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, p)).astype(np.float32)
+    W = rng.normal(size=(p, t)).astype(np.float32) / np.sqrt(p)
+    Y = (X @ W + 0.05 * rng.normal(size=(n, t))).astype(np.float32)
+    return make_run_store(X, Y, n_folds=k)
+
+
+CFG = dict(n_folds=3, chunk_rows=32, use_pallas=False)
+
+
+# ---------------------------------------------------------------------------
+# FaultPolicy / retry_call
+# ---------------------------------------------------------------------------
+
+def test_delay_deterministic_and_bounded():
+    a = FaultPolicy(seed=7)
+    b = FaultPolicy(seed=7)
+    assert [a.delay_for("op", i) for i in range(1, 6)] \
+        == [b.delay_for("op", i) for i in range(1, 6)]
+    assert a.delay_for("op", 1) != FaultPolicy(seed=8).delay_for("op", 1)
+    assert a.delay_for("op", 1) != a.delay_for("other", 1)
+    for i in range(1, 12):
+        assert 0.0 <= a.delay_for("op", i) \
+            <= a.max_delay_s * (1 + a.jitter)
+
+
+def test_classify_default():
+    import errno
+    assert classify_default(TransientFault("x"))
+    assert classify_default(TimeoutError())
+    assert classify_default(OSError(errno.EIO, "io"))
+    assert classify_default(OSError(errno.EAGAIN, "again"))
+    assert not classify_default(OSError(errno.ENOENT, "gone"))
+    assert not classify_default(ValueError("nope"))
+    assert not classify_default(InjectedPermanentFault("planned"))
+    assert classify_default(InjectedFault("planned"))
+
+
+def test_retry_call_retries_then_succeeds():
+    policy = FaultPolicy(max_attempts=3, seed=3).with_virtual_time()
+    calls = []
+
+    def fn():
+        calls.append(1)
+        if len(calls) < 3:
+            raise TransientFault("flake")
+        return "ok"
+
+    r0, g0 = _counters("io_retries{op=t.fn"), _counters("io_giveups{op=t.fn")
+    assert retry_call(fn, policy, "t.fn") == "ok"
+    assert len(calls) == 3
+    assert _counters("io_retries{op=t.fn") - r0 == 2
+    assert _counters("io_giveups{op=t.fn") - g0 == 0
+    # Virtual time advanced by EXACTLY the two deterministic backoffs.
+    expect = policy.delay_for("t.fn", 1) + policy.delay_for("t.fn", 2)
+    assert policy.clock() == pytest.approx(expect)
+
+
+def test_retry_call_permanent_raises_first():
+    policy = FaultPolicy(max_attempts=5).with_virtual_time()
+    calls = []
+
+    def fn():
+        calls.append(1)
+        raise ValueError("permanent")
+
+    with pytest.raises(ValueError):
+        retry_call(fn, policy, "t.perm")
+    assert len(calls) == 1
+    assert policy.clock() == 0.0          # never slept
+
+
+def test_retry_call_give_up_reraises_original():
+    policy = FaultPolicy(max_attempts=2, seed=1).with_virtual_time()
+    boom = InjectedFault("always")
+    g0 = _counters("io_giveups{op=t.give")
+    with pytest.raises(InjectedFault) as err:
+        retry_call(lambda: (_ for _ in ()).throw(boom), policy, "t.give")
+    assert err.value is boom              # the ORIGINAL exception, untyped
+    assert _counters("io_giveups{op=t.give") - g0 == 1
+
+
+def test_retry_call_deadline_beats_attempts():
+    policy = FaultPolicy(max_attempts=100, base_delay_s=1.0, jitter=0.0,
+                         deadline_s=2.5).with_virtual_time()
+    calls = []
+
+    def fn():
+        calls.append(1)
+        raise TransientFault("slow storage")
+
+    with pytest.raises(TransientFault):
+        retry_call(fn, policy, "t.deadline")
+    # 1s + 2s(capped) backoffs put the clock past the 2.5s deadline on
+    # the third failure — far short of 100 attempts.
+    assert len(calls) == 3
+
+
+def test_no_retry_policy():
+    calls = []
+
+    def fn():
+        calls.append(1)
+        raise TransientFault("x")
+
+    with pytest.raises(TransientFault):
+        retry_call(fn, None, "t.noretry")      # None -> NO_RETRY
+    assert len(calls) == 1
+    assert NO_RETRY.max_attempts == 1
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector
+# ---------------------------------------------------------------------------
+
+def test_injector_plans_exact_invocations():
+    inj = FaultInjector(seed=5)
+    inj.plan("op", 2)
+    inj.plan("op", 4, times=2)
+    seen = []
+    for i in range(1, 7):
+        try:
+            inj.check("op")
+            seen.append(i)
+        except InjectedFault:
+            pass
+    assert seen == [1, 3, 6]
+    assert inj.count("op") == 6
+    assert inj.fired("op") == 3
+    with pytest.raises(ValueError):
+        inj.plan("op", 0)
+
+
+def test_injector_custom_exception():
+    inj = FaultInjector()
+    inj.plan("op", 1, exc=lambda: InjectedPermanentFault("dead disk"))
+    with pytest.raises(InjectedPermanentFault):
+        inj.check("op")
+
+
+# ---------------------------------------------------------------------------
+# FitJournal
+# ---------------------------------------------------------------------------
+
+def test_journal_round_trip(tmp_path):
+    sig = {"n": 8, "k": 3}
+    j = FitJournal.attach(str(tmp_path / "j"), sig)
+    assert not j.has_xstats and j.completed_blocks() == set()
+    G = np.arange(24, dtype=np.float32).reshape(3, 8)
+    j.put_xstats(G, G[:, 0], np.array([2.0, 3.0, 3.0], np.float32))
+    j.put_block(0, scores=np.ones((3, 4)), ahat=np.zeros((2, 5), np.float32))
+    j.put_block(2, lam=1.5, curve=np.ones(4), W=np.ones((2, 3)))
+
+    j2 = FitJournal.attach(str(tmp_path / "j"), sig)    # resume
+    assert j2.has_xstats
+    np.testing.assert_array_equal(j2.load_xstats()[0], G)
+    assert j2.completed_blocks() == {0, 2}
+    assert j2.has_block(0) and not j2.has_block(1)
+    rec = j2.load_block(2)
+    assert rec["lam"] == 1.5
+    np.testing.assert_array_equal(rec["W"], np.ones((2, 3)))
+    with pytest.raises(JournalError):
+        j2.load_block(1)
+    j2.finish()
+    assert not os.path.isdir(str(tmp_path / "j"))
+
+
+def test_journal_signature_mismatch(tmp_path):
+    FitJournal.attach(str(tmp_path / "j"), {"n": 8})
+    with pytest.raises(JournalError):
+        FitJournal.attach(str(tmp_path / "j"), {"n": 9})
+
+
+def test_journal_corrupt_ledger(tmp_path):
+    j = FitJournal.attach(str(tmp_path / "j"), {"n": 8})
+    path = os.path.join(j.root, "ledger.json")
+    truncate_file(path, os.path.getsize(path) // 2)
+    with pytest.raises(JournalError):
+        FitJournal.attach(str(tmp_path / "j"), {"n": 8})
+
+
+def test_journal_reaps_torn_payloads(tmp_path):
+    sig = {"n": 8}
+    j = FitJournal.attach(str(tmp_path / "j"), sig)
+    j.put_block(0, scores=np.ones(3))
+    # A crash between payload write and rename leaves a tmp orphan.
+    orphan = os.path.join(j.root, "block_00001.scores.npy.tmp-999")
+    with open(orphan, "wb") as f:
+        f.write(b"torn")
+    j2 = FitJournal.attach(str(tmp_path / "j"), sig)
+    assert not os.path.exists(orphan)
+    assert j2.completed_blocks() == {0}        # the committed block survives
+
+
+# ---------------------------------------------------------------------------
+# Crash-resume bit-identity
+# ---------------------------------------------------------------------------
+
+class _Interrupted(BaseException):
+    """In-process stand-in for the kill: raised right after block N's
+    ledger commit, so the journal state is exactly a crashed fit's."""
+
+
+class _InterruptAfterBlock:
+    def __init__(self, journal, after: int):
+        self._journal = journal
+        self._after = after
+
+    def put_block(self, bi: int, **kwargs) -> None:
+        self._journal.put_block(bi, **kwargs)
+        if bi == self._after:
+            raise _Interrupted()
+
+    def __getattr__(self, name):
+        return getattr(self._journal, name)
+
+
+@pytest.mark.parametrize("lambda_mode", ["global", "per_block"])
+def test_crash_resume_bit_identical(make_run_store, tmp_path, lambda_mode):
+    store = _make_store(make_run_store)
+    cfg = EncoderConfig(**CFG)
+    ref = fit_wholebrain(store, cfg, t_block=12, lambda_mode=lambda_mode)
+    assert ref.telemetry["n_blocks"] == 4
+
+    jdir = str(tmp_path / "journal")
+    sig = journal_signature(store, cfg, t_block=12, lambda_mode=lambda_mode)
+    wrapped = _InterruptAfterBlock(FitJournal.attach(jdir, sig), after=1)
+    with pytest.raises(_Interrupted):
+        fit_wholebrain(store, cfg, t_block=12, lambda_mode=lambda_mode,
+                       journal=wrapped)
+    ledger = json.load(open(os.path.join(jdir, "ledger.json")))
+    assert ledger["xstats"] and set(ledger["blocks"]) == {"0", "1"}
+
+    res = fit_wholebrain(store, cfg, t_block=12, lambda_mode=lambda_mode,
+                         journal=jdir)
+    tel = res.telemetry
+    assert tel["resumed"]
+    assert tel["blocks_replayed"] == 2 and tel["blocks_streamed"] == 2
+    # The journal replay does NOT re-run the X-stats pass, so the resumed
+    # fit reads X at most once (the surviving blocks' restream).
+    assert tel["row_passes_x"] <= ref.telemetry["row_passes_x"]
+    np.testing.assert_array_equal(res.best_lambda, ref.best_lambda)
+    np.testing.assert_array_equal(res.cv_scores, ref.cv_scores)
+    np.testing.assert_array_equal(res.weights, ref.weights)
+    np.testing.assert_array_equal(res.lambda_by_target,
+                                  ref.lambda_by_target)
+    assert not os.path.isdir(jdir)             # finished -> deleted
+
+
+def test_journal_rejects_other_fit_shape(make_run_store, tmp_path):
+    store = _make_store(make_run_store)
+    cfg = EncoderConfig(**CFG)
+    jdir = str(tmp_path / "journal")
+    sig = journal_signature(store, cfg, t_block=12)
+    wrapped = _InterruptAfterBlock(FitJournal.attach(jdir, sig), after=0)
+    with pytest.raises(_Interrupted):
+        fit_wholebrain(store, cfg, t_block=12, journal=wrapped)
+    with pytest.raises(JournalError):          # different blocking
+        fit_wholebrain(store, cfg, t_block=20, journal=jdir)
+
+
+# ---------------------------------------------------------------------------
+# Streamed fit under injected faults
+# ---------------------------------------------------------------------------
+
+def test_fit_unchanged_by_injected_transient_faults(make_run_store):
+    store = _make_store(make_run_store)
+    cfg = EncoderConfig(**CFG)
+    ref = fit_wholebrain(store, cfg, t_block=12)
+
+    store.fault_policy = FaultPolicy(max_attempts=3,
+                                     seed=13).with_virtual_time()
+    inj = FaultInjector(seed=13)
+    inj.plan("store.mmap", 1)
+    inj.plan("store.chunk", 2)
+    inj.plan("store.chunk", 7)
+    faulty_store = wrap_store(store, inj)
+    r0 = _counters("io_retries")
+    g0 = _counters("io_giveups")
+    res = fit_wholebrain(faulty_store, cfg, t_block=12)
+    assert inj.fired("store.chunk") == 2 and inj.fired("store.mmap") == 1
+    assert _counters("io_retries") - r0 >= 3
+    assert _counters("io_giveups") - g0 == 0
+    np.testing.assert_array_equal(res.best_lambda, ref.best_lambda)
+    np.testing.assert_array_equal(res.weights, ref.weights)
+    # The fixed-shape contract is untouched by the retries: the compiled
+    # updates were cached from the clean fit, so ZERO new traces.
+    assert res.telemetry["colblock_compile_delta"] == 0
+    assert res.telemetry["gram_compile_delta"] == 0
+
+
+# ---------------------------------------------------------------------------
+# ChunkPrefetcher retry paths
+# ---------------------------------------------------------------------------
+
+def _prefetcher(store, chunk_rows=32):
+    return store.iter_chunks(chunk_rows, prefetch=True)
+
+
+def test_prefetch_retry_success_bit_identical(make_run_store):
+    store = _make_store(make_run_store)
+    sync = [(x.copy(), y.copy()) for x, y in store.iter_chunks(32)]
+
+    store.fault_policy = FaultPolicy(max_attempts=3,
+                                     seed=2).with_virtual_time()
+    inj = FaultInjector(seed=2)
+    inj.plan("store.chunk", 2)
+    faulty = wrap_store(store, inj)
+    pf = _prefetcher(faulty)
+    got = [(x.copy(), y.copy()) for x, y in pf]
+    assert len(got) == len(sync)
+    for (gx, gy), (sx, sy) in zip(got, sync):
+        np.testing.assert_array_equal(gx, sx)
+        np.testing.assert_array_equal(gy, sy)
+    # Exhausted cleanly after the retry: buffers freed, thread joined.
+    assert pf._bufs is None and pf._thread is None
+
+
+def test_prefetch_give_up_frees_pool(make_run_store):
+    store = _make_store(make_run_store)
+    store.fault_policy = FaultPolicy(max_attempts=3,
+                                     seed=2).with_virtual_time()
+    inj = FaultInjector(seed=2)
+    inj.plan("store.chunk", 2, times=5)        # > max_attempts: give up
+    faulty = wrap_store(store, inj)
+    pf = _prefetcher(faulty)
+    g0 = _counters("io_giveups{op=prefetch.read")
+    with pytest.raises(InjectedFault):
+        list(pf)
+    assert _counters("io_giveups{op=prefetch.read") - g0 == 1
+    assert pf._bufs is None and pf._thread is None
+    # The pool is NOT poisoned: a fresh stream over the same (now
+    # exhausted-injector) store is complete and clean.
+    again = [(x.copy(), y.copy()) for x, y in _prefetcher(faulty)]
+    assert len(again) == len(list(store.iter_chunks(32)))
+
+
+def test_prefetch_permanent_after_successful_retry(make_run_store):
+    """A reader exception AFTER a successful retry must still surface to
+    the consumer and release the buffer pool."""
+    store = _make_store(make_run_store)
+    store.fault_policy = FaultPolicy(max_attempts=3,
+                                     seed=4).with_virtual_time()
+    inj = FaultInjector(seed=4)
+    inj.plan("store.chunk", 1)                 # transient -> retried OK
+    inj.plan("store.chunk", 3,                 # then the disk truly dies
+             exc=lambda: InjectedPermanentFault("dead"))
+    faulty = wrap_store(store, inj)
+    pf = _prefetcher(faulty)
+    got = []
+    with pytest.raises(InjectedPermanentFault):
+        for chunk in pf:
+            got.append(chunk)
+    assert len(got) >= 1                       # the retried chunk arrived
+    assert pf._bufs is None and pf._thread is None
+
+
+# ---------------------------------------------------------------------------
+# Store-level mmap retry
+# ---------------------------------------------------------------------------
+
+def test_store_mmap_retry(make_run_store):
+    store = _make_store(make_run_store)
+    store.fault_policy = FaultPolicy(max_attempts=3,
+                                     seed=6).with_virtual_time()
+    inj = FaultInjector(seed=6)
+    inj.plan("store.mmap", 1)
+    faulty = wrap_store(store, inj)
+    r0 = _counters("io_retries{op=store.mmap")
+    chunks = list(faulty.iter_chunks(32))
+    assert sum(x.shape[0] for x, _ in chunks) == store.shape[0]
+    assert _counters("io_retries{op=store.mmap") - r0 == 1
+
+
+def test_store_mmap_no_policy_raises(make_run_store):
+    store = _make_store(make_run_store)
+    assert store.fault_policy is None
+    inj = FaultInjector()
+    inj.plan("store.mmap", 1)
+    with pytest.raises(InjectedFault):
+        list(wrap_store(store, inj).iter_chunks(32))
+
+
+# ---------------------------------------------------------------------------
+# Registry retry + typed give-up
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_fleet(tmp_path_factory):
+    from repro.serving_encoders.traffic import build_synthetic_fleet
+    root = tmp_path_factory.mktemp("fleet")
+    return build_synthetic_fleet(str(root), 1, n=64, p=16, t=24)
+
+
+def test_registry_load_retries(tiny_fleet):
+    from repro.serving_encoders.registry import EncoderRegistry
+    inj = FaultInjector(seed=8)
+    inj.plan("bundle.load_encoder", 1)
+    reg = EncoderRegistry(
+        wave_rows=8,
+        fault_policy=FaultPolicy(max_attempts=3, seed=8).with_virtual_time())
+    name, path = tiny_fleet[0]
+    reg.add(name, path)
+    reg._bundles[name] = flaky_bundle(reg._bundles[name], inj)
+    r0 = _counters("io_retries{op=registry.load_encoder")
+    entry = reg.get(name)
+    assert entry.encoder is not None
+    assert _counters("io_retries{op=registry.load_encoder") - r0 == 1
+
+
+def test_registry_give_up_is_typed(tiny_fleet):
+    from repro.serving_encoders.bundle import BundleError
+    from repro.serving_encoders.registry import EncoderRegistry
+    inj = FaultInjector(seed=9)
+    inj.plan("bundle.load_encoder", 1, times=10)
+    reg = EncoderRegistry(
+        wave_rows=8,
+        fault_policy=FaultPolicy(max_attempts=3, seed=9).with_virtual_time())
+    name, path = tiny_fleet[0]
+    reg.add(name, path)
+    reg._bundles[name] = flaky_bundle(reg._bundles[name], inj)
+    g0 = _counters("io_giveups{op=registry.load_encoder")
+    with pytest.raises(BundleError):           # OSError translated, typed
+        reg.get(name)
+    assert _counters("io_giveups{op=registry.load_encoder") - g0 == 1
+    assert reg.stats()["loaded"] == 0          # no partial entry inserted
+
+
+# ---------------------------------------------------------------------------
+# Orphan-staging reaper
+# ---------------------------------------------------------------------------
+
+def test_reap_is_age_gated(tmp_path):
+    root = str(tmp_path)
+    old = tmp_path / ".tmpbundle_dead"
+    old.mkdir()
+    (old / "leaf.npy").write_bytes(b"x")
+    fresh = tmp_path / ".tmpbundle_live"
+    fresh.mkdir()
+    torn = tmp_path / "shard.npy.tmp-123"
+    torn.write_bytes(b"y")
+    keeper = tmp_path / "manifest.json"
+    keeper.write_text("{}")
+    past = os.stat(root).st_mtime - 7200
+    os.utime(old, (past, past))
+    os.utime(torn, (past, past))
+
+    c0 = _counters("staging_reaped")
+    reaped = reap_stale_staging(root, max_age_s=3600.0)
+    assert reaped == [".tmpbundle_dead", "shard.npy.tmp-123"]
+    assert not old.exists() and not torn.exists()
+    assert fresh.exists() and keeper.exists()  # young + non-staging survive
+    assert _counters("staging_reaped") - c0 == 2
+    assert reap_stale_staging(str(tmp_path / "missing")) == []
+
+
+def test_bundle_writer_reaps_stale_staging(tmp_path):
+    from repro.wholebrain.artifact import BundleWriter
+    stale = tmp_path / ".tmpbundle_crashed"
+    stale.mkdir()
+    past = os.stat(str(tmp_path)).st_mtime - 7200
+    os.utime(stale, (past, past))
+    w = BundleWriter(str(tmp_path / "bundle"), p=4, t=8)
+    try:
+        assert not stale.exists()
+    finally:
+        w.abort()
+
+
+# ---------------------------------------------------------------------------
+# Fleet liveness: leases, lock timeout, WorkerLost
+# ---------------------------------------------------------------------------
+
+def _clocked_map(path, t0=1000.0, **kw):
+    clk = [t0]
+    rmap = ResidencyMap(path, clock=lambda: clk[0],
+                        sleep=lambda s: clk.__setitem__(0, clk[0] + s),
+                        **kw)
+    return rmap, clk
+
+
+def test_lease_heartbeat_and_expiry(tmp_path):
+    rmap, clk = _clocked_map(str(tmp_path / "residency.json"))
+    rmap.publish("w0", {"m": 100})
+    clk[0] += 10
+    rmap.publish("w1", {"m": 50})
+    assert rmap.holders("m") == ["w0", "w1"]
+    assert rmap.holders("m", ttl_s=5.0) == ["w1"]    # w0's stamp is stale
+
+    clk[0] += 10                      # w0 is now 20s stale, w1 10s
+    rmap.heartbeat("w1")              # refresh without touching models
+    c0 = _counters("lease_expirations")
+    assert rmap.expire_dead(15.0) == ["w0"]
+    assert _counters("lease_expirations") - c0 == 1
+    snap = rmap.snapshot()["workers"]
+    assert set(snap) == {"w1"}
+    assert snap["w1"]["models"] == {"m": 50}         # claims survive
+    assert rmap.expire_dead(15.0) == []              # idempotent
+
+
+def test_unstamped_row_counts_as_dead(tmp_path):
+    rmap, clk = _clocked_map(str(tmp_path / "residency.json"))
+    rmap.publish("w0", {"m": 1})
+    # A row written by pre-lease code has no heartbeat field.
+    data = rmap.snapshot()
+    del data["workers"]["w0"]["heartbeat"]
+    rmap._write(data)
+    assert rmap.expire_dead(1e9) == ["w0"]
+
+
+def test_heartbeat_claims_lease_before_first_load(tmp_path):
+    rmap, clk = _clocked_map(str(tmp_path / "residency.json"))
+    rmap.heartbeat("w0")
+    row = rmap.snapshot()["workers"]["w0"]
+    assert row["models"] == {} and row["heartbeat"] == clk[0]
+
+
+def test_lock_timeout_is_typed(tmp_path):
+    import fcntl
+    path = str(tmp_path / "residency.json")
+    rmap, clk = _clocked_map(path, lock_timeout_s=0.5)
+    fd = os.open(path + ".lock", os.O_CREAT | os.O_RDWR, 0o644)
+    fcntl.flock(fd, fcntl.LOCK_EX)             # a wedged peer holds it
+    try:
+        t0 = clk[0]
+        with pytest.raises(FleetError):
+            rmap.publish("w0", {})
+        assert clk[0] - t0 >= 0.5              # bounded, virtual-time wait
+    finally:
+        fcntl.flock(fd, fcntl.LOCK_UN)
+        os.close(fd)
+    rmap.publish("w0", {})                     # released -> works again
+
+
+class _FakeStats:
+    def __init__(self):
+        self.rejected = []
+
+    def record_rejected(self, tenant):
+        self.rejected.append(tenant)
+
+
+class _FlakyService:
+    """Raises ``WorkerLost`` on the first ``fail_times`` serve calls."""
+
+    def __init__(self, fail_times=1):
+        self.stats = _FakeStats()
+        self.fail_times = fail_times
+        self.calls = 0
+
+    def serve(self, batch, wave_rows=None):
+        self.calls += 1
+        if self.calls <= self.fail_times:
+            raise WorkerLost("worker died mid-batch")
+        return [f"r{p.model}:{i}" for i, p in enumerate(batch)]
+
+
+def _req(model="m", rows=4):
+    return PredictRequest(model, np.zeros((rows, 3), np.float32))
+
+
+def test_worker_lost_readmits_batch():
+    svc = _FlakyService(fail_times=1)
+    fe = FleetFrontend(svc, max_pending_rows=64)
+    fe.submit(_req(rows=4))
+    fe.submit(_req(rows=6))
+    c0 = _counters("requests_replayed")
+    with pytest.raises(WorkerLost):
+        fe.flush()
+    # The batch is back in admission order — nothing dropped.
+    assert fe.pending_rows == 10 and fe.replayed == 2
+    assert _counters("requests_replayed") - c0 == 2
+    out = fe.flush()                           # worker back: drains clean
+    assert len(out) == 2 and fe.pending_rows == 0
+
+
+def test_replay_survives_lost_worker():
+    svc = _FlakyService(fail_times=1)
+    fe = FleetFrontend(svc, max_pending_rows=64)
+    reqs = [_req(rows=4) for _ in range(5)]
+    results, rejections = replay(fe, reqs)
+    assert all(r is not None for r in results)
+    assert rejections == [] and fe.replayed == 5
+
+
+def test_replay_gives_up_after_max_attempts():
+    svc = _FlakyService(fail_times=99)
+    fe = FleetFrontend(svc, max_pending_rows=64)
+    with pytest.raises(WorkerLost):
+        replay(fe, [_req()], max_flush_attempts=3)
+    assert svc.calls == 3
+
+
+def test_backpressure_still_typed_alongside_replay():
+    svc = _FlakyService(fail_times=0)
+    fe = FleetFrontend(svc, max_pending_rows=8)
+    fe.submit(_req(rows=8))
+    with pytest.raises(ServiceError):
+        fe.submit(_req(rows=1))
+    assert svc.stats.rejected == ["m"]
